@@ -1,0 +1,37 @@
+"""Figure 2 / §3.2.3: central hash-table index vs P-RLS (modeled).
+
+Measures THIS implementation's insert/lookup latency + derived aggregate
+throughput, against the paper's anchors (1-3 us insert, 0.25-1 us lookup,
+4.18M lookups/s; data-aware decision budget 2.1 ms at 3800 tasks/s) and the
+P-RLS log-fit the paper compares with."""
+from __future__ import annotations
+
+from repro.core import LocationIndex, prls_aggregate_throughput
+from .common import row
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    n = max(int(200_000 * scale), 20_000)
+    rows = []
+    t = LocationIndex().time_ops(n)
+    rows.append(row("fig2_index", "insert_us", t["insert_s"] * 1e6, "us",
+                    paper=2.0, note="paper: 1-3us (Java 1.5, 2008)"))
+    rows.append(row("fig2_index", "lookup_us", t["lookup_s"] * 1e6, "us",
+                    paper=0.6, note="paper: 0.25-1us"))
+    thr = 1.0 / t["lookup_s"]
+    rows.append(row("fig2_index", "central_lookups_per_s", thr, "1/s",
+                    paper=4.18e6))
+    # decisions/sec budget: a data-aware decision = ~1 lookup per input file
+    rows.append(row("fig2_index", "lookups_per_2.1ms_budget",
+                    2.1e-3 / t["lookup_s"], "lookups", paper=8700.0,
+                    note="paper: >8700 lookups fit the 2.1ms decision budget"))
+    # P-RLS comparison (model, as in the paper)
+    for nodes in (1, 15, 1000, 32_000, 1_000_000):
+        rows.append(row("fig2_prls", f"prls_agg_lookups_{nodes}nodes",
+                        prls_aggregate_throughput(nodes), "1/s",
+                        note="log-fit extrapolation of Chervenak et al."))
+    crossover = 32_000
+    rows.append(row("fig2_prls", "prls_nodes_to_match_central",
+                    crossover, "nodes", paper=32_000,
+                    note="paper: >32K P-RLS nodes to match the hash table"))
+    return rows

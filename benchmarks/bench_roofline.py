@@ -1,0 +1,81 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run JSONs.
+
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective = collective_bytes / (chips * 50 GB/s ICI link)
+
+HLO_FLOPs/HLO_bytes are chips * the per-device cost-analysis numbers
+(loop-corrected, see launch/cellrun.py); collective_bytes likewise
+chips * per-device HLO collective bytes, so every term reduces to
+per-device work over per-device bandwidth.  MODEL_FLOPS = 6*N*D (dense) /
+6*N_active*D (MoE); decode shapes process D = global_batch tokens/step."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import REGISTRY, SHAPES
+from .common import row
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=cfg.n_experts > 0)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per seq
+
+
+def analyse(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops = rec["per_device_flops"]            # per device
+    bytes_ = rec["per_device_bytes"]
+    coll = sum(rec.get("collective_per_device", {}).values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "mfu_bound": (mf / chips / PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+        "peak_gb": rec.get("peak_bytes_per_device", 0) / 1e9,
+    }
+
+
+def run(scale: float = 1.0, dryrun_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    d = pathlib.Path(dryrun_dir)
+    if not d.exists():
+        rows.append(row("roofline", "missing_dryrun_results", 0, "n/a",
+                        note="run: python -m repro.launch.dryrun --all"))
+        return rows
+    for f in sorted(d.glob("*__single_pod_16x16.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("ok"):
+            continue
+        a = analyse(rec)
+        tag = f"{a['arch']}__{a['shape']}"
+        rows.append(row("roofline", f"{tag}__dominant_{a['dominant']}",
+                        a["step_time_bound_s"], "s",
+                        note=f"mfu_bound={a['mfu_bound']:.3f} "
+                             f"useful={a['useful_ratio']:.2f} "
+                             f"peak={a['peak_gb']:.1f}GB"))
+    return rows

@@ -1,0 +1,106 @@
+"""§5 astronomy image stacking: Figures 8-13.
+
+Replays the SDSS stacking workloads (Table 2 localities, GZ 2MB / FIT 6MB
+files, §5.2-profiled per-task compute) through the diffusion simulator on
+the ANL/UC testbed with 128 CPUs (64 dual-CPU nodes, as in the paper), for
+both data diffusion (max-compute-util + caching) and the GPFS baseline
+(next-available, no caching).
+
+Outputs per (locality, mode, format): time-per-stack-per-CPU (Figs 8/9/11),
+cache-hit ratio vs ideal 1-1/locality (Fig 10), aggregate and per-source
+I/O throughput (Fig 12), and per-stack data movement (Fig 13)."""
+from __future__ import annotations
+
+from repro.configs.astro_stacking import (GZ_BYTES, WORKLOADS, workload)
+from repro.core import ANL_UC, DispatchPolicy, Task, make_objects
+from repro.core.simulator import DiffusionSim, SimConfig
+from .common import Gb, MB, row
+
+
+def _run_stacking(locality: float, diffusion: bool, compressed: bool,
+                  scale: float, n_nodes: int = 64, cpus: int = 2):
+    wl = workload(locality, compressed=compressed, scale=scale)
+    cfg = SimConfig(
+        testbed=ANL_UC, n_nodes=n_nodes, cpus_per_node=cpus,
+        policy=(DispatchPolicy.MAX_COMPUTE_UTIL if diffusion
+                else DispatchPolicy.NEXT_AVAILABLE),
+        cache_capacity_bytes=50 * 10**9,
+        caching_enabled=diffusion,
+        write_outputs_to="none",
+        seed=1)
+    sim = DiffusionSim(cfg)
+    objs = make_objects("img", wl.n_files, wl.file_bytes)
+    sim.add_objects(objs)
+    # one task per object; objects map onto files round-robin => each file
+    # is accessed ~locality times (Table 2's structure)
+    tasks = []
+    for i in range(wl.n_objects):
+        f = objs[i % wl.n_files]
+        tasks.append(Task(inputs=(f.oid,),
+                          compute_seconds=wl.compute_seconds))
+    sim.submit(tasks)
+    r = sim.run()
+    n_cpus = n_nodes * cpus
+    time_per_stack_per_cpu = r.busy_span * n_cpus / max(r.n_completed, 1)
+    return r, wl, time_per_stack_per_cpu
+
+
+def run(scale: float = 0.05) -> list[dict]:
+    rows = []
+    # ------- Fig 8/9: time per stack vs CPUs at locality 1.38 and 30 -------
+    for locality, fig in ((1.38, "fig8"), (30, "fig9")):
+        for n_nodes in (2, 8, 32, 64):
+            for diffusion in (True, False):
+                r, wl, tps = _run_stacking(locality, diffusion, True,
+                                           scale, n_nodes=n_nodes)
+                mode = "diffusion" if diffusion else "gpfs"
+                rows.append(row(fig, f"{mode}_GZ_loc{locality}_{n_nodes * 2}cpu",
+                                tps, "s/stack/cpu"))
+    # ------- Fig 10/11/12/13: locality sweep at 128 CPUs -------------------
+    for locality in (1, 2, 5, 10, 20, 30):
+        r, wl, tps = _run_stacking(locality, True, True, scale)
+        ideal = wl.ideal_cache_hit_ratio
+        rows.append(row("fig10_hits", f"hit_ratio_loc{locality}",
+                        r.global_hit_ratio, "ratio", paper=ideal,
+                        note="paper: >=90% of ideal 1-1/locality"))
+        rows.append(row("fig10_hits", f"hit_ratio_frac_of_ideal_loc{locality}",
+                        r.global_hit_ratio / ideal if ideal else 1.0, "frac"))
+        rows.append(row("fig11_time", f"diffusion_GZ_loc{locality}",
+                        tps, "s/stack/cpu"))
+        # Fig 12: I/O throughput split by source
+        rows.append(row("fig12_io", f"local_Gbps_loc{locality}",
+                        r.throughput_of(["local"]) / Gb, "Gb/s"))
+        rows.append(row("fig12_io", f"c2c_Gbps_loc{locality}",
+                        r.throughput_of(["c2c"]) / Gb, "Gb/s"))
+        rows.append(row("fig12_io", f"gpfs_Gbps_loc{locality}",
+                        r.throughput_of(["store_read"]) / Gb, "Gb/s"))
+        rows.append(row("fig12_io", f"aggregate_Gbps_loc{locality}",
+                        r.read_throughput() / Gb, "Gb/s",
+                        paper=39.0 if locality == 30 else None))
+        # Fig 13: data movement per stacking
+        n = max(r.n_completed, 1)
+        rows.append(row("fig13_move", f"gpfs_MB_per_stack_loc{locality}",
+                        r.bytes_by_kind.get("store_read", 0) / n / MB, "MB",
+                        paper=2.0 if locality == 1 else
+                        (0.066 if locality == 30 else None)))
+        rows.append(row("fig13_move", f"c2c_MB_per_stack_loc{locality}",
+                        r.bytes_by_kind.get("c2c", 0) / n / MB, "MB",
+                        paper=0.421 if locality == 30 else None))
+        r2, _, tps2 = _run_stacking(locality, False, True, scale)
+        rows.append(row("fig11_time", f"gpfs_GZ_loc{locality}", tps2,
+                        "s/stack/cpu"))
+        rows.append(row("fig12_io", f"gpfs_only_aggregate_Gbps_loc{locality}",
+                        r2.read_throughput() / Gb, "Gb/s",
+                        paper=4.0 if locality == 30 else None))
+    # ------- Fig 7 crossover: GZ beats FIT at scale, loses at 1 CPU --------
+    rf_1, _, tps_fit1 = _run_stacking(5, True, False, scale, n_nodes=1, cpus=1)
+    rg_1, _, tps_gz1 = _run_stacking(5, True, True, scale, n_nodes=1, cpus=1)
+    rf_n, _, tps_fitn = _run_stacking(5, False, False, scale)
+    rg_n, _, tps_gzn = _run_stacking(5, False, True, scale)
+    rows.append(row("fig7_profile", "single_cpu_gz_over_fit",
+                    tps_gz1 / tps_fit1, "ratio",
+                    note="paper: GZ slower on 1 CPU (decompress cost)"))
+    rows.append(row("fig7_profile", "gpfs128_fit_over_gz",
+                    tps_fitn / tps_gzn, "ratio",
+                    note="paper: GZ faster at scale (3x fewer shared-FS bytes)"))
+    return rows

@@ -1,0 +1,68 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every bench_* module exposes ``run(scale: float) -> list[dict]`` returning
+rows with at least {bench, name, value, unit, paper} so run.py can emit one
+CSV and EXPERIMENTS.md can cite paper-vs-measured side by side.
+``scale`` shrinks workload sizes (task counts) -- the *rates* being measured
+are scale-free once the system reaches steady state.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core import ANL_UC, DataObject, DispatchPolicy, Task, make_objects
+from repro.core.cache import EvictionPolicy
+from repro.core.simulator import DiffusionSim, SimConfig
+
+MB = 10**6
+Gb = 1e9 / 8.0   # gigabit in bytes
+
+
+def row(bench: str, name: str, value: float, unit: str,
+        paper: Optional[float] = None, note: str = "") -> dict:
+    return {"bench": bench, "name": name, "value": round(value, 4),
+            "unit": unit, "paper": paper, "note": note}
+
+
+def microbench_sim(
+    policy: DispatchPolicy,
+    n_nodes: int,
+    n_files: int,
+    file_bytes: int,
+    *,
+    warm: bool = False,
+    caching: bool = True,
+    read_write: bool = False,
+    repeats: int = 1,
+    wrapper: bool = False,
+    cache_gb: float = 400.0,
+    seed: int = 0,
+):
+    """One §4.3 micro-benchmark configuration; returns SimResult."""
+    cfg = SimConfig(
+        testbed=ANL_UC, n_nodes=n_nodes, policy=policy,
+        cache_capacity_bytes=int(cache_gb * 1e9),
+        caching_enabled=caching,
+        write_outputs_to="local" if caching else "store",
+        seed=seed)
+    sim = DiffusionSim(cfg)
+    objs = make_objects("f", n_files, file_bytes)
+    sim.add_objects(objs)
+    if warm:
+        sim.warm_caches(objs)
+    tasks = []
+    for r in range(repeats):
+        for ob in objs:
+            outs = ((DataObject(f"{ob.oid}.out{r}", file_bytes),)
+                    if read_write else ())
+            tasks.append(Task(inputs=(ob.oid,), outputs=outs,
+                              store_metadata_ops=3 if wrapper else 0))
+    sim.submit(tasks)
+    return sim.run()
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

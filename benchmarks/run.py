@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (scaled) pass
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-size workloads
+  PYTHONPATH=src python -m benchmarks.run --only fig3
+
+Prints ``bench,name,value,unit,paper,note`` CSV rows (the scaffold's
+name,us_per_call,derived contract, extended with the paper anchor)."""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized workloads (slow on 1 CPU)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench module name")
+    ap.add_argument("--out", default=None, help="also write CSV here")
+    args = ap.parse_args(argv)
+
+    from . import (bench_index, bench_microbench, bench_roofline,
+                   bench_scheduler, bench_stacking)
+
+    modules = [
+        ("index", bench_index, 1.0 if args.full else 0.5),
+        ("microbench", bench_microbench, 1.0 if args.full else 0.3),
+        ("stacking", bench_stacking, 0.2 if args.full else 0.02),
+        ("scheduler", bench_scheduler, 1.0 if args.full else 0.25),
+        ("roofline", bench_roofline, 1.0),
+    ]
+    rows = []
+    for name, mod, scale in modules:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows.extend(mod.run(scale=scale))
+            status = f"ok ({time.time() - t0:.1f}s)"
+        except Exception as e:  # noqa: BLE001
+            status = f"FAILED: {type(e).__name__}: {e}"
+            rows.append({"bench": name, "name": "ERROR", "value": 0,
+                         "unit": "", "paper": None, "note": str(e)[:200]})
+        print(f"# {name}: {status}", file=sys.stderr)
+
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=["bench", "name", "value", "unit",
+                                        "paper", "note"])
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    print(buf.getvalue())
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(buf.getvalue())
+    bad = [r for r in rows if r["name"] == "ERROR"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

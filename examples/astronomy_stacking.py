@@ -1,0 +1,81 @@
+"""End-to-end reproduction of the paper's application (§5): SDSS image
+stacking over data diffusion, with the REAL compute executed by the Pallas
+stacking kernel (repro/kernels/stacking, interpret mode on CPU).
+
+Two layers run together here:
+  * scheduling plane: the threaded DiffusionRuntime moves (synthetic) image
+    files through executor caches under max-compute-util, exactly as §5.3;
+  * compute plane: each task extracts its object's ROI and the coadd runs
+    through stack_rois (calibrate -> sub-pixel shift -> accumulate).
+
+  PYTHONPATH=src python examples/astronomy_stacking.py --locality 10
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.astro_stacking import ROI_SHAPE, workload
+from repro.core import DataObject, DispatchPolicy, Task
+from repro.core.runtime import DiffusionRuntime
+from repro.kernels.stacking import ops as st_ops
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--locality", type=float, default=10, choices=[1, 2, 3, 4, 5, 10, 20, 30])
+    ap.add_argument("--objects", type=int, default=96,
+                    help="number of stacking objects (scaled workload)")
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--policy", default="max-compute-util")
+    args = ap.parse_args(argv)
+
+    wl = workload(args.locality)
+    n_files = max(int(args.objects / args.locality), 1)
+    rng = np.random.default_rng(0)
+    h, w = ROI_SHAPE
+
+    rt = DiffusionRuntime(n_executors=args.hosts,
+                          policy=DispatchPolicy(args.policy),
+                          cache_capacity_bytes=1 << 30)
+    # synthetic "FITS" files: a stack of image tiles per file
+    for i in range(n_files):
+        tiles = rng.normal(500, 100, size=(8, h, w)).astype(np.float32)
+        rt.put_object(DataObject(f"img{i}", tiles.nbytes), tiles)
+
+    def stack_object(inputs):
+        (tiles,) = inputs.values()
+        n = tiles.shape[0]
+        sky = tiles.mean(axis=(1, 2)) * 0.1
+        cal = np.ones(n, np.float32)
+        dy = rng.random(n).astype(np.float32)
+        dx = rng.random(n).astype(np.float32)
+        return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
+
+    tasks = [Task(inputs=(f"img{i % n_files}",), fn=stack_object)
+             for i in range(args.objects)]
+    t0 = time.time()
+    rt.submit(tasks)
+    ok = rt.wait(300)
+    dt = time.time() - t0
+    assert ok, "stacking timed out"
+    results = [t.result for t in tasks]
+    assert all(r.shape == ROI_SHAPE for r in results)
+    lg = rt.ledger
+    ideal = wl.ideal_cache_hit_ratio
+    print(f"stacked {len(results)} objects over {n_files} files "
+          f"(locality {args.locality}) on {args.hosts} hosts in {dt:.2f}s")
+    print(f"  cache hit ratio: {lg.global_hit_ratio:.2%} "
+          f"(paper ideal 1-1/L = {ideal:.0%}; paper achieves >=90% of it)")
+    print(f"  bytes: store={lg.bytes_store / 1e6:.1f}MB "
+          f"c2c={lg.bytes_c2c / 1e6:.1f}MB local={lg.bytes_local / 1e6:.1f}MB")
+    print(f"  sample stacked-pixel mean: {float(results[0].mean()):.2f}")
+    rt.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""Quickstart: data diffusion in 60 seconds.
+
+Runs the paper's core experiment in miniature, twice -- once data-UNAWARE
+(first-available: every byte comes from persistent storage) and once
+data-AWARE (max-compute-util: bytes diffuse into executor caches and tasks
+follow them) -- and prints the byte ledgers side by side.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (ANL_UC, DispatchPolicy, make_objects, uniform_tasks)
+from repro.core.simulator import DiffusionSim, SimConfig
+
+MB = 10**6
+N_NODES = 16
+LOCALITY = 10          # each file accessed 10x (Table 2's knob)
+
+
+def run(policy: DispatchPolicy, caching: bool):
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=N_NODES, policy=policy,
+                    cache_capacity_bytes=50 * 10**9, caching_enabled=caching)
+    sim = DiffusionSim(cfg)
+    objs = make_objects("f", 80, 20 * MB)
+    sim.add_objects(objs)
+    sim.submit(uniform_tasks(objs, accesses_per_object=LOCALITY,
+                             compute_seconds=0.05))
+    return sim.run()
+
+
+def main():
+    print(f"workload: 80 x 20MB files, locality {LOCALITY}, "
+          f"{N_NODES} nodes (ANL/UC testbed model)\n")
+    for name, policy, caching in (
+            ("first-available (data-unaware, no caches)",
+             DispatchPolicy.FIRST_AVAILABLE, False),
+            ("max-compute-util (data diffusion)",
+             DispatchPolicy.MAX_COMPUTE_UTIL, True)):
+        r = run(policy, caching)
+        gb = {k: v / 1e9 for k, v in r.bytes_by_kind.items()}
+        print(f"== {name}")
+        print(f"   makespan            {r.t_last_complete:9.1f} s")
+        print(f"   read throughput     {r.read_throughput() * 8 / 1e9:9.2f} Gb/s")
+        print(f"   cache hit ratio     {r.global_hit_ratio:9.2%}"
+              f"   (ideal {1 - 1 / LOCALITY:.0%})")
+        print(f"   bytes from store    {gb.get('store_read', 0):9.2f} GB")
+        print(f"   bytes cache-to-cache{gb.get('c2c', 0):9.2f} GB")
+        print(f"   bytes local         {gb.get('local', 0):9.2f} GB\n")
+    print("the diffusion run reads the store once per file and serves the "
+          "other 9 accesses from executor caches -- the paper's Figure 11/13 "
+          "economics in miniature.")
+
+
+if __name__ == "__main__":
+    main()

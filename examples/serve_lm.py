@@ -1,0 +1,61 @@
+"""End-to-end serving driver: batched requests, prefix-cache-aware routing.
+
+Serves a small LM across logical replicas; requests share prompt prefixes
+(the serving analogue of Table 2's locality), so the data-aware router
+reuses prefix KV exactly like the paper's scheduler reuses cached files.
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 24 --policy max-compute-util
+  PYTHONPATH=src python examples/serve_lm.py --policy first-available   # contrast
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.policies import DispatchPolicy
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServeEngine
+
+TINY = ModelConfig(name="serve-demo", family="dense", n_layers=4,
+                   d_model=128, n_heads=8, n_kv_heads=4, d_ff=512,
+                   vocab_size=4096, head_dim=16)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--policy", default="max-compute-util")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    eng = ServeEngine(TINY, n_replicas=args.replicas,
+                      policy=DispatchPolicy(args.policy), max_seq=96,
+                      seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    bases = [list(rng.integers(2, TINY.vocab_size, 48)) for _ in range(3)]
+    done = []
+    for wave in range(0, args.requests, 8):
+        reqs = []
+        for i in range(wave, min(wave + 8, args.requests)):
+            prompt = bases[i % 3] + list(rng.integers(2, TINY.vocab_size, 8))
+            reqs.append(Request(rid=i, prompt=prompt,
+                                max_new_tokens=args.max_new))
+        done += eng.generate(reqs)
+    total_prompt = sum(len(r.prompt) for r in done)
+    print(f"served {len(done)} requests x {args.max_new} tokens on "
+          f"{args.replicas} replicas, policy={args.policy}")
+    print(f"  prompt tokens total:   {total_prompt}")
+    print(f"  prefill computed:      {eng.prefill_tokens}")
+    print(f"  reused from prefix KV: {eng.reused_tokens} "
+          f"({eng.reused_tokens / max(total_prompt, 1):.1%})")
+    print(f"  router: {eng.router.stats()}")
+    print(f"  sample output: {done[0].output}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Data diffusion core (the paper's contribution).
+
+Public API re-exports; see DESIGN.md §3 for the inventory.
+"""
+from .cache import EvictionPolicy, ExecutorCache
+from .index import IndexUpdate, LocationIndex, ShardedIndex, prls_aggregate_throughput, prls_latency_model
+from .objects import DataObject, Task, TaskState, make_objects, uniform_tasks
+from .policies import Decision, DispatchPolicy, decide
+from .provisioner import AllocationPolicy, DynamicResourceProvisioner
+from .runtime import DiffusionRuntime, ObjectStore
+from .scheduler import Dispatcher
+from .simulator import DiffusionSim, SimConfig, SimResult
+from .testbeds import ANL_UC, TPU_V5E_HOSTS, TestbedSpec
+
+__all__ = [
+    "ANL_UC",
+    "AllocationPolicy",
+    "DataObject",
+    "Decision",
+    "DiffusionRuntime",
+    "DiffusionSim",
+    "DispatchPolicy",
+    "Dispatcher",
+    "DynamicResourceProvisioner",
+    "EvictionPolicy",
+    "ExecutorCache",
+    "IndexUpdate",
+    "LocationIndex",
+    "ObjectStore",
+    "ShardedIndex",
+    "SimConfig",
+    "SimResult",
+    "TPU_V5E_HOSTS",
+    "Task",
+    "TaskState",
+    "TestbedSpec",
+    "decide",
+    "make_objects",
+    "prls_aggregate_throughput",
+    "prls_latency_model",
+    "uniform_tasks",
+]

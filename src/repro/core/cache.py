@@ -1,0 +1,175 @@
+"""Per-executor data cache with the paper's four eviction policies (§3.2.2).
+
+Each executor manages its own cache with a *local* eviction policy and
+communicates content changes to the dispatcher's central index.  The paper
+implements Random, FIFO, LRU and LFU and runs its experiments with LRU; we
+implement all four behind one structure.
+
+Invariants (property-tested in tests/test_cache_properties.py):
+  * used_bytes == sum(size of resident objects)  and  used_bytes <= capacity
+  * an object larger than capacity is never admitted
+  * pinned objects (inputs of a running task) are never evicted
+  * LRU evicts the least-recently *touched*, FIFO the earliest-inserted,
+    LFU the least-frequently-touched (ties broken FIFO), Random any unpinned.
+"""
+from __future__ import annotations
+
+import enum
+import random
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from .objects import DataObject
+
+
+class EvictionPolicy(enum.Enum):
+    RANDOM = "random"
+    FIFO = "fifo"
+    LRU = "lru"
+    LFU = "lfu"
+
+
+@dataclass(slots=True)
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    rejected: int = 0  # objects bigger than the whole cache
+
+    @property
+    def hit_ratio(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class ExecutorCache:
+    """Byte-budgeted object cache. Not thread-safe; callers lock."""
+
+    def __init__(
+        self,
+        capacity_bytes: int,
+        policy: EvictionPolicy = EvictionPolicy.LRU,
+        seed: int = 0,
+    ) -> None:
+        if capacity_bytes < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity_bytes = capacity_bytes
+        self.policy = policy
+        self._rng = random.Random(seed)
+        # oid -> size.  Ordering carries policy meaning:
+        #   FIFO: insertion order;  LRU: recency order (oldest first).
+        self._entries: OrderedDict[str, int] = OrderedDict()
+        self._freq: dict[str, int] = {}        # LFU counters
+        self._tick = 0                         # LFU FIFO tie-break
+        self._order: dict[str, int] = {}       # oid -> insertion tick
+        self._pinned: dict[str, int] = {}      # oid -> pin count
+        self.used_bytes = 0
+        self.stats = CacheStats()
+
+    # -- queries ------------------------------------------------------------
+    def __contains__(self, oid: str) -> bool:
+        return oid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def contents(self) -> frozenset[str]:
+        return frozenset(self._entries)
+
+    def size_of(self, oid: str) -> int:
+        return self._entries[oid]
+
+    # -- pinning (inputs of in-flight tasks must not be evicted) ------------
+    def pin(self, oid: str) -> None:
+        if oid in self._entries:
+            self._pinned[oid] = self._pinned.get(oid, 0) + 1
+
+    def unpin(self, oid: str) -> None:
+        c = self._pinned.get(oid, 0)
+        if c <= 1:
+            self._pinned.pop(oid, None)
+        else:
+            self._pinned[oid] = c - 1
+
+    # -- access -------------------------------------------------------------
+    def get(self, oid: str) -> bool:
+        """True on hit; updates recency/frequency metadata."""
+        if oid not in self._entries:
+            self.stats.misses += 1
+            return False
+        self.stats.hits += 1
+        self._touch(oid)
+        return True
+
+    def _touch(self, oid: str) -> None:
+        if self.policy is EvictionPolicy.LRU:
+            self._entries.move_to_end(oid)
+        self._freq[oid] = self._freq.get(oid, 0) + 1
+
+    # -- insertion / eviction ------------------------------------------------
+    def put(self, obj: DataObject) -> list[str]:
+        """Insert (idempotent); returns the list of evicted oids."""
+        if obj.oid in self._entries:
+            self._touch(obj.oid)
+            return []
+        if obj.size_bytes > self.capacity_bytes:
+            self.stats.rejected += 1
+            return []
+        evicted: list[str] = []
+        while self.used_bytes + obj.size_bytes > self.capacity_bytes:
+            victim = self._pick_victim()
+            if victim is None:  # everything pinned -- over-admit is forbidden
+                self.stats.rejected += 1
+                return evicted
+            self._remove(victim)
+            evicted.append(victim)
+            self.stats.evictions += 1
+        self._entries[obj.oid] = obj.size_bytes
+        self._freq[obj.oid] = 1
+        self._order[obj.oid] = self._tick
+        self._tick += 1
+        self.used_bytes += obj.size_bytes
+        self.stats.insertions += 1
+        return evicted
+
+    def _pick_victim(self) -> Optional[str]:
+        candidates = [o for o in self._entries if o not in self._pinned]
+        if not candidates:
+            return None
+        p = self.policy
+        if p is EvictionPolicy.RANDOM:
+            return self._rng.choice(candidates)
+        if p in (EvictionPolicy.FIFO, EvictionPolicy.LRU):
+            # _entries order is insertion (FIFO) or recency (LRU); first
+            # unpinned in order is the victim.
+            for o in self._entries:
+                if o not in self._pinned:
+                    return o
+            return None
+        # LFU, FIFO tie-break
+        return min(candidates, key=lambda o: (self._freq.get(o, 0), self._order[o]))
+
+    def _remove(self, oid: str) -> None:
+        self.used_bytes -= self._entries.pop(oid)
+        self._freq.pop(oid, None)
+        self._order.pop(oid, None)
+
+    def drop(self, oid: str) -> bool:
+        """Explicit invalidation (executor release / failure handling)."""
+        if oid in self._entries and oid not in self._pinned:
+            self._remove(oid)
+            return True
+        return False
+
+    def drop_all(self) -> list[str]:
+        dropped = [o for o in list(self._entries) if o not in self._pinned]
+        for o in dropped:
+            self._remove(o)
+        return dropped
+
+    def warm(self, objs: Iterable[DataObject]) -> None:
+        """Pre-populate (the paper's 100%-locality warm-cache experiments)."""
+        for ob in objs:
+            self.put(ob)

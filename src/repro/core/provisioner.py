@@ -1,0 +1,93 @@
+"""Dynamic Resource Provisioner (DRP) -- Falkon §3.1.
+
+Watches the dispatcher wait queue and grows/shrinks the executor pool with
+tunable allocation policies (the Falkon provisioner exposes the same knobs):
+
+  one-at-a-time   +1 executor per trigger
+  additive        +k executors per trigger
+  exponential     doubles the request size per consecutive trigger
+  all-at-once     jump straight to max_executors
+
+De-allocation: release executors idle longer than ``idle_timeout_s``
+(down to ``min_executors``).  The paper's experiments hold the pool fixed
+(\"do not investigate the effects of dynamic resource provisioning\"); the
+microbenchmarks therefore run with allocation=all-at-once and releases
+disabled, but DRP is exercised by tests/test_provisioner.py and the
+elastic-training example.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class AllocationPolicy(enum.Enum):
+    ONE_AT_A_TIME = "one-at-a-time"
+    ADDITIVE = "additive"
+    EXPONENTIAL = "exponential"
+    ALL_AT_ONCE = "all-at-once"
+
+
+@dataclass(slots=True)
+class ProvisionerActions:
+    allocate: int = 0
+    release: list[str] = field(default_factory=list)
+
+
+class DynamicResourceProvisioner:
+    def __init__(
+        self,
+        min_executors: int = 0,
+        max_executors: int = 64,
+        policy: AllocationPolicy = AllocationPolicy.ALL_AT_ONCE,
+        additive_k: int = 8,
+        queue_threshold: int = 1,
+        idle_timeout_s: float = 60.0,
+        trigger_cooldown_s: float = 1.0,
+    ) -> None:
+        self.min_executors = min_executors
+        self.max_executors = max_executors
+        self.policy = policy
+        self.additive_k = additive_k
+        self.queue_threshold = queue_threshold
+        self.idle_timeout_s = idle_timeout_s
+        self.trigger_cooldown_s = trigger_cooldown_s
+        self._exp_burst = 1
+        self._last_trigger = -float("inf")
+        self.n_allocated = 0
+        self.n_released = 0
+
+    def step(
+        self,
+        now: float,
+        queue_len: int,
+        live_executors: int,
+        inflight_allocations: int,
+        idle_executors: list[str],
+    ) -> ProvisionerActions:
+        acts = ProvisionerActions()
+        total = live_executors + inflight_allocations
+        # -- grow ---------------------------------------------------------
+        if (queue_len >= self.queue_threshold and total < self.max_executors
+                and now - self._last_trigger >= self.trigger_cooldown_s):
+            room = self.max_executors - total
+            if self.policy is AllocationPolicy.ONE_AT_A_TIME:
+                want = 1
+            elif self.policy is AllocationPolicy.ADDITIVE:
+                want = self.additive_k
+            elif self.policy is AllocationPolicy.EXPONENTIAL:
+                want = self._exp_burst
+                self._exp_burst *= 2
+            else:  # ALL_AT_ONCE
+                want = room
+            acts.allocate = min(want, room)
+            self.n_allocated += acts.allocate
+            self._last_trigger = now
+        elif queue_len < self.queue_threshold:
+            self._exp_burst = 1
+        # -- shrink --------------------------------------------------------
+        if queue_len == 0 and live_executors > self.min_executors:
+            releasable = live_executors - self.min_executors
+            acts.release = idle_executors[:releasable]
+            self.n_released += len(acts.release)
+        return acts

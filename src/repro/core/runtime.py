@@ -1,0 +1,323 @@
+"""Real threaded data-diffusion runtime.
+
+Drives the *same* Dispatcher / policies / ExecutorCache / LocationIndex as
+the simulator, but executors are worker threads running real Python
+callables, and objects carry real payloads (numpy arrays / bytes) held in
+per-executor in-memory caches -- this is the engine behind the training data
+pipeline (repro.data.pipeline) and the serving router.
+
+On a real multi-host fleet each executor is a host process and ``fetch``
+crosses DCN; here executors are threads and a peer fetch is a memcpy plus a
+byte-ledger entry, so scheduling behaviour (placement, hit ratios, byte
+ledgers -- everything the paper evaluates) is identical while staying
+runnable in one process.  The Channel abstraction marks exactly the two
+seams (task dispatch, index updates) that become RPCs on a fleet.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Optional
+
+from .cache import EvictionPolicy, ExecutorCache
+from .index import IndexUpdate
+from .objects import DataObject, Task, TaskState
+from .policies import DispatchPolicy
+from .scheduler import Dispatcher, Dispatch
+
+
+class ObjectStore:
+    """Persistent-store stand-in: oid -> payload (immutable after put)."""
+
+    def __init__(self) -> None:
+        self._data: dict[str, Any] = {}
+        self._meta: dict[str, DataObject] = {}
+        self._lock = threading.Lock()
+        self.reads = 0
+        self.bytes_read = 0
+
+    def put(self, obj: DataObject, payload: Any) -> None:
+        with self._lock:
+            if obj.oid in self._data:
+                raise ValueError(f"object {obj.oid} is immutable (already stored)")
+            self._data[obj.oid] = payload
+            self._meta[obj.oid] = obj
+
+    def get(self, oid: str) -> tuple[DataObject, Any]:
+        with self._lock:
+            self.reads += 1
+            self.bytes_read += self._meta[oid].size_bytes
+            return self._meta[oid], self._data[oid]
+
+    def meta(self, oid: str) -> DataObject:
+        return self._meta[oid]
+
+    def __contains__(self, oid: str) -> bool:
+        return oid in self._data
+
+
+@dataclass
+class RuntimeLedger:
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    bytes_local: int = 0
+    bytes_c2c: int = 0
+    bytes_store: int = 0
+    local_hits: int = 0
+    peer_hits: int = 0
+    store_reads: int = 0
+
+    def account(self, kind: str, n: int) -> None:
+        with self.lock:
+            if kind == "local":
+                self.bytes_local += n
+                self.local_hits += 1
+            elif kind == "c2c":
+                self.bytes_c2c += n
+                self.peer_hits += 1
+            else:
+                self.bytes_store += n
+                self.store_reads += 1
+
+    @property
+    def global_hit_ratio(self) -> float:
+        n = self.local_hits + self.peer_hits + self.store_reads
+        return (self.local_hits + self.peer_hits) / n if n else 0.0
+
+    @property
+    def local_hit_ratio(self) -> float:
+        n = self.local_hits + self.peer_hits + self.store_reads
+        return self.local_hits / n if n else 0.0
+
+
+class ExecutorWorker:
+    """A worker thread with a local payload cache."""
+
+    def __init__(self, eid: str, rt: "DiffusionRuntime",
+                 cache_capacity: int, policy: EvictionPolicy, seed: int) -> None:
+        self.eid = eid
+        self.rt = rt
+        self.cache = ExecutorCache(cache_capacity, policy, seed=seed)
+        self.payloads: dict[str, Any] = {}
+        self.lock = threading.Lock()
+        self.inbox: "queue.Queue[Optional[Dispatch]]" = queue.Queue()
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name=f"executor-{eid}")
+        self.alive = True
+
+    def start(self) -> None:
+        self.thread.start()
+
+    def stop(self) -> None:
+        self.alive = False
+        self.inbox.put(None)
+
+    # -- cache ops (thread-safe) ---------------------------------------------
+    def cache_lookup(self, oid: str) -> Optional[Any]:
+        with self.lock:
+            if self.cache.get(oid):
+                return self.payloads[oid]
+        return None
+
+    def cache_peek(self, oid: str) -> Optional[Any]:
+        """Peer-side read: no recency update on the *owner's* policy state
+        (the paper's peer reads go through GridFTP, not the local app)."""
+        with self.lock:
+            if oid in self.cache:
+                return self.payloads[oid]
+        return None
+
+    def cache_admit(self, obj: DataObject, payload: Any) -> IndexUpdate:
+        with self.lock:
+            evicted = self.cache.put(obj)
+            if obj.oid in self.cache:
+                self.payloads[obj.oid] = payload
+            for oid in evicted:
+                self.payloads.pop(oid, None)
+            return IndexUpdate(self.eid, added=(obj.oid,), removed=tuple(evicted))
+
+    # -- task loop --------------------------------------------------------------
+    def _run(self) -> None:
+        while self.alive:
+            disp = self.inbox.get()
+            if disp is None:
+                return
+            self.rt._execute(self, disp)
+
+
+class DiffusionRuntime:
+    """In-process multi-executor diffusion runtime."""
+
+    def __init__(
+        self,
+        n_executors: int,
+        policy: DispatchPolicy = DispatchPolicy.MAX_COMPUTE_UTIL,
+        cache_policy: EvictionPolicy = EvictionPolicy.LRU,
+        cache_capacity_bytes: int = 1 << 30,
+        store: Optional[ObjectStore] = None,
+        seed: int = 0,
+        index_update_batch: int = 1,   # >1 demonstrates loose coherence
+    ) -> None:
+        self.store = store if store is not None else ObjectStore()
+        self.dispatcher = Dispatcher(policy)
+        self.ledger = RuntimeLedger()
+        self.workers: dict[str, ExecutorWorker] = {}
+        self._lock = threading.Lock()
+        self._done = threading.Condition(self._lock)
+        self._outstanding = 0
+        self._update_buf: list[IndexUpdate] = []
+        self._update_batch = max(index_update_batch, 1)
+        self._seed = seed
+        for i in range(n_executors):
+            self.add_executor()
+
+    # -- membership ----------------------------------------------------------------
+    def add_executor(self) -> str:
+        with self._lock:
+            eid = f"w{len(self.workers)}"
+            w = ExecutorWorker(eid, self,
+                               cache_capacity=self._cache_capacity(),
+                               policy=self._cache_policy(),
+                               seed=self._seed + len(self.workers))
+            self.workers[eid] = w
+            self.dispatcher.executor_joined(eid, time.monotonic())
+        w.start()
+        return eid
+
+    def _cache_capacity(self) -> int:
+        return getattr(self, "_cap", 1 << 30)
+
+    def _cache_policy(self) -> EvictionPolicy:
+        return getattr(self, "_cpol", EvictionPolicy.LRU)
+
+    def configure_caches(self, capacity_bytes: int, policy: EvictionPolicy) -> None:
+        self._cap = capacity_bytes
+        self._cpol = policy
+        for w in self.workers.values():
+            w.cache = ExecutorCache(capacity_bytes, policy)
+            w.payloads.clear()
+
+    def remove_executor(self, eid: str, failed: bool = False) -> None:
+        with self._lock:
+            w = self.workers.pop(eid, None)
+            if w is None:
+                return
+            requeued = self.dispatcher.executor_left(eid, time.monotonic(),
+                                                     failed=failed)
+            # tasks already running on the dead worker will be dropped by the
+            # alive check in _execute; their retries were re-queued above.
+            self._outstanding -= 0  # retries keep the same outstanding count
+        w.stop()
+        self._pump()
+
+    # -- data -------------------------------------------------------------------------
+    def put_object(self, obj: DataObject, payload: Any) -> None:
+        self.store.put(obj, payload)
+        self.dispatcher.sizes[obj.oid] = obj.size_bytes
+
+    # -- execution -------------------------------------------------------------------
+    def submit(self, tasks: Iterable[Task]) -> int:
+        ts = list(tasks)
+        with self._lock:
+            self.dispatcher.submit(ts, time.monotonic())
+            self._outstanding += len(ts)
+        self._pump()
+        return len(ts)
+
+    def _pump(self) -> None:
+        with self._lock:
+            dispatches = self.dispatcher.next_dispatches(time.monotonic())
+        for d in dispatches:
+            w = self.workers.get(d.executor)
+            if w is None:
+                with self._lock:
+                    self.dispatcher.task_finished(d.task, time.monotonic(), ok=False)
+                continue
+            w.inbox.put(d)
+
+    def _resolve(self, w: ExecutorWorker, oid: str,
+                 hints: dict[str, tuple[str, ...]]) -> Any:
+        size = self.dispatcher.sizes.get(oid, 0)
+        payload = w.cache_lookup(oid)
+        if payload is not None:
+            self.ledger.account("local", size)
+            return payload
+        for peer_id in hints.get(oid, ()):
+            if peer_id == w.eid:
+                continue
+            peer = self.workers.get(peer_id)
+            if peer is None:
+                continue
+            payload = peer.cache_peek(oid)
+            if payload is not None:
+                self.ledger.account("c2c", size)
+                obj = self.store.meta(oid) if oid in self.store else DataObject(oid, size)
+                self._emit(w.cache_admit(obj, payload))
+                return payload
+        obj, payload = self.store.get(oid)
+        self.ledger.account("store", obj.size_bytes)
+        self._emit(w.cache_admit(obj, payload))
+        return payload
+
+    def _emit(self, upd: IndexUpdate) -> None:
+        with self._lock:
+            self._update_buf.append(upd)
+            if len(self._update_buf) >= self._update_batch:
+                self.dispatcher.apply_index_updates(self._update_buf)
+                self._update_buf = []
+
+    def _execute(self, w: ExecutorWorker, disp: Dispatch) -> None:
+        t = disp.task
+        t.state = TaskState.RUNNING
+        t.start_time = time.monotonic()
+        ok = True
+        try:
+            inputs = {oid: self._resolve(w, oid, disp.hints) for oid in t.inputs}
+            if t.fn is not None:
+                t.result = t.fn(**inputs) if _wants_kwargs(t.fn) else t.fn(inputs)
+            for ob in t.outputs:
+                payload = t.result if len(t.outputs) == 1 else t.result[ob.oid]
+                self._emit(w.cache_admit(ob, payload))
+                self.dispatcher.sizes[ob.oid] = ob.size_bytes
+        except Exception as e:  # noqa: BLE001 - task failure is data, not a crash
+            ok = False
+            t.result = e
+        with self._lock:
+            self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
+            if ok or t.state is TaskState.FAILED:
+                self._outstanding -= 1
+                if self._outstanding == 0:
+                    self._done.notify_all()
+        self._pump()
+
+    def wait(self, timeout: float = 60.0) -> bool:
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while self._outstanding > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._done.wait(remaining)
+        # flush any buffered (loose) index updates at quiescence
+        with self._lock:
+            if self._update_buf:
+                self.dispatcher.apply_index_updates(self._update_buf)
+                self._update_buf = []
+        return True
+
+    def shutdown(self) -> None:
+        for w in self.workers.values():
+            w.stop()
+
+
+def _wants_kwargs(fn: Callable[..., Any]) -> bool:
+    import inspect
+
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    params = list(sig.parameters.values())
+    return not (len(params) == 1 and params[0].kind is params[0].POSITIONAL_OR_KEYWORD
+                and params[0].name in ("inputs", "payloads"))

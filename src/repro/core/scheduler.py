@@ -1,0 +1,332 @@
+"""The Falkon-style dispatcher extended with data-aware scheduling (§3.2).
+
+Engine-agnostic state machine: the discrete-event simulator and the real
+threaded runtime both drive this same object, so the policy behaviour that
+the paper evaluates (queueing, placement, waiting-on-busy-executor for
+max-cache-hit, hint shipping, retries, speculation) is one code path.
+
+Responsibilities:
+  * wait queue + per-executor pending queues (max-cache-hit binds tasks to a
+    busy executor and waits for it);
+  * placement via policies.decide() against the loosely-coherent LocationIndex;
+  * executor membership (join/leave/fail) with index invalidation and
+    re-queueing of in-flight work  -> fault tolerance;
+  * straggler speculation: duplicate the oldest running task when it exceeds
+    ``speculation_factor x p95(completed durations)``; first copy wins;
+  * byte/hit accounting handoff to metrics.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from .index import IndexUpdate, LocationIndex
+from .objects import Task, TaskState
+from .policies import Decision, DispatchPolicy, decide
+
+
+@dataclass(slots=True)
+class ExecutorState:
+    eid: str
+    alive: bool = True
+    busy: int = 0                 # running task count
+    slots: int = 1
+    joined_at: float = 0.0
+    last_busy_at: float = 0.0
+    running: set[str] = field(default_factory=set)
+
+    @property
+    def available(self) -> bool:
+        return self.alive and self.busy < self.slots
+
+
+@dataclass(slots=True)
+class Dispatch:
+    task: Task
+    executor: str
+    hints: dict[str, tuple[str, ...]]
+    speculative_of: Optional[str] = None
+
+
+class Dispatcher:
+    def __init__(
+        self,
+        policy: DispatchPolicy,
+        index: Optional[LocationIndex] = None,
+        speculation_factor: float = 0.0,  # 0 disables speculation
+        min_completions_for_speculation: int = 10,
+    ) -> None:
+        self.policy = policy
+        self.index = index if index is not None else LocationIndex()
+        self.sizes: dict[str, int] = {}
+        self.executors: dict[str, ExecutorState] = {}
+        self._exec_order: list[str] = []          # arrival order (FIFO choice)
+        self.queue: deque[Task] = deque()
+        self.pending: dict[str, deque[Task]] = {} # max-cache-hit waits
+        self.tasks: dict[str, Task] = {}
+        self.completed: list[Task] = []
+        self.failed: list[Task] = []
+        self.durations: list[float] = []
+        self.speculation_factor = speculation_factor
+        self.min_completions_for_speculation = min_completions_for_speculation
+        self._speculated: set[str] = set()        # tids with a live twin
+        self._twins: dict[str, str] = {}          # twin tid -> original tid
+        self.n_decisions = 0
+        self.decision_lookups = 0
+
+    # ---------------- membership -------------------------------------------
+    def executor_joined(self, eid: str, now: float, slots: int = 1) -> None:
+        self.executors[eid] = ExecutorState(eid=eid, slots=slots, joined_at=now,
+                                            last_busy_at=now)
+        if eid not in self._exec_order:
+            self._exec_order.append(eid)
+        self.pending.setdefault(eid, deque())
+
+    def executor_left(self, eid: str, now: float, failed: bool = False) -> list[Task]:
+        """Remove an executor; returns tasks that must be re-dispatched."""
+        st = self.executors.get(eid)
+        if st is None:
+            return []
+        st.alive = False
+        self._exec_order = [e for e in self._exec_order if e != eid]
+        self.index.drop_executor(eid)
+        requeue: list[Task] = []
+        for tid in list(st.running):
+            t = self.tasks.get(tid)
+            if t is not None and t.state not in (TaskState.DONE, TaskState.FAILED):
+                t.attempts += 1
+                if t.attempts >= t.max_attempts:
+                    t.state = TaskState.FAILED
+                    self.failed.append(t)
+                else:
+                    t.reset_for_retry()
+                    requeue.append(t)
+        st.running.clear()
+        st.busy = 0
+        # re-home pending (max-cache-hit) tasks bound to the dead executor
+        for t in self.pending.pop(eid, deque()):
+            t.state = TaskState.SUBMITTED
+            requeue.append(t)
+        del self.executors[eid]
+        for t in requeue:
+            self.queue.appendleft(t)
+        return requeue
+
+    # ---------------- submission -------------------------------------------
+    def submit(self, tasks: Iterable[Task], now: float) -> int:
+        n = 0
+        for t in tasks:
+            t.submit_time = now
+            t.state = TaskState.SUBMITTED
+            self.tasks[t.tid] = t
+            for ob in t.outputs:
+                self.sizes[ob.oid] = ob.size_bytes
+            self.queue.append(t)
+            n += 1
+        return n
+
+    def register_objects(self, objs) -> None:
+        for ob in objs:
+            self.sizes[ob.oid] = ob.size_bytes
+
+    # ---------------- placement --------------------------------------------
+    def _avail_busy(self) -> tuple[list[str], list[str]]:
+        avail = [e for e in self._exec_order if self.executors[e].available]
+        busy = [e for e in self._exec_order
+                if self.executors[e].alive and not self.executors[e].available]
+        return avail, busy
+
+    #: how deep into the wait queue max-compute-util searches for a task
+    #: matching a freed executor's cache.  Falkon's data-aware dispatcher
+    #: examines queued tasks to "send tasks to nodes that have cached the
+    #: most needed data" (§3.2.1); a bounded window keeps decisions O(W).
+    queue_window: int = 256
+
+    def next_dispatches(self, now: float) -> list[Dispatch]:
+        """Pop as many placeable tasks as possible (engine applies them)."""
+        out: list[Dispatch] = []
+        # 1) pending queues of executors that became available
+        for eid, dq in self.pending.items():
+            st = self.executors.get(eid)
+            while dq and st is not None and st.available:
+                out.append(self._bind(dq.popleft(), eid, now))
+        if not self.queue:
+            return out
+        if self.policy is DispatchPolicy.MAX_COMPUTE_UTIL:
+            out.extend(self._dispatch_mcu(now))
+        else:
+            out.extend(self._dispatch_fifo(now))
+        return out
+
+    def _dispatch_fifo(self, now: float) -> list[Dispatch]:
+        """Head-of-queue placement (FA / NA / FCA / MCH semantics)."""
+        out: list[Dispatch] = []
+        deferred: list[Task] = []
+        progressed = True
+        while progressed and self.queue:
+            progressed = False
+            avail, busy = self._avail_busy()
+            if not avail and self.policy is not DispatchPolicy.MAX_CACHE_HIT:
+                break
+            t = self.queue.popleft()
+            d = decide(self.policy, t, avail, busy, self.index, self.sizes)
+            self.n_decisions += 1
+            self.decision_lookups += len(t.inputs) if self.policy.ships_hints else 0
+            if d.executor is not None:
+                t.location_hints = d.hints
+                out.append(self._bind(t, d.executor, now))
+                progressed = True
+            elif d.wait_for is not None:
+                t.state = TaskState.PENDING
+                t.location_hints = d.hints
+                self.pending.setdefault(d.wait_for, deque()).append(t)
+                progressed = True
+            else:
+                deferred.append(t)
+        for t in reversed(deferred):
+            self.queue.appendleft(t)
+        return out
+
+    def _dispatch_mcu(self, now: float) -> list[Dispatch]:
+        """max-compute-util: for each available executor, pick the queued
+        task (within the window) whose inputs it caches the most bytes of;
+        fall back to the queue head when nothing matches."""
+        out: list[Dispatch] = []
+        while self.queue:
+            avail, _ = self._avail_busy()
+            if not avail:
+                break
+            window = list(self.queue)[: self.queue_window]
+            # hints once per task in the window
+            hinted: list[tuple[Task, dict[str, tuple[str, ...]]]] = []
+            for t in window:
+                hints = {}
+                for oid in t.inputs:
+                    locs = self.index.lookup(oid)
+                    if locs:
+                        hints[oid] = tuple(sorted(locs))
+                self.decision_lookups += len(t.inputs)
+                hinted.append((t, hints))
+            self.n_decisions += 1
+            bound_any = False
+            taken: set[str] = set()
+            for eid in avail:
+                best_i, best_score = -1, 0
+                for i, (t, hints) in enumerate(hinted):
+                    if t.tid in taken:
+                        continue
+                    score = sum(self.sizes.get(oid, 1)
+                                for oid, locs in hints.items() if eid in locs)
+                    if score > best_score:
+                        best_i, best_score = i, score
+                if best_i < 0:
+                    # nothing cached for this executor: take earliest unclaimed
+                    best_i = next((i for i, (t, _) in enumerate(hinted)
+                                   if t.tid not in taken), -1)
+                    if best_i < 0:
+                        break
+                t, hints = hinted[best_i]
+                taken.add(t.tid)
+                self.queue.remove(t)
+                t.location_hints = hints
+                out.append(self._bind(t, eid, now))
+                bound_any = True
+            if not bound_any:
+                break
+        return out
+
+    def _bind(self, t: Task, eid: str, now: float) -> Dispatch:
+        st = self.executors[eid]
+        st.busy += 1
+        st.running.add(t.tid)
+        st.last_busy_at = now
+        t.state = TaskState.DISPATCHED
+        t.executor = eid
+        t.dispatch_time = now
+        return Dispatch(task=t, executor=eid, hints=t.location_hints)
+
+    # ---------------- completion -------------------------------------------
+    def task_finished(self, t: Task, now: float, ok: bool = True) -> Optional[str]:
+        """Returns the tid of a twin to cancel, if this was a speculated task."""
+        eid = t.executor
+        st = self.executors.get(eid) if eid else None
+        if st is not None:
+            st.busy = max(st.busy - 1, 0)
+            st.running.discard(t.tid)
+            st.last_busy_at = now
+        cancel: Optional[str] = None
+        orig_tid = self._twins.pop(t.tid, None)
+        if ok:
+            t.state = TaskState.DONE
+            t.end_time = now
+            self.durations.append(now - t.dispatch_time)
+            if orig_tid is not None:
+                # a speculative twin won; cancel the original
+                cancel = orig_tid
+                self._speculated.discard(orig_tid)
+                orig = self.tasks.get(orig_tid)
+                if orig is not None and orig.state not in (TaskState.DONE,):
+                    orig.state = TaskState.DONE  # satisfied by twin
+            elif t.tid in self._speculated:
+                # original won; cancel its twin
+                twin_tid = next((k for k, v in self._twins.items() if v == t.tid), None)
+                if twin_tid:
+                    cancel = twin_tid
+                    del self._twins[twin_tid]
+                self._speculated.discard(t.tid)
+            self.completed.append(t)
+        else:
+            t.attempts += 1
+            if t.attempts >= t.max_attempts:
+                t.state = TaskState.FAILED
+                self.failed.append(t)
+            else:
+                t.reset_for_retry()
+                self.queue.appendleft(t)
+        return cancel
+
+    # ---------------- index coherence ---------------------------------------
+    def apply_index_updates(self, updates: Iterable[IndexUpdate]) -> None:
+        self.index.apply_batch(updates)
+
+    # ---------------- speculation -------------------------------------------
+    def speculation_candidates(self, now: float) -> list[Task]:
+        if (self.speculation_factor <= 0
+                or len(self.durations) < self.min_completions_for_speculation):
+            return []
+        ds = sorted(self.durations)
+        p95 = ds[min(int(0.95 * len(ds)), len(ds) - 1)]
+        threshold = self.speculation_factor * max(p95, 1e-9)
+        out = []
+        for st in self.executors.values():
+            for tid in st.running:
+                t = self.tasks[tid]
+                if (t.state is TaskState.RUNNING or t.state is TaskState.DISPATCHED) \
+                        and t.tid not in self._speculated \
+                        and t.tid not in self._twins \
+                        and now - t.dispatch_time > threshold:
+                    out.append(t)
+        return out
+
+    def make_twin(self, t: Task, now: float) -> Task:
+        twin = Task(inputs=t.inputs, outputs=t.outputs,
+                    compute_seconds=t.compute_seconds, fn=t.fn,
+                    store_metadata_ops=t.store_metadata_ops, tag=t.tag)
+        twin.submit_time = now
+        self.tasks[twin.tid] = twin
+        self._speculated.add(t.tid)
+        self._twins[twin.tid] = t.tid
+        self.queue.appendleft(twin)
+        return twin
+
+    # ---------------- introspection -----------------------------------------
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue) + sum(len(q) for q in self.pending.values())
+
+    def idle_executors(self, now: float, idle_for_s: float) -> list[str]:
+        return [
+            st.eid for st in self.executors.values()
+            if st.alive and st.busy == 0 and now - st.last_busy_at >= idle_for_s
+        ]

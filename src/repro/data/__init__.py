@@ -1,0 +1,5 @@
+from .dataset import ShardSpec, shard_oid, synthesize
+from .pipeline import DiffusionDataPipeline, PipelineConfig
+
+__all__ = ["DiffusionDataPipeline", "PipelineConfig", "ShardSpec",
+           "shard_oid", "synthesize"]

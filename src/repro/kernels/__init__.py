@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three modules: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper with padding/layout), ref.py (pure-jnp oracle used by
+the allclose test sweeps).  All validate under interpret=True on CPU; the
+TPU is the compile target.  The paper itself contributes no kernel (it is a
+scheduling/caching paper) -- these cover the model substrate's hot spots
+plus the paper application's stacking loop.
+"""

@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window / softcap / GQA.
+
+TPU-native design (vs. the CUDA formulation):
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks) with the kv-block
+    dimension iterated sequentially by the TPU grid -- the online-softmax
+    running state (m, l, acc) lives in VMEM scratch and persists across kv
+    steps of the same q block (no atomics / warp shuffles needed: the grid
+    *is* the reduction loop).
+  * BlockSpecs keep one (block_q x head_dim) q tile and one
+    (block_k x head_dim) k/v tile resident in VMEM; defaults 128x128 match
+    the MXU systolic tile.  head_dim is padded to a lane multiple by ops.py.
+  * GQA is expressed in the k/v index_map (kv_head = q_head // group) --
+    no materialized head broadcast.
+  * sliding-window + causal masks are position arithmetic inside the tile;
+    logit softcap (gemma2) is tanh-rescaling applied pre-mask.
+
+Validated in interpret mode against ref.py (tests/test_kernels.py sweeps
+shapes/dtypes); on real TPUs the same pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -2.0 ** 30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int, softcap: float,
+               block_q: int, block_k: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        # fully-masked rows (SWA lookback past the window) have l == 0
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,                 # (B, H, Sq, D)
+    k: jax.Array,                 # (B, KV, Sk, D)
+    v: jax.Array,                 # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # online-softmax running state; persists across the sequential
+            # kv-block grid dimension of one q block
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l (running sum)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,96 @@
+"""Jit'd wrapper: model layout (B,S,H,D) -> kernel layout, head-dim padding.
+
+Models call ``flash_attention`` with (B, S, H, Dh)/(B, S, KV, Dh); the
+wrapper transposes to head-major, pads head_dim to a 128 lane multiple
+(gemma2's Dh=144 -> 256) and pads sequence to the block size, then strips
+padding.  Custom VJP falls back to the reference backward (the kernel is
+forward-only; training uses remat over the ref path on non-hot layers)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_fwd
+from .ref import attention_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, S, H, Dh)
+    k: jax.Array,            # (B, S, KV, Dh)
+    v: jax.Array,            # (B, S, KV, Dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, Dh = q.shape
+    qt = jnp.swapaxes(q, 1, 2)               # (B,H,S,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, dpad = _pad_to(qt, 3, 128)
+    kt, _ = _pad_to(kt, 3, 128)
+    vt, _ = _pad_to(vt, 3, 128)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    qt, spadq = _pad_to(qt, 2, bq)
+    kt, spadk = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    if spadk:
+        # padded keys must never win the softmax: causal masking handles
+        # q-side padding; mask k padding via a window-free validity trick --
+        # give padded keys positions beyond every query (causal mask kills
+        # them).  For non-causal use, ref fallback handles ragged shapes.
+        assert causal, "non-causal ragged seq falls back to ref"
+    # undo the sqrt(D) change from padding: kernel scales by padded D
+    scale_fix = ((Dh + dpad) / Dh) ** 0.5 if dpad else 1.0
+    out = flash_attention_fwd(qt * scale_fix, kt, vt, causal=causal,
+                              window=window, softcap=softcap,
+                              block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :, :S, :Dh]
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_attention_with_ref_vjp(q, k, v, **kw):
+    """Forward via the kernel, backward via the jnp reference (exact same
+    math, so gradients match the ref path)."""
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return flash_attention(q, k, v, **kw)
+
+    def fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+
+        def ref_model_layout(q, k, v):
+            return jnp.swapaxes(
+                attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2),
+                              causal=kw.get("causal", True),
+                              window=kw.get("window", 0),
+                              softcap=kw.get("softcap", 0.0)), 1, 2)
+
+        _, vjp = jax.vjp(ref_model_layout, q, k, v)
+        return vjp(g)
+
+    fa.defvjp(fwd, bwd)
+    return fa(q, k, v)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel (fp32 end to end)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, KV, Sk, D)
+    v: jax.Array,            # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    kg = jnp.repeat(k, group, axis=1)
+    vg = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (SWA beyond-window) produce uniform probs in
+    # softmax; zero them to match the kernel's l==0 guard.
+    any_ok = ok.any(-1)[None, None, :, None]
+    p = jnp.where(any_ok, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vg.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU selective-scan (Mamba-1) kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of one threadblock per
+(batch, channel-slab) doing a warp-level scan, we tile the channel dim
+(d_inner) across the parallel grid axes and run the *sequence* as the last,
+sequential grid dimension in chunks, carrying the SSM state h (block_i x N)
+in VMEM scratch between chunks.  Inside a chunk the recurrence is a
+fori_loop over time steps on (block_i, N) tiles -- elementwise VPU work with
+no MXU involvement, so block_i is sized to the 8x128 VREG lanes rather than
+the 128x128 MXU tile.
+
+Layouts (time-major for contiguous chunk slabs):
+  u, dt : (B, S, I)    A: (I, N)    Bm, Cm: (B, S, N)    D: (I,)
+  y     : (B, S, I)    h_last: (B, I, N)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_I = 128
+DEFAULT_CHUNK = 128
+
+
+def _scan_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+                 y_ref, hlast_ref, h_ref, *, chunk: int, num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    A = A_ref[...].astype(jnp.float32)                    # (bi, N)
+    D = D_ref[...].astype(jnp.float32)                    # (1, bi)
+
+    def step(t, h):
+        u_t = u_ref[0, t].astype(jnp.float32)             # (bi,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)           # (bi,)
+        B_t = B_ref[0, t].astype(jnp.float32)             # (N,)
+        C_t = C_ref[0, t].astype(jnp.float32)             # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)                   # (bi, N)
+        dBu = (dt_t * u_t)[:, None] * B_t[None, :]        # (bi, N)
+        h = dA * h + dBu
+        y_t = jnp.sum(h * C_t[None, :], axis=1) + u_t * D[0]
+        y_ref[0, t] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == num_chunks - 1)
+    def _finish():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def mamba_scan_fwd(
+    u: jax.Array,      # (B, S, I) fp32
+    dt: jax.Array,     # (B, S, I) fp32
+    A: jax.Array,      # (I, N) fp32
+    Bm: jax.Array,     # (B, S, N) fp32
+    Cm: jax.Array,     # (B, S, N) fp32
+    D: jax.Array,      # (I,) fp32
+    h0: jax.Array,     # (B, I, N) fp32
+    *,
+    block_i: int = DEFAULT_BLOCK_I,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, I = u.shape
+    N = A.shape[1]
+    block_i = min(block_i, I)
+    chunk = min(chunk, S)
+    assert I % block_i == 0 and S % chunk == 0, (I, block_i, S, chunk)
+    ni, nc = I // block_i, S // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, num_chunks=nc)
+    y, hlast = pl.pallas_call(
+        kernel,
+        grid=(B, ni, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_i), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((1, chunk, block_i), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((block_i, N), lambda b, i, c: (i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, block_i), lambda b, i, c: (0, i)),
+            pl.BlockSpec((1, block_i, N), lambda b, i, c: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_i), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((1, block_i, N), lambda b, i, c: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, I), u.dtype),
+            jax.ShapeDtypeStruct((B, I, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_i, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bm, Cm, D[None, :], h0)
+    return y, hlast

@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the selective-scan kernel (pads I and S to blocks)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mamba_scan import DEFAULT_BLOCK_I, DEFAULT_CHUNK, mamba_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "chunk", "interpret"))
+def mamba_scan(u, dt, A, Bm, Cm, D,
+               h0: Optional[jax.Array] = None,
+               *, block_i: int = DEFAULT_BLOCK_I, chunk: int = DEFAULT_CHUNK,
+               interpret: bool = True):
+    B, S, I = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, I, N), jnp.float32)
+    bi = min(block_i, I)
+    ck = min(chunk, S)
+    pad_i = (-I) % bi
+    pad_s = (-S) % ck
+    if pad_i:
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad_i)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_i)))
+        A = jnp.pad(A, ((0, pad_i), (0, 0)))
+        D = jnp.pad(D, (0, pad_i))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_i), (0, 0)))
+    if pad_s:
+        # padded steps: dt=0 => dA=exp(0)=1, dBu=0 -> state unchanged; safe.
+        u = jnp.pad(u, ((0, 0), (0, pad_s), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad_s), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad_s), (0, 0)))
+    y, hlast = mamba_scan_fwd(u, dt, A, Bm, Cm, D, h0,
+                              block_i=bi, chunk=ck, interpret=interpret)
+    return y[:, :S, :I], hlast[:, :I]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the selective scan (sequential formulation)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(u, dt, A, Bm, Cm, D, h0: Optional[jax.Array] = None):
+    """u,dt: (B,S,I); A: (I,N); Bm,Cm: (B,S,N); D: (I,); h0: (B,I,N).
+    Returns (y (B,S,I), h_last (B,I,N)). fp32 math."""
+    B, S, I = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, I, N), jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs                       # (B,I),(B,I),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])        # (B,I,N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None]   # (B,I,N)
+        h = dA * h + dBu
+        y = jnp.einsum("bin,bn->bi", h, C_t) + u_t * D[None]
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the stacking kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .stacking import DEFAULT_BLOCK_N, stack_rois_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret", "mean"))
+def stack_rois(rois, sky, cal, dy, dx, *, block_n: int = DEFAULT_BLOCK_N,
+               interpret: bool = True, mean: bool = True):
+    out = stack_rois_fwd(rois.astype(jnp.float32), sky.astype(jnp.float32),
+                         cal.astype(jnp.float32), dy.astype(jnp.float32),
+                         dx.astype(jnp.float32), block_n=block_n,
+                         interpret=interpret)
+    if mean:
+        out = out / rois.shape[0]
+    return out

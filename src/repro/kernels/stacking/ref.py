@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the stacking kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stack_rois_ref(rois, sky, cal, dy, dx):
+    """rois (N,H,W); sky/cal/dy/dx (N,). Returns (H,W) fp32 coadd."""
+    img = (rois.astype(jnp.float32) - sky[:, None, None]) * cal[:, None, None]
+    down = jnp.concatenate([img[:, :1], img[:, :-1]], axis=1)
+    right = jnp.concatenate([img[:, :, :1], img[:, :, :-1]], axis=2)
+    downright = jnp.concatenate([down[:, :, :1], down[:, :, :-1]], axis=2)
+    w00 = ((1 - dy) * (1 - dx))[:, None, None]
+    w01 = ((1 - dy) * dx)[:, None, None]
+    w10 = (dy * (1 - dx))[:, None, None]
+    w11 = (dy * dx)[:, None, None]
+    shifted = w00 * img + w01 * right + w10 * down + w11 * downright
+    return jnp.sum(shifted, axis=0)

@@ -1,0 +1,328 @@
+"""Lower+compile one (arch x shape x mesh) cell and extract roofline inputs.
+
+Shared by the dry-run driver and the §Perf hillclimb loop.  Never allocates
+model-scale arrays: params/caches/batches are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import (abstract_cache, abstract_params, batch_logical,
+                          cache_logical, input_specs, make_prefill,
+                          make_serve_step, make_train_step, param_logical)
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import LogicalRules, make_rules, named_shardings
+from repro.train.optimizer import Optimizer, TrainState, adamw
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\((?:[^()]|\([^()]*\))*\)|\S+\[[\d,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([\d,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8}
+
+
+def f32_shadow_bytes(hlo_text: str, min_bytes: float = 64e6) -> float:
+    """Bytes of fp32 'shadow' tensors: fp32 buffers whose exact shape also
+    exists as a bf16 buffer.  The CPU backend emulates bf16 arithmetic by
+    upconverting to fp32, so big bf16 values (saved-carry stacks, gathered
+    weights) get whole-stack fp32 twins that a native-bf16 TPU lowering
+    does not materialize.  Subtracted to form the TPU-adjusted peak
+    (documented in EXPERIMENTS.md par. Dry-run)."""
+    seen_f32: dict[str, float] = {}
+    seen_bf16: set[str] = set()
+    for m in re.finditer(r"(f32|bf16)\[([\d,]+)\]", hlo_text):
+        dims = m.group(2)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if m.group(1) == "f32":
+            if n * 4 >= min_bytes:
+                seen_f32[dims] = n * 4.0
+        else:
+            seen_bf16.add(dims)
+    return sum(v for k, v in seen_f32.items() if k in seen_bf16)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes by collective kind, from post-SPMD optimized HLO.
+    The result-type shapes are per-partition, so these are bytes handled by
+    ONE device; multiply by chip count for the global figure."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # async pair: count the start only
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(result_type):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool = False
+    error: str = ""
+    n_devices: int = 0
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    per_device_flops: float = 0.0
+    per_device_bytes: float = 0.0
+    collective_per_device: dict[str, float] = field(default_factory=dict)
+    peak_bytes_per_device: float = 0.0
+    peak_tpu_adjusted: float = 0.0     # peak minus CPU-backend f32 shadows
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    generated_code_bytes: float = 0.0
+    model_params: float = 0.0
+    active_params: float = 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+def default_layout(cfg: ModelConfig) -> str:
+    """Baseline parallel layout per family (DESIGN.md §5):
+
+    fsdp_tp_sp -- FSDP over (pod,data) + TP over model + sequence-parallel
+        residual stream.  Right when per-layer TP shrinks the big matmuls
+        (dense attention archs, qwen3's 128-expert EP).
+    dp_zero3 -- batch over EVERY mesh axis + ZeRO-3 over every axis, no TP.
+        Right when layers must see the full sequence anyway (mamba's scan)
+        or when experts cannot divide the model axis (mixtral's 8 on 16):
+        activations shrink by the model-axis width and TP's per-layer
+        activation collectives disappear; weights arrive via per-layer
+        all-gather (ZeRO-3), sized by the layer not the model.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return "dp_zero3"
+    if cfg.n_experts and cfg.n_experts % 16 != 0:
+        return "dp_zero3"          # mixtral: EP cannot divide the model axis
+    return "fsdp_tp_sp"
+
+
+def default_layout_for(cfg: ModelConfig, mode: str) -> str:
+    """dp_zero3 exists to fit TRAIN optimizer state; inference shapes have
+    no optimizer state and want sequence/TP sharding (a dp_zero3 mixtral
+    prefill keeps full-seq activations per device -- measured 841 GB)."""
+    if mode in ("prefill", "decode"):
+        return "fsdp_tp_sp"
+    return default_layout(cfg)
+
+
+def rules_for_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                   *, layout: Optional[str] = None,
+                   seq_shard_decode: bool = True) -> LogicalRules:
+    """Default (baseline) rules; the §Perf hillclimb overrides."""
+    layout = layout or default_layout_for(cfg, shape.mode)
+    all_axes = tuple(mesh.axis_names)
+    if shape.mode == "decode":
+        dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.devices.shape[mesh.axis_names.index(a)]
+        batch_ok = shape.global_batch % dp_size == 0
+        extra = {}
+        if seq_shard_decode:
+            extra["kv_seq"] = ("model",) if batch_ok else all_axes
+        if not batch_ok:
+            extra["batch"] = ()
+        rules = make_rules(mesh, fsdp=True, extra=extra)
+        if layout == "dp_zero3":
+            r = dict(rules.rules)
+            r["fsdp"] = all_axes
+            r["tp"] = ()
+            r["tp_fsdp"] = all_axes
+            rules = LogicalRules(r, mesh)
+        return rules
+    if layout == "dp_zero3":
+        return make_rules(mesh, extra={
+            "batch": all_axes, "fsdp": all_axes, "tp": (),
+            "tp_fsdp": all_axes,
+            "act_seq": (), "expert": ("model",) if "model" in all_axes else (),
+        })
+    # fsdp_tp_sp: sequence-parallel residual stream (the lax.scan carry --
+    # what backward must save -- shards over the model axis along seq)
+    return make_rules(mesh, fsdp=True, extra={"act_seq": ("model",)})
+
+
+def _depth_variant(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same arch with k pattern-blocks (and k encoder layers for enc-dec);
+    used to fit cost = a + b*n_blocks, correcting XLA cost analysis'
+    count-the-loop-body-once behaviour for lax.scan over layers."""
+    kw: dict = {"n_layers": cfg.period * k, "scan_unroll": max(k, 1)}
+    if cfg.is_encdec:
+        kw["enc_layers"] = k
+    return cfg.with_(**kw)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               rules: Optional[LogicalRules] = None,
+               optimizer: Optional[Optimizer] = None):
+    """Returns (fn, args_abstract, in_shardings, out_shardings?) for jit."""
+    rules = rules or rules_for_cell(cfg, shape, mesh)
+    params_ab = abstract_params(cfg)
+    params_lg = param_logical(cfg)
+    batch_ab = input_specs(cfg, shape.seq_len, shape.global_batch, shape.mode)
+    batch_lg = batch_logical(cfg, shape.mode)
+    batch_sh = named_shardings(rules, batch_lg, batch_ab)
+
+    if shape.mode == "train":
+        opt = optimizer or adamw(3e-4, 100, 10_000)
+        state_ab = jax.eval_shape(opt.init, params_ab)
+        state_lg = opt.state_logical(params_lg)
+        state_sh = named_shardings(rules, state_lg, state_ab)
+        fn = make_train_step(cfg, opt, rules)
+        # out_shardings matter: without them XLA may materialize the new
+        # optimizer state / grads UNSHARDED inside the loop (measured as
+        # multi-GB f32 full-size temps on the 42 GB danube lowering).
+        metrics_sh = {"loss": named_shardings(rules, (), jax.ShapeDtypeStruct((), jnp.float32)),
+                      "grad_norm": named_shardings(rules, (), jax.ShapeDtypeStruct((), jnp.float32)),
+                      "step": named_shardings(rules, (), jax.ShapeDtypeStruct((), jnp.int32))}
+        return fn, (state_ab, batch_ab), (state_sh, batch_sh), \
+            (state_sh, metrics_sh), rules
+    if shape.mode == "prefill":
+        fn = make_prefill(cfg, rules)
+        params_sh = named_shardings(rules, params_lg, params_ab)
+        # prefill returns LAST-position logits (B, 1, V)
+        logits_ab = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1, cfg.vocab_size), jnp.float32)
+        logits_sh = named_shardings(rules, ("batch", None, "tp"), logits_ab)
+        return fn, (params_ab, batch_ab), (params_sh, batch_sh), \
+            logits_sh, rules
+    # decode
+    cache_ab = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cache_lg = cache_logical(cfg)
+    cache_sh = named_shardings(rules, cache_lg, cache_ab)
+    params_sh = named_shardings(rules, params_lg, params_ab)
+    fn = make_serve_step(cfg, rules)
+    logits_ab = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.vocab_size), jnp.float32)
+    logits_sh = named_shardings(rules, ("batch", None, "tp"), logits_ab)
+    return fn, (params_ab, cache_ab, batch_ab), \
+        (params_sh, cache_sh, batch_sh), (logits_sh, cache_sh), rules
+
+
+def _compile_once(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  rules: Optional[LogicalRules], donate: bool):
+    fn, args_ab, in_sh, out_sh, rules = build_cell(cfg, shape, mesh, rules)
+    donate_argnums = ()
+    if donate and shape.mode == "train":
+        donate_argnums = (0,)      # donate TrainState
+    elif donate and shape.mode == "decode":
+        donate_argnums = (1,)      # donate cache
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate_argnums)
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(*args_ab)
+    lower_s = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    return compiled, lower_s, compile_s
+
+
+def _costs(compiled) -> tuple[float, float, dict[str, float]]:
+    ca = compiled.cost_analysis() or {}
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            collective_bytes_from_hlo(compiled.as_text()))
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, mesh_name: str,
+             rules: Optional[LogicalRules] = None,
+             donate: bool = True,
+             verbose: bool = True,
+             loop_correct: bool = True) -> CellResult:
+    res = CellResult(arch=cfg.name, shape=shape.name, mesh=mesh_name,
+                     n_devices=mesh.devices.size,
+                     model_params=float(cfg.param_count()),
+                     active_params=float(cfg.param_count(active_only=True)))
+    try:
+        # 1) full-depth compile: proves the cell fits + compiles (memory
+        #    analysis is exact here; cost analysis counts scan bodies once)
+        compiled, res.lower_s, res.compile_s = _compile_once(
+            cfg, shape, mesh, rules, donate)
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            res.argument_bytes = float(getattr(ma, "argument_size_in_bytes", 0))
+            res.output_bytes = float(getattr(ma, "output_size_in_bytes", 0))
+            res.temp_bytes = float(getattr(ma, "temp_size_in_bytes", 0))
+            res.generated_code_bytes = float(
+                getattr(ma, "generated_code_size_in_bytes", 0))
+            alias = float(getattr(ma, "alias_size_in_bytes", 0))
+            res.peak_bytes_per_device = (res.argument_bytes + res.output_bytes
+                                         + res.temp_bytes - alias)
+        res.peak_tpu_adjusted = max(
+            res.peak_bytes_per_device - f32_shadow_bytes(compiled.as_text()),
+            0.0)
+        f_full, b_full, c_full = _costs(compiled)
+        if loop_correct and cfg.n_blocks > 2:
+            # 2) depth-1 and depth-2 variants -> cost = a + b*n_blocks fit
+            #    (XLA cost analysis counts a lax.scan body ONCE regardless of
+            #    trip count; the fit restores the true per-step totals).
+            c1, *_ = _compile_once(_depth_variant(cfg, 1), shape, mesh,
+                                   None if rules is None else rules, donate)
+            c2, *_ = _compile_once(_depth_variant(cfg, 2), shape, mesh,
+                                   None if rules is None else rules, donate)
+            f1, b1, coll1 = _costs(c1)
+            f2, b2, coll2 = _costs(c2)
+            nb = cfg.n_blocks
+            res.per_device_flops = f1 + (f2 - f1) * (nb - 1)
+            res.per_device_bytes = b1 + (b2 - b1) * (nb - 1)
+            kinds = set(coll1) | set(coll2)
+            res.collective_per_device = {
+                k: coll1.get(k, 0.0)
+                + (coll2.get(k, 0.0) - coll1.get(k, 0.0)) * (nb - 1)
+                for k in kinds}
+        else:
+            res.per_device_flops = f_full
+            res.per_device_bytes = b_full
+            res.collective_per_device = c_full
+        res.ok = True
+        if verbose:
+            coll = sum(res.collective_per_device.values())
+            print(f"  OK {cfg.name} x {shape.name} x {mesh_name}: "
+                  f"{res.per_device_flops/1e12:.2f} TF/dev, "
+                  f"{res.per_device_bytes/1e9:.2f} GB/dev touched, "
+                  f"{coll/1e9:.3f} GB/dev collectives, "
+                  f"peak {res.peak_bytes_per_device/1e9:.2f} GB/dev "
+                  f"(tpu-adj {res.peak_tpu_adjusted/1e9:.2f}) "
+                  f"(lower {res.lower_s:.1f}s compile {res.compile_s:.1f}s)")
+    except Exception as e:  # noqa: BLE001 -- cell failures are data
+        res.ok = False
+        res.error = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"  FAIL {cfg.name} x {shape.name} x {mesh_name}: "
+                  f"{res.error[:300]}")
+    return res

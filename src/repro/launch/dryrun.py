@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production meshes -- 16x16 (single pod, 256 chips) and 2x16x16 (two pods,
+512 chips) -- and records cost/memory/collective analysis to JSON for the
+roofline (§Roofline) and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch jamba-1.5-large-398b --mesh multi
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the depth-variant cost fit (compile+memory "
+                         "proof only; used for the multi-pod pass -- the "
+                         "roofline table reads single-pod cells)")
+    args = ap.parse_args(argv)
+
+    import jax  # deferred: after XLA_FLAGS
+    assert len(jax.devices()) == 512, \
+        f"dry-run needs 512 host devices, got {len(jax.devices())}"
+
+    from repro.configs import REGISTRY, SHAPES, cells, skip_reason
+    from repro.launch.cellrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.arch or args.shape:
+        archs = [REGISTRY[args.arch]] if args.arch else list(REGISTRY.values())
+        shapes = [SHAPES[args.shape]] if args.shape else list(SHAPES.values())
+        todo = []
+        for c in archs:
+            for s in shapes:
+                todo.append((c, s, skip_reason(c, s)))
+    else:
+        todo = list(cells(include_skipped=True))
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    n_ok = n_fail = n_skip = 0
+    for cfg, shape, reason in todo:
+        for mesh_name, mesh in meshes:
+            tag = f"{cfg.name}__{shape.name}__{mesh_name}"
+            path = outdir / f"{tag}.json"
+            if reason is not None:
+                n_skip += 1
+                path.write_text(json.dumps(
+                    {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+                     "ok": False, "skipped": True, "reason": reason}, indent=1))
+                print(f"  SKIP {tag}: {reason}")
+                continue
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("ok"):
+                    n_ok += 1
+                    print(f"  CACHED {tag}")
+                    continue
+            res = run_cell(cfg, shape, mesh, mesh_name,
+                           loop_correct=not args.fast)
+            d = res.to_dict()
+            d["skipped"] = False
+            path.write_text(json.dumps(d, indent=1))
+            if res.ok:
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"dry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped "
+          f"(documented long_500k skips)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Serving driver: batched requests through prefix-cache-aware routing.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper-base --reduced \
+      --requests 32 --replicas 4 --policy max-compute-util
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="max-compute-util")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.policies import DispatchPolicy
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.is_encdec:
+        print("[serve] enc-dec serving demo uses the decoder-only path of a "
+              "dense arch; pick an LM arch for this driver")
+        return 0
+    eng = ServeEngine(cfg, n_replicas=args.replicas,
+                      policy=DispatchPolicy(args.policy), max_seq=96,
+                      seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    # shared prompt prefixes => prefix-cache locality (Table 2's "locality"
+    # knob, serving edition)
+    bases = [list(rng.integers(2, cfg.vocab_size, 32)) for _ in range(4)]
+    reqs = []
+    for i in range(args.requests):
+        base = bases[i % len(bases)]
+        reqs.append(Request(rid=i, prompt=base + list(
+            rng.integers(2, cfg.vocab_size, 8)), max_new_tokens=args.max_new))
+    done = []
+    for i in range(0, len(reqs), 8):
+        done += eng.generate(reqs[i: i + 8])
+    print(f"[serve] served {len(done)} requests on {args.replicas} replicas "
+          f"({args.policy})")
+    print(f"[serve] prefill tokens computed: {eng.prefill_tokens}, "
+          f"reused from prefix caches: {eng.reused_tokens}")
+    print(f"[serve] router: {eng.router.stats()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

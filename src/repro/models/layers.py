@@ -1,0 +1,363 @@
+"""Model building blocks: norms, RoPE, GQA attention variants, MLPs.
+
+Everything is a pure function over explicit parameter dicts (no flax): the
+framework owns parameter structure so it can stack layers for lax.scan and
+attach logical shardings uniformly.  Attention supports the assigned-arch
+variants: full / sliding-window (SWA) / local+global alternating, logit
+softcapping (gemma2), GQA with any kv-head count, and an optional Pallas
+flash-attention path (repro.kernels) for the TPU target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import LogicalRules, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm with fp32 *accumulation* but no full-tensor upcast.
+
+    ``x.astype(f32)`` here puts a fp32 copy of the residual stream in the
+    graph; XLA then keeps fp32 shadows of the whole saved-carry stack
+    (+4-6 GB/device at every train cell, measured).  The variance is
+    instead accumulated in fp32 via einsum's preferred_element_type; the
+    elementwise rescale stays in the compute dtype."""
+    dt = x.dtype
+    # reduce a DERIVED value (x*x), never x itself: reduce/einsum upcasts of
+    # the raw residual give XLA license to convert the whole saved-carry
+    # stack to fp32 outside the layer loop (measured +4-6 GB/dev).
+    var = jnp.sum(jnp.square(x), axis=-1, keepdims=True,
+                  dtype=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return x * (inv * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    """LayerNorm, same no-upcast discipline as rms_norm."""
+    dt = x.dtype
+    D = x.shape[-1]
+    # pairwise bf16 pre-sum => the fp32 reduce consumes a DERIVED tensor
+    # (see rms_norm); one bf16 add costs <=1 ulp.
+    pair = x.reshape(x.shape[:-1] + (D // 2, 2))
+    s2 = pair[..., 0] + pair[..., 1]
+    mu = (jnp.sum(s2, axis=-1, dtype=jnp.float32) / D)[..., None]
+    sq = (jnp.sum(jnp.square(x), axis=-1, dtype=jnp.float32) / D)[..., None]
+    var = jnp.maximum(sq - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    xc = x - mu.astype(dt)
+    return xc * (inv * scale.astype(jnp.float32)).astype(dt) \
+        + bias.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16 softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnVariant:
+    kind: str = "full"            # full | swa
+    window: int = 0               # swa window (keys kept: window, inclusive)
+    softcap: float = 0.0          # gemma2 attn logit softcap
+    causal: bool = True           # False for encoder self-attention
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, variant: AttnVariant) -> jax.Array:
+    """(.., Sq, Sk) boolean validity mask from absolute positions."""
+    ok = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], dtype=bool)
+    if variant.causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if variant.kind == "swa" and variant.window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - variant.window
+    return ok
+
+
+def gqa_attention(
+    q: jax.Array,             # (B, Sq, H, Dh)
+    k: jax.Array,             # (B, Sk, KV, Dh)
+    v: jax.Array,             # (B, Sk, KV, Dh)
+    q_pos: jax.Array,         # (Sq,)
+    k_pos: jax.Array,         # (Sk,)
+    variant: AttnVariant,
+    k_valid: Optional[jax.Array] = None,   # (B, Sk) extra validity (cache fill)
+) -> jax.Array:
+    """Reference GQA attention (fp32 softmax). Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = _softcap(logits, variant.softcap)
+    mask = attention_mask(q_pos, k_pos, variant)               # (Sq, Sk)
+    if k_valid is not None:
+        mask = mask[None] & k_valid[:, None, :]                # (B, Sq, Sk)
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    else:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def blocked_attention(
+    q: jax.Array,             # (B, Sq, H, Dh)
+    k: jax.Array,             # (B, Sk, KV, Dh)
+    v: jax.Array,             # (B, Sk, KV, Dh)
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    variant: AttnVariant,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention chunked over keys (the XLA analogue of the
+    Pallas flash kernel): peak intermediate is (B,H,Sq,block_k) instead of
+    (B,H,Sq,Sk).  This is the shipped lowering path for big configs; on
+    real TPUs the Pallas kernel (attn_impl='flash') replaces it."""
+    B, Sq, H, Dh = q.shape
+    KV, Sk = k.shape[2], k.shape[2]
+    Sk = k.shape[1]
+    G = H // KV
+    bk = min(block_k, Sk)
+    pad = (-Sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    nk = (Sk + pad) // bk
+    qg = (q.reshape(B, Sq, KV, G, Dh).astype(jnp.float32)
+          / jnp.sqrt(Dh).astype(jnp.float32))
+    kc = k.reshape(B, nk, bk, KV, Dh)
+    vc = v.reshape(B, nk, bk, KV, Dh)
+    kp = k_pos.reshape(nk, bk)
+
+    def chunk(carry, kci, vci, kpi):
+        m, l, acc = carry
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kci.astype(jnp.float32))
+        s = _softcap(s, variant.softcap)
+        ok = jnp.ones((Sq, bk), bool)
+        if variant.causal:
+            ok &= kpi[None, :] <= q_pos[:, None]
+        if variant.kind == "swa" and variant.window > 0:
+            ok &= kpi[None, :] > q_pos[:, None] - variant.window
+        ok &= (kpi < 2**30)[None, :]
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vci.astype(jnp.float32))
+        return (m_new, l, acc)
+
+    m = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc = jnp.zeros((B, KV, G, Sq, Dh), jnp.float32)
+    # static unroll: keeps HLO flop counting honest (a lax.scan body is
+    # costed once by XLA cost analysis) and lets XLA schedule chunks freely.
+    # per-chunk checkpoint: backward recomputes one chunk's (bq x bk) score
+    # tile at a time instead of holding all nk of them live.
+    ck = jax.checkpoint(chunk)
+    for i in range(nk):
+        m, l, acc = ck((m, l, acc), kc[:, i], vc[:, i], kp[i])
+    out = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    out = jnp.moveaxis(out.reshape(B, KV * G, Sq, Dh), 1, 2)
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    x: jax.Array,                      # (B, S, D)
+    p: dict,                           # wq, wk, wv, wo
+    positions: jax.Array,              # (S,)
+    variant: AttnVariant,
+    rope_theta: float,
+    rules: Optional[LogicalRules] = None,
+    use_rope: bool = True,
+    impl: str = "blocked",             # ref | blocked | flash
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = shard(q, rules, "batch", "act_seq", "tp", None)
+    k = shard(k, rules, "batch", None, None, None)
+    v = shard(v, rules, "batch", None, None, None)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, causal=variant.causal,
+            window=variant.window if variant.kind == "swa" else 0,
+            softcap=variant.softcap)
+    elif impl == "blocked":
+        out = blocked_attention(q, k, v, positions, positions, variant)
+    else:
+        out = gqa_attention(q, k, v, positions, positions, variant)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(y, rules, "batch", "act_seq", None)
+
+
+def attention_decode(
+    x: jax.Array,                      # (B, 1, D)
+    p: dict,
+    cache_k: jax.Array,                # (B, S_cache, KV, Dh)
+    cache_v: jax.Array,
+    pos: jax.Array,                    # scalar int32: absolute position
+    variant: AttnVariant,
+    rope_theta: float,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with in-place cache update.
+
+    SWA layers use the cache as a ring buffer of size min(window, S_cache)
+    (this is what makes long_500k decode sub-quadratic in memory for
+    window-bounded archs)."""
+    B, _, D = x.shape
+    S_cache = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if use_rope:
+        pos_arr = pos[None] if pos.ndim == 0 else pos
+        q = apply_rope(q, pos_arr, rope_theta)
+        k = apply_rope(k, pos_arr, rope_theta)
+    # ring placement: identity while pos < S_cache, wraps afterwards (SWA
+    # archs size the cache to the window; full-attn caches cover max_seq).
+    slot = pos % S_cache
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # absolute position of every cache slot under ring placement
+    idx = jnp.arange(S_cache, dtype=jnp.int32)
+    wraps = (pos // S_cache)
+    k_pos = jnp.where(idx <= slot, wraps * S_cache + idx,
+                      (wraps - 1) * S_cache + idx)
+    k_valid = k_pos >= 0
+    if variant.kind == "swa" and variant.window > 0:
+        k_valid &= k_pos > pos - variant.window
+    KV, Dh = k.shape[2], k.shape[3]
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / jnp.sqrt(Dh).astype(jnp.float32)
+    logits = _softcap(logits, variant.softcap)
+    valid = k_valid & (k_pos <= pos)
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, Dh).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def cross_attention_block(
+    x: jax.Array,                      # (B, Sq, D) decoder states
+    enc: jax.Array,                    # (B, Sk, D) encoder output
+    p: dict,                           # wq, wk, wv, wo
+    rules: Optional[LogicalRules] = None,
+    impl: str = "blocked",
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"].astype(x.dtype))
+    Sq, Sk = x.shape[1], enc.shape[1]
+    variant = AttnVariant(kind="full", causal=False)
+    if impl == "blocked" and Sq > 1:
+        out = blocked_attention(q, k, v, jnp.arange(Sq), jnp.arange(Sk),
+                                variant)
+    else:
+        out = gqa_attention(q, k, v, jnp.arange(Sq), jnp.arange(Sk), variant)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(x: jax.Array, p: dict, act: str,
+              rules: Optional[LogicalRules] = None) -> jax.Array:
+    """Gated (silu/gelu "glu" style) or plain (gelu / squared-relu) MLP.
+    Presence of p["w_gate"] selects gated."""
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        g = shard(g, rules, "batch", None, "tp")
+        h = _activate(g, act) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = shard(h, rules, "batch", None, "tp")
+        h = _activate(h, act)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return shard(y, rules, "batch", None, None)
+
+
+def _activate(x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu2":  # nemotron squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {act}")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array,
+          rules: Optional[LogicalRules] = None,
+          scale_by_sqrt_dim: bool = False) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_sqrt_dim:
+        x = x * jnp.sqrt(table.shape[-1]).astype(x.dtype)
+    return shard(x, rules, "batch", None, None)
+
+
+def unembed(x: jax.Array, table: jax.Array, softcap: float = 0.0,
+            rules: Optional[LogicalRules] = None) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    logits = shard(logits, rules, "batch", "act_seq", "tp")
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    return logits

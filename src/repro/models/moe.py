@@ -1,0 +1,278 @@
+"""Mixture-of-Experts layer (GShard/Switch-style capacity routing).
+
+Top-k softmax router with renormalized gates, capacity-bounded dispatch via
+one-hot matmuls (MXU-friendly: dispatch/combine are dense einsums, which is
+the TPU-native formulation -- no scatter), experts shardable over the mesh
+"expert" logical axis (EP) when E divides the axis, else expert FFNs fall
+back to TP on d_ff (mixtral: 8 experts on a 16-way model axis).
+
+HLO-FLOPs note for §Roofline: capacity routing makes compiled FLOPs
+~ capacity_factor * active-expert FLOPs, not n_experts/top_k of them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import LogicalRules, shard
+
+
+def router_probs(x: jax.Array, w_router: jax.Array, top_k: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Returns (gates (T, k) fp32 renormalized, idx (T, k) int32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def moe_block(
+    x: jax.Array,                 # (B, S, D)
+    p: dict,                      # w_router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D)
+    top_k: int,
+    act: str = "silu",
+    capacity_factor: float = 1.25,
+    rules: Optional[LogicalRules] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar fp32)."""
+    from .layers import _activate
+
+    B, S, D = x.shape
+    E = p["w_router"].shape[-1]
+    T = B * S
+    xt = x.reshape(T, D)
+    gates, idx = router_probs(xt, p["w_router"], top_k)        # (T,k)
+
+    cap = int(max(top_k * capacity_factor * ((T + E - 1) // E), 1))
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)           # (T,k,E)
+    flat = onehot.reshape(T * top_k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(T, top_k, E)
+    pos_in_expert = jnp.sum(pos_in_expert * onehot, axis=-1)   # (T,k)
+    keep = pos_in_expert < cap                                  # drop overflow
+    gates = gates * keep.astype(gates.dtype)
+
+    # dispatch tensor (T, E, cap) -- one-hot matmul formulation
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos_in_expert, cap), cap + 1,
+                             dtype=x.dtype)[..., :cap]          # (T,k,cap)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), slot_oh)
+    combine = jnp.einsum("tk,tke,tkc->tec", gates.astype(x.dtype),
+                         onehot.astype(x.dtype), slot_oh)
+
+    ex_in = jnp.einsum("tec,td->ecd", dispatch, xt)             # (E,cap,D)
+    ex_in = shard(ex_in, rules, "expert", None, None)
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", ex_in, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", ex_in, p["w_up"].astype(x.dtype))
+        h = _activate(g, act) * u
+    else:
+        h = _activate(jnp.einsum("ecd,edf->ecf", ex_in,
+                                 p["w_up"].astype(x.dtype)), act)
+    h = shard(h, rules, "expert", None, "tp")
+    ex_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    ex_out = shard(ex_out, rules, "expert", None, None)
+    out = jnp.einsum("tec,ecd->td", combine, ex_out).reshape(B, S, D)
+    out = shard(out, rules, "batch", None, None)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(onehot.sum(1).astype(jnp.float32), axis=0)   # fraction routed
+    pe = jnp.mean(jax.nn.softmax(jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32),
+        p["w_router"].astype(jnp.float32)), axis=-1), axis=0)
+    aux = E * jnp.sum(me * pe) / top_k
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Production path: expert-parallel MoE via shard_map (sort+gather routing)
+# ---------------------------------------------------------------------------
+#
+# The capacity-einsum dispatch above is the *reference*: its one-hot matmuls
+# are O(tokens x E x capacity) -- measured at ~670x the active-expert FLOPs
+# for qwen3 -- fine for tiny tests, unusable at scale.  The production path
+# routes with sort + gather (zero-FLOP dispatch, local to each device) and
+# moves tokens with all_to_all over the model axis when experts divide it
+# (EP: qwen3 128e, jamba 16e), falling back to tensor-parallel expert FFNs +
+# psum when they do not (mixtral 8e on a 16-way axis).  ZeRO-3 weight
+# gathers are explicit all_gathers inside the shard_map.
+
+def _local_route(xt, gates, idx, E: int, capacity: int):
+    """Sort+gather dispatch on one device's tokens.
+    xt: (T, D); gates/idx: (T, K).  Returns (disp (E, C, D), combine info)."""
+    T, D = xt.shape
+    K = idx.shape[1]
+    flat_e = idx.reshape(-1)                          # (T*K,)
+    order = jnp.argsort(flat_e)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    # slot -> sorted position -> (token, k) pair
+    src = starts[:, None] + jnp.arange(capacity)[None, :]         # (E, C)
+    valid = jnp.arange(capacity)[None, :] < jnp.minimum(counts, capacity)[:, None]
+    pair = order[jnp.clip(src, 0, T * K - 1)]                     # (E, C)
+    disp = xt[pair // K] * valid[..., None].astype(xt.dtype)      # (E, C, D)
+    # combine side: position of each pair within its expert run
+    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(jnp.arange(T * K))
+    c_of_pair = inv - starts[flat_e]                              # (T*K,)
+    in_cap = c_of_pair < capacity
+    return disp, (flat_e, jnp.clip(c_of_pair, 0, capacity - 1), in_cap)
+
+
+def _combine(expert_out, combine_info, gates, T: int, K: int):
+    """expert_out: (E, C, D) -> (T, D) gate-weighted sum."""
+    flat_e, c_of_pair, in_cap = combine_info
+    picked = expert_out[flat_e, c_of_pair]                        # (T*K, D)
+    picked = picked * in_cap[:, None].astype(picked.dtype)
+    picked = picked.reshape(T, K, -1)
+    return jnp.einsum("tk,tkd->td", gates.astype(picked.dtype), picked)
+
+
+def moe_block_sharded(
+    x: jax.Array,                 # (B, S, D)
+    p: dict,
+    cfg,                          # ModelConfig
+    rules: Optional[LogicalRules],
+) -> tuple[jax.Array, jax.Array]:
+    """EP/TP MoE over the mesh; falls back to moe_block without one."""
+    if rules is None or rules.mesh is None:
+        return moe_block(x, p, cfg.top_k, cfg.mlp_act, cfg.capacity_factor,
+                         rules)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+    E, K, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    ep = "model" in mesh.axis_names and E % model_n == 0 and model_n > 1
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    B, S, D = x.shape
+    if ep:
+        # EP: every rank routes its own (seq-sharded) tokens; experts move.
+        x_spec = rules.spec_for_shape(("batch", "act_seq", None), (B, S, D))
+    else:
+        # expert-TP fallback: all model ranks must hold the SAME tokens --
+        # each computes an F-slice of every local token and the partial
+        # D-outputs are psum'ed (Megatron row/column split).  Seq-sharding
+        # over model here would sum partials of DIFFERENT tokens.
+        x_spec = rules.spec_for_shape(("batch", None, None), (B, S, D))
+    def pspec(lg, shape):
+        return rules.spec_for_shape(lg, tuple(shape))
+
+    gated = "w_gate" in p
+    w_specs = {k: pspec(lg, p[k].shape) for k, lg in {
+        "w_router": (None, None),
+        "w_up": ("expert", "fsdp", "tp"),
+        "w_down": ("expert", "tp", "fsdp"),
+        **({"w_gate": ("expert", "fsdp", "tp")} if gated else {}),
+    }.items()}
+
+    # local token count (static): product of unsharded extents
+    def _local(n, entry):
+        sz = 1
+        for a in (entry if isinstance(entry, tuple) else (entry,)) if entry else ():
+            sz *= axis_sizes[a]
+        return n // sz
+    Bl = _local(B, x_spec[0] if len(x_spec) > 0 else None)
+    Sl = _local(S, x_spec[1] if len(x_spec) > 1 else None)
+    Tl = Bl * Sl
+    C = max(min(int(-(-Tl * K * cf // E)), Tl * K), 4)
+
+    # which (weight, dim) keeps its model-axis shard inside the body:
+    #   EP:        the expert dim (dim 0) -- experts live on their rank
+    #   expert-TP: the F dims (w_up/w_gate dim 2, w_down dim 1) -- partial
+    #              outputs are psum'ed
+    def _axes_of(spec, i):
+        e = spec[i] if i < len(spec) else None
+        return (e,) if isinstance(e, str) else tuple(e or ())
+
+    tp_f = (not ep) and "model" in _axes_of(w_specs["w_down"], 1)
+
+    def _keep(name: str, dim: int, axis: str) -> bool:
+        if axis != "model":
+            return False
+        if ep and dim == 0:
+            return True
+        if tp_f and ((name in ("w_up", "w_gate") and dim == 2)
+                     or (name == "w_down" and dim == 1)):
+            return True
+        return False
+
+    def gathered(w, name, spec):
+        """ZeRO-3 gather inside the shard_map: reassemble every sharded dim
+        except the ones the algorithm keeps distributed (see _keep)."""
+        for axis_i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if not _keep(name, axis_i, a):
+                    w = jax.lax.all_gather(w, a, axis=axis_i, tiled=True)
+        return w
+
+    def body(xl, w_router, w_up, w_down, *rest):
+        w_gate = rest[0] if gated else None
+        w_up = gathered(w_up, "w_up", w_specs["w_up"])
+        w_down = gathered(w_down, "w_down", w_specs["w_down"])
+        if gated:
+            w_gate = gathered(w_gate, "w_gate", w_specs["w_gate"])
+        bl, sl, d = xl.shape
+        xt = xl.reshape(bl * sl, d)
+        gates, idx = router_probs(xt, w_router, K)
+        disp, info = _local_route(xt, gates.astype(xt.dtype), idx, E, C)
+        if ep:
+            # EP: split experts across the model axis, concat capacity
+            disp = jax.lax.all_to_all(disp, "model", split_axis=0,
+                                      concat_axis=1, tiled=True)
+        from .layers import _activate
+        if gated:
+            h = _activate(jnp.einsum("ecd,edf->ecf", disp, w_gate.astype(xt.dtype)),
+                          cfg.mlp_act) * jnp.einsum("ecd,edf->ecf", disp,
+                                                    w_up.astype(xt.dtype))
+        else:
+            h = _activate(jnp.einsum("ecd,edf->ecf", disp,
+                                     w_up.astype(xt.dtype)), cfg.mlp_act)
+        out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xt.dtype))
+        if ep:
+            out = jax.lax.all_to_all(out, "model", split_axis=1,
+                                     concat_axis=0, tiled=True)
+        elif tp_f:
+            # expert-TP fallback: partial sums over the f-sharded dim
+            out = jax.lax.psum(out, "model")
+        y = _combine(out, info, gates, bl * sl, K).reshape(bl, sl, d)
+        # Switch aux loss from local stats, averaged over the mesh
+        me = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)
+        pe = jnp.mean(jax.nn.softmax(jnp.einsum(
+            "td,de->te", xt.astype(jnp.float32),
+            w_router.astype(jnp.float32)), axis=-1), axis=0)
+        aux = E * jnp.sum(me * pe) / K
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return y, aux
+
+    args = [x, p["w_router"], p["w_up"], p["w_down"]]
+    in_specs = [x_spec, w_specs["w_router"], w_specs["w_up"], w_specs["w_down"]]
+    if gated:
+        args.append(p["w_gate"])
+        in_specs.append(w_specs["w_gate"])
+    y, aux = shard_map(
+        body, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(x_spec, P()), check_rep=False,
+    )(*args)
+    return y, aux
+
+
+def moe_param_shapes(d_model: int, d_ff: int, n_experts: int,
+                     gated: bool) -> dict[str, tuple[tuple[int, ...], tuple]]:
+    """shape + logical axes for one MoE layer (leading layer-stack dim is
+    added by the caller)."""
+    shapes = {
+        "w_router": ((d_model, n_experts), (None, None)),
+        "w_up": ((n_experts, d_model, d_ff), ("expert", "fsdp", "tp")),
+        "w_down": ((n_experts, d_ff, d_model), ("expert", "tp", "fsdp")),
+    }
+    if gated:
+        shapes["w_gate"] = ((n_experts, d_model, d_ff), ("expert", "fsdp", "tp"))
+    return shapes

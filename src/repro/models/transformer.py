@@ -1,0 +1,520 @@
+"""Patterned decoder (all LM-family archs) + encoder-decoder (whisper).
+
+Parameters are explicit nested dicts; per-block params are stacked with a
+leading n_blocks dim and consumed by lax.scan, so the traced program is one
+block long regardless of depth (essential for the 1-core dry-run compiles).
+Each leaf has a parallel *logical axis* tuple used by repro.parallel.sharding
+to derive pjit shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import LogicalRules, shard, shard_tree
+from . import layers as L
+from .config import LayerSpec, ModelConfig
+from .mamba import mamba_block, mamba_decode, mamba_param_shapes
+from .moe import moe_block_sharded, moe_param_shapes
+
+
+class ParamDef(NamedTuple):
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    dtype: str = "param"      # param (cfg.dtype) | float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "wq": ParamDef((D, H, dh), ("fsdp", "tp", None)),
+        "wk": ParamDef((D, KV, dh), ("fsdp", "tp", None)),
+        "wv": ParamDef((D, KV, dh), ("fsdp", "tp", None)),
+        "wo": ParamDef((H, dh, D), ("tp", None, "fsdp")),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": ParamDef((D, F), ("fsdp", "tp")),
+        "w_down": ParamDef((F, D), ("tp", "fsdp")),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((D, F), ("fsdp", "tp"))
+    return defs
+
+
+def _norm_defs(cfg: ModelConfig, name: str) -> dict[str, ParamDef]:
+    D = cfg.d_model
+    if cfg.norm == "layer":
+        return {f"{name}_scale": ParamDef((D,), (None,), "ones", "float32"),
+                f"{name}_bias": ParamDef((D,), (None,), "zeros", "float32")}
+    init = "zeros" if cfg.rms_plus_one else "ones"
+    return {f"{name}_scale": ParamDef((D,), (None,), init, "float32")}
+
+
+def _sub_defs(cfg: ModelConfig, spec: LayerSpec) -> dict[str, Any]:
+    defs: dict[str, Any] = {}
+    defs.update(_norm_defs(cfg, "ln1"))
+    if spec.kind == "attn":
+        defs.update(_attn_defs(cfg))
+    else:
+        for k, (shape, logical) in mamba_param_shapes(
+                cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                cfg.dt_rank).items():
+            dt = "float32" if k in ("A_log", "D", "dt_bias", "conv_b") else "param"
+            defs[k] = ParamDef(shape, logical, "normal" if k not in
+                               ("dt_bias", "conv_b", "D") else "zeros", dt)
+    if cfg.post_norms:
+        defs.update(_norm_defs(cfg, "post_ln1"))
+    if spec.mlp == "dense":
+        defs.update(_norm_defs(cfg, "ln2"))
+        defs.update(_mlp_defs(cfg))
+    elif spec.mlp == "moe":
+        defs.update(_norm_defs(cfg, "ln2"))
+        for k, (shape, logical) in moe_param_shapes(
+                cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.gated_mlp).items():
+            defs[k] = ParamDef(shape, logical,
+                               dtype="float32" if k == "w_router" else "param")
+    if cfg.post_norms and spec.mlp != "none":
+        defs.update(_norm_defs(cfg, "post_ln2"))
+    return defs
+
+
+def _stack(defs: dict[str, ParamDef], n: int) -> dict[str, ParamDef]:
+    return {k: ParamDef((n,) + d.shape, ("layers",) + d.logical, d.init, d.dtype)
+            for k, d in defs.items()}
+
+
+def param_defs(cfg: ModelConfig) -> dict[str, Any]:
+    V, D = cfg.vocab_size, cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("tp", "fsdp")),
+        "blocks": {f"sub{i}": _stack(_sub_defs(cfg, spec), cfg.n_blocks)
+                   for i, spec in enumerate(cfg.pattern)},
+    }
+    defs.update(_norm_defs(cfg, "final"))
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((V, D), ("tp", "fsdp"))
+    if not cfg.use_rope and cfg.max_learned_pos > 0:
+        defs["pos_embed"] = ParamDef((cfg.max_learned_pos, D), (None, "fsdp"))
+    if cfg.is_encdec:
+        enc_sub = {}
+        enc_sub.update(_norm_defs(cfg, "ln1"))
+        enc_sub.update(_attn_defs(cfg))
+        enc_sub.update(_norm_defs(cfg, "ln2"))
+        enc_sub.update(_mlp_defs(cfg))
+        defs["encoder"] = {"sub0": _stack(enc_sub, cfg.enc_layers)}
+        defs.update({f"enc_{k}": v for k, v in _norm_defs(cfg, "final").items()})
+        cross = {}
+        cross.update(_norm_defs(cfg, "ln_x"))
+        cross.update({f"x_{k}": v for k, v in _attn_defs(cfg).items()})
+        defs["cross"] = {"sub0": _stack(cross, cfg.n_layers)}
+    return defs
+
+
+def _materialize(key: jax.Array, d: ParamDef, cfg: ModelConfig) -> jax.Array:
+    dtype = jnp.float32 if d.dtype == "float32" else jnp.dtype(cfg.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(k, d, cfg) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree -- used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, jnp.float32 if d.dtype == "float32" else jnp.dtype(cfg.dtype)),
+        param_defs(cfg), is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_logical(cfg: ModelConfig):
+    return jax.tree.map(lambda d: d.logical, param_defs(cfg),
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, x, p, name):
+    if cfg.norm == "layer":
+        return L.layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"])
+    return L.rms_norm(x, p[f"{name}_scale"], plus_one=cfg.rms_plus_one)
+
+
+def _variant(cfg: ModelConfig, spec: LayerSpec, causal: bool = True) -> L.AttnVariant:
+    return L.AttnVariant(kind=spec.attn, window=cfg.window,
+                         softcap=cfg.attn_softcap, causal=causal)
+
+
+def _apply_sub(cfg: ModelConfig, spec: LayerSpec, x, p, positions, rules,
+               causal: bool = True):
+    """One sub-layer (token-mixer + channel-mixer) with residuals.
+    Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, x, p, "ln1")
+    if spec.kind == "attn":
+        h = L.attention_block(h, p, positions, _variant(cfg, spec, causal),
+                              cfg.rope_theta, rules, use_rope=cfg.use_rope,
+                              impl=cfg.attn_impl)
+    else:
+        h = mamba_block(h, p, rules, use_kernel=cfg.use_mamba_kernel,
+                        chunk=cfg.ssm_chunk)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p, "post_ln1")
+    x = x + h
+    if spec.mlp != "none":
+        h = _norm(cfg, x, p, "ln2")
+        if spec.mlp == "moe":
+            h, aux = moe_block_sharded(h, p, cfg, rules)
+        else:
+            h = L.mlp_block(h, p, cfg.mlp_act, rules)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p, "post_ln2")
+        x = x + h
+    return x, aux
+
+
+def _block_fn(cfg: ModelConfig, rules, positions, causal=True):
+    def fn(x, block_params):
+        # barrier INSIDE the checkpointed fn: stops convert-hoisting of the
+        # saved carry stack in the backward pass as well as the forward
+        x = jax.lax.optimization_barrier(x)
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.pattern):
+            x, aux = _apply_sub(cfg, spec, x, block_params[f"sub{i}"],
+                                positions, rules, causal)
+            aux_total = aux_total + aux
+        # sequence-parallel residual: the scan carry (what bwd must save)
+        # is sharded over the model axis along seq (rules: "act_seq")
+        x = shard(x, rules, "batch", "act_seq", None)
+        return x, aux_total
+    return fn
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _block_logical(cfg: ModelConfig, sub_defs: dict) -> dict:
+    """Per-block logical axes (the stacked "layers" dim stripped)."""
+    return jax.tree.map(lambda d: d.logical[1:], sub_defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _scan_blocks(cfg: ModelConfig, x, blocks, rules, positions, causal=True):
+    fn = _remat(cfg, _block_fn(cfg, rules, positions, causal))
+    blocks_lg = {f"sub{i}": _block_logical(cfg, _stack(_sub_defs(cfg, spec),
+                                                       cfg.n_blocks))
+                 for i, spec in enumerate(cfg.pattern)}
+
+    def step(carry, block_params):
+        # pin per-layer param sharding inside the loop (ZeRO-3 gather point;
+        # the transpose of this constraint shards the grad stacks)
+        block_params = shard_tree(block_params, rules, blocks_lg)
+        y, aux = fn(carry, block_params)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, blocks, unroll=cfg.scan_unroll)
+    return x, jnp.sum(auxs)
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: dict,
+                 rules: Optional[LogicalRules] = None) -> jax.Array:
+    """tokens (+ stub frontend embeddings) -> (B, S, D) residual stream."""
+    if "inputs_embeds" in batch:
+        x = batch["inputs_embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = L.embed(batch["tokens"], params["embed"], rules, cfg.embed_scale)
+        if "image_embeds" in batch:
+            x = jax.lax.dynamic_update_slice(
+                x, batch["image_embeds"].astype(x.dtype),
+                (0, cfg.frontend_offset, 0))
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][: x.shape[1]][None].astype(x.dtype)
+    return x
+
+
+def forward_lm(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,                      # (B, S) int32
+    rules: Optional[LogicalRules] = None,
+    image_embeds: Optional[jax.Array] = None,   # (B, T_img, D) vlm stub
+    inputs_embeds: Optional[jax.Array] = None,  # (B, S, D) audio-enc stub
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V) fp32, moe_aux scalar)."""
+    batch = {"tokens": tokens}
+    if image_embeds is not None:
+        batch["image_embeds"] = image_embeds
+    if inputs_embeds is not None:
+        batch["inputs_embeds"] = inputs_embeds
+    x = embed_inputs(cfg, params, batch, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux = _scan_blocks(cfg, x, params["blocks"], rules, positions)
+    x = _norm(cfg, x, params, "final")
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table, cfg.final_softcap, rules)
+    return logits, aux
+
+
+def forward_lm_hidden(cfg: ModelConfig, params, batch: dict,
+                      rules: Optional[LogicalRules] = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Forward up to the final norm (no unembed) -- the chunked-loss path."""
+    x = embed_inputs(cfg, params, batch, rules)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = _scan_blocks(cfg, x, params["blocks"], rules, positions)
+    return _norm(cfg, x, params, "final"), aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper): frontend is a stub -- encoder consumes
+# precomputed frame embeddings from input_specs().
+# ---------------------------------------------------------------------------
+
+def forward_encdec(
+    cfg: ModelConfig,
+    params,
+    frame_embeds: jax.Array,               # (B, S_enc, D)
+    dec_tokens: jax.Array,                 # (B, S_dec)
+    rules: Optional[LogicalRules] = None,
+) -> tuple[jax.Array, jax.Array]:
+    enc = encode(cfg, params, frame_embeds, rules)
+    return decode_train(cfg, params, enc, dec_tokens, rules)
+
+
+def encode(cfg: ModelConfig, params, frame_embeds, rules=None) -> jax.Array:
+    x = frame_embeds.astype(jnp.dtype(cfg.dtype))
+    S = x.shape[1]
+    pos = _sinusoid(S, cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _ = _scan_blocks(cfg.with_(pattern=(LayerSpec(kind="attn", attn="full",
+                                                     mlp="dense"),),
+                                  n_layers=cfg.enc_layers),
+                        x, params["encoder"], rules, positions, causal=False)
+    return _norm(cfg, x, params, "enc_final")
+
+
+def decode_train(cfg: ModelConfig, params, enc, dec_tokens, rules=None):
+    x = L.embed(dec_tokens, params["embed"], rules, cfg.embed_scale)
+    S = x.shape[1]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][:S][None].astype(x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def block(carry, ps):
+        # whisper ordering: self-attn -> cross-attn -> mlp
+        self_p, cross_p = ps
+        x = carry
+        h = _norm(cfg, x, self_p, "ln1")
+        h = L.attention_block(h, self_p, positions,
+                              _variant(cfg, cfg.pattern[0]), cfg.rope_theta,
+                              rules, use_rope=cfg.use_rope,
+                              impl=cfg.attn_impl)
+        x = x + h
+        hx = _norm(cfg, x, cross_p, "ln_x")
+        xp = {k[2:]: v for k, v in cross_p.items() if k.startswith("x_")}
+        x = x + L.cross_attention_block(hx, enc, xp, rules)
+        h = _norm(cfg, x, self_p, "ln2")
+        x = x + L.mlp_block(h, self_p, cfg.mlp_act, rules)
+        return x, jnp.zeros((), jnp.float32)
+
+    blocks = (params["blocks"]["sub0"], params["cross"]["sub0"])
+    x, auxs = jax.lax.scan(_remat(cfg, block), x, blocks,
+                           unroll=cfg.scan_unroll)
+    x = _norm(cfg, x, params, "final")
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.final_softcap, rules), jnp.sum(auxs)
+
+
+def forward_encdec_hidden(cfg: ModelConfig, params, frame_embeds, dec_tokens,
+                          rules: Optional[LogicalRules] = None):
+    """Enc-dec forward up to the decoder's final norm (chunked-loss path).
+    Mirrors decode_train but stops before unembed."""
+    enc = encode(cfg, params, frame_embeds, rules)
+    x = L.embed(dec_tokens, params["embed"], rules, cfg.embed_scale)
+    S = x.shape[1]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][:S][None].astype(x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def block(carry, ps):
+        self_p, cross_p = ps
+        x = carry
+        h = _norm(cfg, x, self_p, "ln1")
+        h = L.attention_block(h, self_p, positions,
+                              _variant(cfg, cfg.pattern[0]), cfg.rope_theta,
+                              rules, use_rope=cfg.use_rope,
+                              impl=cfg.attn_impl)
+        x = x + h
+        hx = _norm(cfg, x, cross_p, "ln_x")
+        xp = {k[2:]: v for k, v in cross_p.items() if k.startswith("x_")}
+        x = x + L.cross_attention_block(hx, enc, xp, rules)
+        h = _norm(cfg, x, self_p, "ln2")
+        x = x + L.mlp_block(h, self_p, cfg.mlp_act, rules)
+        return x, jnp.zeros((), jnp.float32)
+
+    blocks = (params["blocks"]["sub0"], params["cross"]["sub0"])
+    x, auxs = jax.lax.scan(_remat(cfg, block), x, blocks,
+                           unroll=cfg.scan_unroll)
+    return _norm(cfg, x, params, "final"), jnp.sum(auxs)
+
+
+def _sinusoid(S: int, D: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None]
+    angle = pos / jnp.power(10_000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype: Optional[str] = None):
+    """Abstract-friendly cache pytree. Leading dim of every leaf: n_blocks."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    nb, KV, dh = cfg.n_blocks, cfg.n_kv_heads, cfg.head_dim_
+    cache: dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            Sc = cfg.kv_cache_len(spec, seq_len)
+            cache[f"sub{i}"] = {
+                "k": jnp.zeros((nb, batch, Sc, KV, dh), dt),
+                "v": jnp.zeros((nb, batch, Sc, KV, dh), dt),
+            }
+        else:
+            I, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+            cache[f"sub{i}"] = {
+                "conv": jnp.zeros((nb, batch, K - 1, I), dt),
+                "ssm": jnp.zeros((nb, batch, I, N), jnp.float32),
+            }
+    return cache
+
+
+def cache_logical(cfg: ModelConfig):
+    """Logical axes tree matching init_cache output."""
+    out: dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            out[f"sub{i}"] = {"k": (None, "batch", "kv_seq", None, None),
+                              "v": (None, "batch", "kv_seq", None, None)}
+        else:
+            out[f"sub{i}"] = {"conv": (None, "batch", None, "tp"),
+                              "ssm": (None, "batch", "tp", None)}
+    return out
+
+
+def decode_step_lm(
+    cfg: ModelConfig,
+    params,
+    cache,
+    token: jax.Array,        # (B, 1) int32
+    pos: jax.Array,          # scalar int32 -- absolute position
+    rules: Optional[LogicalRules] = None,
+) -> tuple[jax.Array, Any]:
+    """One-token serve step: returns (logits (B,1,V), new cache)."""
+    x = L.embed(token, params["embed"], rules, cfg.embed_scale)
+    if "pos_embed" in params:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+
+    def block(carry, scanned):
+        block_params, block_cache = scanned
+        x = carry
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            p = block_params[f"sub{i}"]
+            c = block_cache[f"sub{i}"]
+            h = _norm(cfg, x, p, "ln1")
+            if spec.kind == "attn":
+                h, ck, cv = L.attention_decode(
+                    h, p, c["k"], c["v"], pos, _variant(cfg, spec),
+                    cfg.rope_theta, use_rope=cfg.use_rope)
+                new_cache[f"sub{i}"] = {"k": ck, "v": cv}
+            else:
+                h, conv, ssm = mamba_decode(h, p, c["conv"], c["ssm"])
+                new_cache[f"sub{i}"] = {"conv": conv, "ssm": ssm}
+            if cfg.post_norms:
+                h = _norm(cfg, h, p, "post_ln1")
+            x = x + h
+            if spec.mlp != "none":
+                h = _norm(cfg, x, p, "ln2")
+                if spec.mlp == "moe":
+                    h, _ = moe_block_sharded(h, p, cfg, rules)
+                else:
+                    h = L.mlp_block(h, p, cfg.mlp_act, rules)
+                if cfg.post_norms:
+                    h = _norm(cfg, h, p, "post_ln2")
+                x = x + h
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(block, x, (params["blocks"], cache),
+                                unroll=cfg.scan_unroll)
+    x = _norm(cfg, x, params, "final")
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table, cfg.final_softcap, rules)
+    return logits, new_cache
+
+
+def decode_step_encdec(cfg: ModelConfig, params, cache, enc: jax.Array,
+                       token: jax.Array, pos: jax.Array,
+                       rules: Optional[LogicalRules] = None):
+    """Whisper decode: self-attn cache + cross-attn against enc output."""
+    x = L.embed(token, params["embed"], rules, cfg.embed_scale)
+    if "pos_embed" in params:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+
+    def block(carry, scanned):
+        (self_p, cross_p), block_cache = scanned
+        x = carry
+        c = block_cache["sub0"]
+        h = _norm(cfg, x, self_p, "ln1")
+        h, ck, cv = L.attention_decode(h, self_p, c["k"], c["v"], pos,
+                                       _variant(cfg, cfg.pattern[0]),
+                                       cfg.rope_theta, use_rope=cfg.use_rope)
+        x = x + h
+        hx = _norm(cfg, x, cross_p, "ln_x")
+        xp = {k[2:]: v for k, v in cross_p.items() if k.startswith("x_")}
+        x = x + L.cross_attention_block(hx, enc, xp, rules)
+        h = _norm(cfg, x, self_p, "ln2")
+        x = x + L.mlp_block(h, self_p, cfg.mlp_act, rules)
+        return x, {"sub0": {"k": ck, "v": cv}}
+
+    scanned = ((params["blocks"]["sub0"], params["cross"]["sub0"]), cache)
+    x, new_cache = jax.lax.scan(block, x, scanned, unroll=cfg.scan_unroll)
+    x = _norm(cfg, x, params, "final")
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.final_softcap, rules), new_cache

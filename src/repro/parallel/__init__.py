@@ -1,0 +1,11 @@
+from .sharding import LogicalRules, logical_to_spec, shard, make_rules
+from .mesh import make_production_mesh, make_local_mesh
+
+__all__ = [
+    "LogicalRules",
+    "logical_to_spec",
+    "make_local_mesh",
+    "make_production_mesh",
+    "make_rules",
+    "shard",
+]

@@ -1,0 +1,28 @@
+"""Mesh construction helpers (see also repro.launch.mesh for the production
+entry point; this module is importable without touching jax device state)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The production mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    NOTE: building this requires 256/512 visible devices.  The dry-run
+    launcher sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+    *before any jax import*; nothing else in the framework should."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Optional[Mesh]:
+    """Best-effort small mesh over the locally visible devices (CPU tests).
+    Returns None when the device count does not cover the request."""
+    n = len(jax.devices())
+    if data * model > n:
+        return None
+    return jax.make_mesh((data, model), ("data", "model"))

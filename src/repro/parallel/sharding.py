@@ -1,0 +1,197 @@
+"""Logical-axis sharding (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Every parameter and key activation in repro.models carries a tuple of
+*logical* axis names.  A :class:`LogicalRules` maps logical names to physical
+mesh axes; models call :func:`shard` to attach constraints and the launcher
+builds pjit in/out shardings from the same rules, so changing the parallelism
+layout is a rules edit, not a model edit.  This is also the lever the §Perf
+hillclimbing turns.
+
+Default layout (see DESIGN.md §5):
+  batch    -> ("pod", "data")      data parallel across pods and hosts
+  fsdp     -> ("pod", "data")      ZeRO-3 weight sharding on the largest
+                                   non-TP dim of every stacked parameter
+  tp       -> ("model",)           tensor parallel: heads / mlp / vocab
+  expert   -> ("model",)           expert parallel (when E % model == 0)
+  seq      -> ("model",)           sequence parallel for long-context
+  (anything unmapped replicates)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class LogicalRules:
+    """logical axis name -> tuple of mesh axes (or () to replicate)."""
+
+    rules: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+
+    def spec_for(self, logical: tuple[Optional[str], ...]) -> P:
+        phys: list = []
+        used: set[str] = set()
+        for name in logical:
+            if name is None:
+                phys.append(None)
+                continue
+            axes = tuple(a for a in self.rules.get(name, ()) if a not in used)
+            used.update(axes)
+            if len(axes) == 0:
+                phys.append(None)
+            elif len(axes) == 1:
+                phys.append(axes[0])
+            else:
+                phys.append(axes)
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+    def spec_for_shape(self, logical: tuple[Optional[str], ...],
+                       shape: tuple[int, ...]) -> P:
+        """Shape-aware spec: an axis is claimed only if it both (a) is not
+        already used by an earlier dim and (b) divides the dim.  Doing the
+        dedup and the divisibility check TOGETHER matters: mixtral's
+        8-expert dim must not consume the 16-way model axis it cannot use
+        (that would leave d_ff unsharded => 85 GB/dev optimizer args,
+        measured).  This is the single source of truth for all shardings."""
+        if self.mesh is None:
+            return P()
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        phys: list = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            if name is None or i >= len(shape):
+                phys.append(None)
+                continue
+            kept: list[str] = []
+            denom = 1
+            for a in self.rules.get(name, ()):
+                if a in used:
+                    continue
+                if shape[i] % (denom * sizes[a]) == 0:
+                    kept.append(a)
+                    used.add(a)
+                    denom *= sizes[a]
+            phys.append(tuple(kept) if len(kept) > 1
+                        else (kept[0] if kept else None))
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+    def sharding_for(self, logical: tuple[Optional[str], ...]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(logical))
+
+
+def make_rules(
+    mesh: Optional[Mesh] = None,
+    *,
+    fsdp: bool = True,
+    expert_parallel: bool = True,
+    sequence_parallel: bool = False,
+    extra: Optional[dict[str, tuple[str, ...]]] = None,
+) -> LogicalRules:
+    """Build the default rule set for a mesh with axes from
+    {("data","model") | ("pod","data","model")} (launch.mesh produces these).
+    With mesh=None returns no-op rules (single-device smoke tests)."""
+    if mesh is None:
+        return LogicalRules({}, None)
+    axes = mesh.axis_names
+    dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    tp: tuple[str, ...] = ("model",) if "model" in axes else ()
+    rules: dict[str, tuple[str, ...]] = {
+        "batch": dp,
+        "fsdp": dp if fsdp else (),
+        "tp": tp,
+        # "prefer TP, fall back to ZeRO": params whose natural shard dim is
+        # the TP one (mamba's d_inner) still get sharded when tp is off
+        "tp_fsdp": tp + (dp if fsdp else ()),
+        "expert": tp if expert_parallel else (),
+        "seq": tp if sequence_parallel else (),
+        "kv_seq": tp if sequence_parallel else (),
+    }
+    if extra:
+        rules.update(extra)
+    return LogicalRules(rules, mesh)
+
+
+def _is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def logical_to_spec(rules: LogicalRules, logical_tree):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(lambda lg: rules.spec_for(lg), logical_tree,
+                        is_leaf=_is_logical)
+
+
+def _guard_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop mesh axes that do not divide their dim (e.g. whisper's 51865
+    vocab on a 16-way model axis, or mixtral's 8 experts => automatic
+    EP->TP fallback; see DESIGN.md §5)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out: list = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if entry is None else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept: list[str] = []
+        denom = 1
+        for a in axes:
+            if shape[i] % (denom * sizes[a]) == 0:
+                kept.append(a)
+                denom *= sizes[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_shardings(rules: LogicalRules, logical_tree, abstract_tree):
+    """NamedShardings for a pytree, with divisibility-guarded specs.
+    abstract_tree supplies shapes (arrays or ShapeDtypeStructs)."""
+    assert rules.mesh is not None
+
+    def one(lg, ab):
+        return NamedSharding(rules.mesh,
+                             rules.spec_for_shape(lg, tuple(ab.shape)))
+
+    flat_lg, treedef = jax.tree.flatten(logical_tree, is_leaf=_is_logical)
+    flat_ab = treedef.flatten_up_to(abstract_tree)
+    return treedef.unflatten([one(lg, ab) for lg, ab in zip(flat_lg, flat_ab)])
+
+
+def shard_tree(tree, rules: Optional[LogicalRules], logical_tree):
+    """with_sharding_constraint over a pytree (guarded).  Used inside the
+    layer scan: constraining the per-block param slices pins their sharding
+    through the while loop, and the constraint's transpose shards the
+    stacked gradient accumulators too (without this, SPMD propagation
+    materializes full-size f32 grad/optimizer stacks -- measured)."""
+    if rules is None or rules.mesh is None:
+        return tree
+    flat_lg, treedef = jax.tree.flatten(logical_tree, is_leaf=_is_logical)
+    flat_x = treedef.flatten_up_to(tree)
+    out = []
+    for lg, x in zip(flat_lg, flat_x):
+        spec = rules.spec_for_shape(lg, tuple(x.shape))
+        out.append(jax.lax.with_sharding_constraint(
+            x, NamedSharding(rules.mesh, spec)))
+    return treedef.unflatten(out)
+
+
+def shard(x: jax.Array, rules: Optional[LogicalRules], *logical: Optional[str]):
+    """Attach a sharding constraint (no-op without a mesh; divisibility-
+    guarded so model code never has to special-case axis sizes)."""
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec_for_shape(tuple(logical), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

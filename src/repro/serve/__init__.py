@@ -1,0 +1,6 @@
+from .engine import Request, ServeEngine
+from .kvcache import kv_bytes_per_token, prefix_chain, prefix_oid
+from .router import PrefixAwareRouter, RouteResult
+
+__all__ = ["PrefixAwareRouter", "Request", "RouteResult", "ServeEngine",
+           "kv_bytes_per_token", "prefix_chain", "prefix_oid"]

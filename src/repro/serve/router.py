@@ -1,0 +1,121 @@
+"""Prefix-cache-aware request routing = the paper's data-aware scheduling
+applied to serving replicas.
+
+Mapping (DESIGN.md §2): replica == executor, cached prefix KV == cached
+file, request == task whose inputs are the block-aligned prefixes of its
+prompt.  The four dispatch policies transfer verbatim:
+
+  first-available       round-robin-ish, no prefix reuse information
+  first-cache-available route anywhere but ship prefix locations (replica
+                        may pull KV from a peer replica)
+  max-cache-hit         wait for the replica with the longest cached prefix
+  max-compute-util      among FREE replicas pick the longest cached prefix
+                        (modern prefix-aware load balancing)
+
+The router scores by *bytes of KV reused* because the Dispatcher's
+max-policies weight hints by object size -- longer prefixes win, exactly
+like larger files did in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.cache import EvictionPolicy, ExecutorCache
+from repro.core.index import LocationIndex
+from repro.core.objects import DataObject, Task
+from repro.core.policies import DispatchPolicy, decide
+from .kvcache import prefix_chain, prefix_oid
+
+
+@dataclass
+class ReplicaState:
+    rid: str
+    cache: ExecutorCache
+    busy: int = 0
+    slots: int = 4
+    served: int = 0
+
+    @property
+    def available(self) -> bool:
+        return self.busy < self.slots
+
+
+@dataclass
+class RouteResult:
+    replica: str
+    reused_prefix_tokens: int
+    reused_bytes: int
+    hints: dict[str, tuple[str, ...]] = field(default_factory=dict)
+
+
+class PrefixAwareRouter:
+    def __init__(
+        self,
+        n_replicas: int,
+        policy: DispatchPolicy = DispatchPolicy.MAX_COMPUTE_UTIL,
+        cache_policy: EvictionPolicy = EvictionPolicy.LRU,
+        replica_cache_bytes: int = 1 << 30,
+        kv_bytes_per_token: int = 1 << 12,
+        block: int = 64,
+        slots_per_replica: int = 4,
+    ) -> None:
+        self.policy = policy
+        self.block = block
+        self.kv_bpt = kv_bytes_per_token
+        self.index = LocationIndex()
+        self.replicas: dict[str, ReplicaState] = {}
+        self.sizes: dict[str, int] = {}
+        self._order: list[str] = []
+        for i in range(n_replicas):
+            rid = f"r{i}"
+            self.replicas[rid] = ReplicaState(
+                rid, ExecutorCache(replica_cache_bytes, cache_policy, seed=i),
+                slots=slots_per_replica)
+            self._order.append(rid)
+
+    # ------------------------------------------------------------------
+    def route(self, prompt: Sequence[int]) -> RouteResult:
+        """Pick a replica for a prompt; caller must later call
+        ``complete`` with the same result."""
+        oids = prefix_chain(prompt, self.block)
+        for i, oid in enumerate(oids):
+            self.sizes.setdefault(oid, (i + 1) * self.block * self.kv_bpt)
+        task = Task(inputs=tuple(oids))
+        avail = [r for r in self._order if self.replicas[r].available]
+        busy = [r for r in self._order if not self.replicas[r].available]
+        d = decide(self.policy, task, avail, busy, self.index, self.sizes)
+        rid = d.executor or d.wait_for or (avail[0] if avail else self._order[0])
+        rep = self.replicas[rid]
+        rep.busy += 1
+        # longest cached block-prefix ON the chosen replica
+        reused = 0
+        for i, oid in enumerate(oids):
+            if oid in rep.cache:
+                rep.cache.get(oid)  # recency touch
+                reused = (i + 1) * self.block
+            else:
+                break
+        return RouteResult(replica=rid, reused_prefix_tokens=reused,
+                           reused_bytes=reused * self.kv_bpt, hints=d.hints)
+
+    def complete(self, prompt: Sequence[int], result: RouteResult) -> None:
+        """Request finished: register the full prefix chain in the
+        replica's cache + the central index (loose coherence)."""
+        rep = self.replicas[result.replica]
+        rep.busy = max(rep.busy - 1, 0)
+        rep.served += 1
+        for oid in prefix_chain(prompt, self.block):
+            evicted = rep.cache.put(DataObject(oid, self.sizes[oid]))
+            self.index.insert(oid, rep.rid)
+            for ev in evicted:
+                self.index.remove(ev, rep.rid)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        served = sum(r.served for r in self.replicas.values())
+        return {
+            "served": served,
+            "per_replica": {r.rid: r.served for r in self.replicas.values()},
+            "index_entries": len(self.index),
+        }

@@ -1,0 +1,6 @@
+from .optimizer import Optimizer, TrainState, adamw
+from .schedule import constant, warmup_cosine
+
+__all__ = ["Optimizer", "TrainState", "adamw", "constant", "warmup_cosine"]
+from .checkpoint import CheckpointManager
+from .loop import TrainResult, train

@@ -1,0 +1,114 @@
+"""Optimizers built from scratch (no optax): AdamW and a factored-second-
+moment Adafactor-style variant for memory-tight very-large configs.
+
+State layout mirrors the param tree so the same logical-axis sharding rules
+apply to optimizer state (ZeRO: m/v are sharded exactly like their params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # scalar int32
+    params: PyTree
+    m: PyTree                # first moment (fp32)
+    v: PyTree                # second moment (fp32; factored => tuple leaves)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    factored: bool = False    # Adafactor-style factored v for 2D+ params
+
+    # ------------------------------------------------------------------
+    def init(self, params: PyTree) -> TrainState:
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        v = jax.tree.map(self._init_v, params)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params, m=m, v=v)
+
+    def _init_v(self, p):
+        if self.factored and p.ndim >= 2:
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    # ------------------------------------------------------------------
+    def apply(self, state: TrainState, grads: PyTree) -> TrainState:
+        step = state.step + 1
+        gnorm = _global_norm(grads)
+        scale = jnp.where(gnorm > self.grad_clip,
+                          self.grad_clip / (gnorm + 1e-9), 1.0)
+        lr = self.lr(step)
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            if isinstance(v, tuple):
+                vr = self.b2 * v[0] + (1 - self.b2) * jnp.mean(g * g, axis=-1)
+                vc = self.b2 * v[1] + (1 - self.b2) * jnp.mean(g * g, axis=-2)
+                rmean = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(rmean[..., None], 1e-30)) / bc2
+                new_v = (vr, vc)
+            else:
+                new_v = self.b2 * v + (1 - self.b2) * g * g
+                vhat = new_v / bc2
+            mhat = m / bc1
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m, new_v
+
+        flat_p, tdef = jax.tree.flatten(state.params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return TrainState(step=step, params=new_p, m=new_m, v=new_v)
+
+    # ------------------------------------------------------------------
+    def state_logical(self, params_logical: PyTree) -> "TrainState":
+        """Logical axes for TrainState given the params' logical tree
+        (m like params; factored v drops the last / second-to-last axis)."""
+        def v_logical(lg):
+            if self.factored and len(lg) >= 2:
+                return (lg[:-1], lg[:-2] + lg[-1:])
+            return lg
+        is_lg = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        return TrainState(
+            step=(),
+            params=params_logical,
+            m=params_logical,
+            v=jax.tree.map(v_logical, params_logical, is_leaf=is_lg),
+        )
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw(peak_lr: float = 3e-4, warmup: int = 100, total: int = 10_000,
+          **kw) -> Optimizer:
+    from .schedule import warmup_cosine
+    return Optimizer(lr=warmup_cosine(peak_lr, warmup, total), **kw)

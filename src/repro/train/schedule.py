@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant(value: float):
+    def lr(step):
+        return jnp.full((), value, jnp.float32)
+    return lr

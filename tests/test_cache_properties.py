@@ -1,0 +1,96 @@
+"""Property-based tests for the per-executor cache (paper §3.2.2)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.cache import EvictionPolicy, ExecutorCache
+from repro.core.objects import DataObject
+
+POLICIES = list(EvictionPolicy)
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 30), st.integers(1, 40)),
+        st.tuples(st.just("get"), st.integers(0, 30), st.just(0)),
+        st.tuples(st.just("drop"), st.integers(0, 30), st.just(0)),
+    ),
+    max_size=120,
+)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@settings(max_examples=60, deadline=None)
+@given(script=ops, capacity=st.integers(1, 120))
+def test_cache_invariants(policy, script, capacity):
+    cache = ExecutorCache(capacity, policy, seed=7)
+    sizes = {}
+    for op, oid_i, size in script:
+        oid = f"o{oid_i}"
+        if op == "put":
+            sizes.setdefault(oid, size)
+            cache.put(DataObject(oid, sizes[oid]))
+        elif op == "get":
+            cache.get(oid)
+        else:
+            cache.drop(oid)
+        # INVARIANT: byte accounting exact, never over capacity
+        assert cache.used_bytes == sum(sizes[o] for o in cache.contents())
+        assert cache.used_bytes <= capacity
+    # idempotent re-put of a resident object evicts nothing
+    if cache.contents():
+        o = next(iter(cache.contents()))
+        assert cache.put(DataObject(o, sizes[o])) == []
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_oversized_object_rejected(policy):
+    c = ExecutorCache(10, policy)
+    c.put(DataObject("big", 11))
+    assert "big" not in c
+    assert c.stats.rejected == 1
+
+
+def test_lru_evicts_least_recently_used():
+    c = ExecutorCache(3, EvictionPolicy.LRU)
+    for o in "abc":
+        c.put(DataObject(o, 1))
+    c.get("a")  # freshen a; LRU victim is now b
+    assert c.put(DataObject("d", 1)) == ["b"]
+
+
+def test_fifo_evicts_first_inserted_despite_access():
+    c = ExecutorCache(3, EvictionPolicy.FIFO)
+    for o in "abc":
+        c.put(DataObject(o, 1))
+    c.get("a")  # access must NOT save a under FIFO
+    assert c.put(DataObject("d", 1)) == ["a"]
+
+
+def test_lfu_evicts_least_frequent_with_fifo_ties():
+    c = ExecutorCache(3, EvictionPolicy.LFU)
+    for o in "abc":
+        c.put(DataObject(o, 1))
+    c.get("a"), c.get("a"), c.get("b")
+    assert c.put(DataObject("d", 1)) == ["c"]  # freq: a=3,b=2,c=1
+    assert c.put(DataObject("e", 1)) == ["d"]  # tie d/e... d freq=1 oldest
+
+
+def test_pinned_objects_never_evicted():
+    c = ExecutorCache(2, EvictionPolicy.LRU)
+    c.put(DataObject("a", 1))
+    c.pin("a")
+    c.put(DataObject("b", 1))
+    evicted = c.put(DataObject("c", 1))
+    assert "a" not in evicted and "a" in c
+    c.unpin("a")
+    assert c.put(DataObject("d", 1)) == ["a"]
+
+
+def test_random_eviction_is_seeded_deterministic():
+    runs = []
+    for _ in range(2):
+        c = ExecutorCache(3, EvictionPolicy.RANDOM, seed=123)
+        for i in range(10):
+            c.put(DataObject(f"o{i}", 1))
+        runs.append(sorted(c.contents()))
+    assert runs[0] == runs[1]

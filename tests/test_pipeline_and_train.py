@@ -1,0 +1,115 @@
+"""Diffusion data pipeline + train loop + checkpoint fault tolerance."""
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.policies import DispatchPolicy
+from repro.data.dataset import ShardSpec
+from repro.data.pipeline import DiffusionDataPipeline, PipelineConfig
+from repro.models.config import LayerSpec, ModelConfig
+from repro.train import CheckpointManager, adamw, train
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=256,
+                   head_dim=8)
+
+
+def _pipeline(n_steps_worth=8, seed=0):
+    cfg = PipelineConfig(global_batch=4, seq_len=32, n_hosts=3,
+                         policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                         host_cache_bytes=1 << 24, seed=seed)
+    spec = ShardSpec(n_shards=4, tokens_per_shard=4096, vocab_size=256,
+                     seed=seed)
+    return DiffusionDataPipeline(cfg, spec)
+
+
+def test_pipeline_shapes_and_determinism():
+    p1, p2 = _pipeline(seed=3), _pipeline(seed=3)
+    try:
+        b1 = [b for _, b in p1.batches(0, 4)]
+        b2 = [b for _, b in p2.batches(0, 4)]
+        for a, b in zip(b1, b2):
+            assert a.shape == (4, 33)
+            np.testing.assert_array_equal(a, b)   # bitwise-replayable
+    finally:
+        p1.close(); p2.close()
+
+
+def test_pipeline_second_epoch_hits_caches():
+    """The paper's locality economics in the training pipeline: epoch 2
+    re-reads come from executor caches, not the store."""
+    p = _pipeline()
+    try:
+        for _ in p.batches(0, 8):      # 2 epochs over 4 shards
+            pass
+        s = p.stats()
+        assert s["store_reads"] <= 4 + 1          # ~one cold read per shard
+        assert s["global_hit_ratio"] >= 0.4       # epoch 2 fully cached
+    finally:
+        p.close()
+
+
+def test_train_loss_decreases_and_ledger_populated():
+    p = _pipeline()
+    try:
+        from repro.train import adamw
+        res = train(TINY, p, n_steps=20, ckpt_dir=None, log=lambda s: None,
+                    optimizer=adamw(5e-3, warmup=2, total=20))
+    finally:
+        p.close()
+    assert res.steps_run == 20
+    import numpy as _np
+    # window means: single-step losses are noisy at batch 4
+    assert _np.mean(res.losses[-5:]) < _np.mean(res.losses[:5])
+    assert res.pipeline_stats["bytes_store"] > 0
+
+
+def test_checkpoint_restart_reproduces_uninterrupted_run(tmp_path):
+    """Kill-and-restart fault tolerance: losses after resume match the
+    uninterrupted run bitwise (schedule is a pure function of step)."""
+    def run(steps, ckpt):
+        p = _pipeline(seed=1)
+        try:
+            return train(TINY, p, n_steps=steps, ckpt_dir=str(ckpt),
+                         ckpt_every=4, seed=7, log=lambda s: None)
+        finally:
+            p.close()
+
+    full = run(8, tmp_path / "a")
+    part = run(4, tmp_path / "b")        # "crash" after 4 (checkpointed)
+    resumed = run(8, tmp_path / "b")     # restart picks up at step 4
+    assert resumed.resumed_from == 4
+    np.testing.assert_allclose(resumed.losses, full.losses[4:], rtol=1e-5)
+
+
+def test_checkpoint_atomicity_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": np.arange(4.0), "b": {"c": np.ones((2, 2), np.float32)}}
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.steps() == [2, 3]                    # retention
+    # a torn save (tmp dir without manifest rename) must be invisible
+    (tmp_path / "step_9.tmp").mkdir()
+    assert mgr.steps() == [2, 3]
+    step, restored = mgr.restore_latest(tree)
+    assert step == 3
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_elastic_pipeline_host_failure_mid_training():
+    """Remove a pipeline host mid-run: training continues, no data lost."""
+    p = _pipeline()
+    try:
+        got = []
+        it = p.batches(0, 6)
+        for i, (step, b) in enumerate(it):
+            got.append(b)
+            if i == 1:
+                p.rt.remove_executor("w0", failed=True)
+        assert len(got) == 6
+        assert all(b.shape == (4, 33) for b in got)
+    finally:
+        p.close()

@@ -1,0 +1,116 @@
+"""Dispatcher state machine: placement, retries, failure, speculation."""
+from repro.core.index import LocationIndex
+from repro.core.objects import DataObject, Task, TaskState
+from repro.core.policies import DispatchPolicy
+from repro.core.scheduler import Dispatcher
+
+
+def _mkdisp(policy=DispatchPolicy.MAX_COMPUTE_UTIL, n_exec=2, **kw):
+    d = Dispatcher(policy, **kw)
+    for i in range(n_exec):
+        d.executor_joined(f"e{i}", now=0.0)
+    return d
+
+
+def test_fifo_dispatch_and_completion():
+    d = _mkdisp(DispatchPolicy.FIRST_AVAILABLE)
+    tasks = [Task(inputs=()) for _ in range(5)]
+    d.submit(tasks, now=0.0)
+    out = d.next_dispatches(0.0)
+    assert [o.executor for o in out] == ["e0", "e1"]
+    assert d.queue_len == 3
+    d.task_finished(out[0].task, 1.0)
+    nxt = d.next_dispatches(1.0)
+    assert len(nxt) == 1 and nxt[0].executor == "e0"
+
+
+def test_mcu_window_matches_task_to_freed_executor():
+    d = _mkdisp(DispatchPolicy.MAX_COMPUTE_UTIL, n_exec=2)
+    d.index.insert("a", "e1")
+    d.sizes["a"] = 100
+    t_other = Task(inputs=("z",))
+    t_match = Task(inputs=("a",))
+    d.submit([t_other, t_match], now=0.0)
+    out = d.next_dispatches(0.0)
+    # window search: e0 gets the unmatched head, e1 gets ITS cached task
+    by_exec = {o.executor: o.task for o in out}
+    assert by_exec["e1"] is t_match
+    assert by_exec["e0"] is t_other
+    assert t_match.location_hints == {"a": ("e1",)}
+
+
+def test_max_cache_hit_parks_then_runs_on_holder():
+    d = _mkdisp(DispatchPolicy.MAX_CACHE_HIT, n_exec=2)
+    d.index.insert("a", "e1")
+    d.sizes["a"] = 10
+    filler = Task(inputs=())
+    d.submit([filler], now=0.0)
+    first = d.next_dispatches(0.0)      # filler takes e0 (degraded path)
+    assert first[0].executor == "e0"
+    blocker = Task(inputs=())
+    d.submit([blocker], 0.0)
+    assert d.next_dispatches(0.0)[0].executor == "e1"  # e1 now busy
+    want = Task(inputs=("a",))
+    d.submit([want], 0.0)
+    assert d.next_dispatches(0.0) == []          # parked on busy e1
+    assert want.state is TaskState.PENDING
+    d.task_finished(blocker, 1.0)
+    out = d.next_dispatches(1.0)
+    assert out[0].task is want and out[0].executor == "e1"
+
+
+def test_executor_failure_requeues_and_invalidates():
+    d = _mkdisp(DispatchPolicy.FIRST_CACHE_AVAILABLE, n_exec=2)
+    d.index.insert("a", "e0")
+    t = Task(inputs=("a",))
+    d.submit([t], 0.0)
+    out = d.next_dispatches(0.0)
+    assert out[0].executor == "e0"
+    requeued = d.executor_left("e0", 1.0, failed=True)
+    assert t in requeued and t.attempts == 1
+    assert d.index.lookup("a") == frozenset()    # invalidated
+    nxt = d.next_dispatches(1.0)
+    assert nxt[0].executor == "e1"               # re-dispatched elsewhere
+
+
+def test_task_fails_after_max_attempts():
+    d = _mkdisp(DispatchPolicy.FIRST_AVAILABLE, n_exec=1)
+    t = Task(inputs=(), max_attempts=2)
+    d.submit([t], 0.0)
+    for i in range(2):
+        out = d.next_dispatches(float(i))
+        d.task_finished(out[0].task, float(i) + 0.5, ok=False)
+    assert t.state is TaskState.FAILED
+    assert d.failed == [t]
+
+
+def test_speculation_twins_straggler_and_first_wins():
+    d = _mkdisp(DispatchPolicy.FIRST_AVAILABLE, n_exec=3,
+                speculation_factor=2.0, min_completions_for_speculation=5)
+    # establish a duration baseline
+    for i in range(6):
+        t = Task(inputs=())
+        d.submit([t], float(i))
+        out = d.next_dispatches(float(i))
+        d.task_finished(out[0].task, float(i) + 1.0)   # 1s tasks
+    slow = Task(inputs=())
+    d.submit([slow], 10.0)
+    d.next_dispatches(10.0)
+    assert d.speculation_candidates(11.0) == []        # not late yet
+    cands = d.speculation_candidates(15.0)             # 5s >> 2x p95(1s)
+    assert cands == [slow]
+    twin = d.make_twin(slow, 15.0)
+    out = d.next_dispatches(15.0)
+    assert out[0].task is twin
+    cancel = d.task_finished(twin, 16.0)               # twin wins
+    assert cancel == slow.tid
+    assert slow.state is TaskState.DONE                # satisfied by twin
+
+
+def test_elastic_join_mid_stream():
+    d = _mkdisp(DispatchPolicy.FIRST_AVAILABLE, n_exec=1)
+    tasks = [Task(inputs=()) for _ in range(4)]
+    d.submit(tasks, 0.0)
+    assert len(d.next_dispatches(0.0)) == 1
+    d.executor_joined("e9", 1.0)                       # DRP grew the pool
+    assert {o.executor for o in d.next_dispatches(1.0)} == {"e9"}

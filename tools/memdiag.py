@@ -1,0 +1,24 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, jax
+from repro.configs import REGISTRY, SHAPES
+from repro.launch.cellrun import _compile_once
+from repro.launch.mesh import make_production_mesh
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod=False)
+cfg = REGISTRY[arch]; shape = SHAPES[shape_name]
+c, _, _ = _compile_once(cfg, shape, mesh, None, True)
+ma = c.memory_analysis()
+print(f"{arch} x {shape_name}: temp={ma.temp_size_in_bytes/1e9:.2f}GB args={ma.argument_size_in_bytes/1e9:.2f}GB out={ma.output_size_in_bytes/1e9:.2f}GB alias={ma.alias_size_in_bytes/1e9:.2f}GB")
+txt = c.as_text()
+sizes = {}
+for m in re.finditer(r"(bf16|f32|s32|u32|s8|pred)\[([\d,]+)\]", txt):
+    dims = [int(d) for d in m.group(2).split(",")]
+    n = 1
+    for d in dims: n *= d
+    b = n * {"bf16":2,"f32":4,"s32":4,"u32":4,"s8":1,"pred":1}[m.group(1)]
+    key = f"{m.group(1)}[{m.group(2)}]"
+    if b > 100e6: sizes[key] = max(sizes.get(key,0), b)
+for kk, vv in sorted(sizes.items(), key=lambda x:-x[1])[:14]:
+    print(f"  {vv/1e9:7.2f} GB  {kk}  x{txt.count(kk)}")

@@ -1,0 +1,85 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
+results/dryrun/*.json (run after repro.launch.dryrun).
+
+  PYTHONPATH=src python tools/mk_experiments.py > results/roofline_tables.md
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.bench_roofline import analyse, model_flops  # noqa: E402
+
+HBM_PER_CHIP = 16e9   # TPU v5e
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.1f}ms"
+    return f"{x * 1e6:6.0f}us"
+
+
+def main(dirpath="results/dryrun"):
+    recs = {}
+    for f in sorted(pathlib.Path(dirpath).glob("*.json")):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print("## §Dry-run — per-cell compile + memory (single-pod 16x16 = 256 "
+          "chips; multi-pod 2x16x16 = 512 chips)\n")
+    print("| arch | shape | mesh | status | peak GB/dev | TPU-adj GB/dev | "
+          "fits 16GB | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if r.get("skipped"):
+            print(f"| {a} | {s} | {m} | SKIP ({r['reason'][:40]}...) | - | - | - | - |")
+            continue
+        if not r["ok"]:
+            print(f"| {a} | {s} | {m} | **FAIL** {r['error'][:60]} | - | - | - | - |")
+            continue
+        peak = r["peak_bytes_per_device"] / 1e9
+        adj = r.get("peak_tpu_adjusted", 0) / 1e9
+        fits = "yes" if adj * 1e9 <= HBM_PER_CHIP else "**no**"
+        print(f"| {a} | {s} | {m} | ok | {peak:.2f} | {adj:.2f} | {fits} | "
+              f"{r['compile_s']:.0f} |")
+
+    print("\n\n## §Roofline — three-term roofline per cell (single-pod, "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s link)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS/HLO | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if m != "single_pod_16x16" or not r.get("ok"):
+            continue
+        an = analyse(r)
+        print(f"| {a} | {s} | {fmt_s(an['t_compute_s'])} | "
+              f"{fmt_s(an['t_memory_s'])} | {fmt_s(an['t_collective_s'])} | "
+              f"**{an['dominant']}** | {an['useful_ratio']:.2f} | "
+              f"{an['mfu_bound']:.3f} |")
+
+    # pick hillclimb candidates
+    print("\n\n## Hillclimb candidate selection\n")
+    cands = []
+    for (a, s, m), r in sorted(recs.items()):
+        if m != "single_pod_16x16" or not r.get("ok"):
+            continue
+        an = analyse(r)
+        cands.append(an)
+    if cands:
+        worst = min((c for c in cands if c["shape"] == "train_4k"),
+                    key=lambda c: c["mfu_bound"], default=None)
+        coll = max(cands, key=lambda c: c["t_collective_s"]
+                   / max(c["step_time_bound_s"], 1e-12))
+        print(f"- worst MFU bound (train): {worst['arch']} x {worst['shape']}"
+              f" ({worst['mfu_bound']:.3f})" if worst else "-")
+        print(f"- most collective-bound: {coll['arch']} x {coll['shape']} "
+              f"(coll {fmt_s(coll['t_collective_s'])} vs bound "
+              f"{fmt_s(coll['step_time_bound_s'])})")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
