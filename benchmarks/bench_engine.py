@@ -1,0 +1,155 @@
+"""Sim-engine scaling: incremental flow solver + indexed dispatch vs naive.
+
+Not a paper figure -- this measures OUR discrete-event engine, because the
+paper's headline claim (aggregate throughput scales linearly with cache-node
+count) can only be demonstrated if the simulator itself stays tractable at
+10^5 tasks x 10^2 nodes.  The naive reference solver reprices every live
+flow and re-pushes every ETA event on every flow start/finish (O(F^2) event
+storm); the incremental solver reprices only flows sharing a dirty resource
+and skips re-pushes when a rate is unchanged (DESIGN.md §3).  Both produce
+bit-identical results (tests/test_flow_equivalence.py), so the comparison
+is pure engine cost.
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_engine \
+        --nodes 256 --tasks 50000 --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import ANL_UC, DispatchPolicy, make_objects, uniform_tasks
+from repro.core.simulator import DiffusionSim, SimConfig
+
+from .common import row
+
+MB = 10**6
+
+#: the small fixed configuration tools/bench_gate.py replays against the
+#: committed baseline (kept tiny so the gate costs seconds, not minutes)
+GATE_NODES = 32
+GATE_TASKS = 2_000
+
+
+def measure(n_nodes: int, n_tasks: int, solver: str, *,
+            locality: int = 4, file_mb: int = 10,
+            compute_seconds: float = 0.05, seed: int = 0) -> dict:
+    """One engine run; returns wall-clock + event-count observables."""
+    n_objs = max(n_tasks // locality, 1)
+    cfg = SimConfig(
+        testbed=ANL_UC, n_nodes=n_nodes,
+        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+        cache_capacity_bytes=10**13,
+        flow_solver=solver, seed=seed)
+    sim = DiffusionSim(cfg)
+    objs = make_objects("f", n_objs, file_mb * MB)
+    sim.add_objects(objs)
+    sim.warm_caches(objs)
+    tasks = uniform_tasks(objs, accesses_per_object=locality,
+                          compute_seconds=compute_seconds)[:n_tasks]
+    t0 = time.perf_counter()
+    sim.submit(tasks)
+    r = sim.run()
+    wall = time.perf_counter() - t0
+    return {
+        "solver": solver,
+        "n_nodes": n_nodes,
+        "n_tasks": n_tasks,
+        "wall_s": round(wall, 4),
+        "sim_makespan_s": r.makespan,
+        "n_completed": r.n_completed,
+        "loop_events_scheduled": sim.loop.n_scheduled,
+        "flow_events_scheduled": sim.net.n_events_scheduled,
+        "flow_event_skips": sim.net.n_event_skips,
+        "rate_recomputes": sim.net.n_rate_recomputes,
+        "rebalances": sim.net.n_rebalances,
+        "bytes_by_kind": {k: v for k, v in sorted(r.bytes_by_kind.items())},
+        "local_hits": r.local_hits,
+        "peer_hits": r.peer_hits,
+        "store_reads": r.store_reads,
+        "tasks_per_wall_s": round(n_tasks / max(wall, 1e-9), 1),
+    }
+
+
+def _result_fingerprint(m: dict) -> tuple:
+    return (m["sim_makespan_s"], m["n_completed"],
+            tuple(sorted(m["bytes_by_kind"].items())),
+            m["local_hits"], m["peer_hits"], m["store_reads"])
+
+
+def compare(n_nodes: int, n_tasks: int, **kw) -> dict:
+    inc = measure(n_nodes, n_tasks, "incremental", **kw)
+    nai = measure(n_nodes, n_tasks, "naive", **kw)
+    return {
+        "config": {"n_nodes": n_nodes, "n_tasks": n_tasks,
+                   "testbed": ANL_UC.name, "policy": "max-compute-util",
+                   "locality": kw.get("locality", 4),
+                   "file_mb": kw.get("file_mb", 10)},
+        "incremental": inc,
+        "naive": nai,
+        "speedup_wall": round(nai["wall_s"] / max(inc["wall_s"], 1e-9), 2),
+        "flow_event_ratio": round(nai["flow_events_scheduled"]
+                                  / max(inc["flow_events_scheduled"], 1), 2),
+        "loop_event_ratio": round(nai["loop_events_scheduled"]
+                                  / max(inc["loop_events_scheduled"], 1), 2),
+        "results_identical": _result_fingerprint(inc) == _result_fingerprint(nai),
+    }
+
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The small fixed run bench_gate.py replays; best-of-N wall clock."""
+    best = None
+    for _ in range(repeats):
+        m = measure(GATE_NODES, GATE_TASKS, "incremental")
+        if best is None or m["wall_s"] < best["wall_s"]:
+            best = m
+    return best
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: scaled-down engine comparison as CSV rows."""
+    n_tasks = max(int(8_000 * scale), 800)
+    c = compare(GATE_NODES, n_tasks)
+    rows = [
+        row("engine", "incremental_wall_s", c["incremental"]["wall_s"], "s",
+            note=f"{GATE_NODES} nodes / {n_tasks} tasks"),
+        row("engine", "naive_wall_s", c["naive"]["wall_s"], "s"),
+        row("engine", "speedup_wall", c["speedup_wall"], "x"),
+        row("engine", "flow_event_ratio", c["flow_event_ratio"], "x",
+            note="naive/incremental scheduled flow-ETA events"),
+        row("engine", "results_identical", 1.0 if c["results_identical"] else 0.0,
+            "bool", note="bit-identical SimResult across solvers"),
+    ]
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=256)
+    ap.add_argument("--tasks", type=int, default=50_000)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--skip-naive", action="store_true",
+                    help="only measure the incremental solver (quick look)")
+    args = ap.parse_args(argv)
+
+    if args.skip_naive:
+        out = {"incremental": measure(args.nodes, args.tasks, "incremental")}
+    else:
+        out = compare(args.nodes, args.tasks)
+        print(f"# speedup {out['speedup_wall']}x wall, "
+              f"{out['flow_event_ratio']}x fewer flow events, "
+              f"identical={out['results_identical']}", file=sys.stderr)
+    out["gate"] = gate_measure()
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

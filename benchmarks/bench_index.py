@@ -7,6 +7,7 @@ P-RLS log-fit the paper compares with."""
 from __future__ import annotations
 
 from repro.core import LocationIndex, prls_aggregate_throughput
+from repro.core.index import ShardedIndex
 from .common import row
 
 
@@ -34,4 +35,14 @@ def run(scale: float = 1.0) -> list[dict]:
     rows.append(row("fig2_prls", "prls_nodes_to_match_central",
                     crossover, "nodes", paper=32_000,
                     note="paper: >32K P-RLS nodes to match the hash table"))
+    # sharded variant: same observable contract (time_ops + op counters)
+    sharded = ShardedIndex(n_shards=8)
+    ts = sharded.time_ops(n)
+    rows.append(row("fig2_index", "sharded8_insert_us", ts["insert_s"] * 1e6,
+                    "us", note="hash-sharded variant, 8 shards"))
+    rows.append(row("fig2_index", "sharded8_lookup_us", ts["lookup_s"] * 1e6,
+                    "us"))
+    rows.append(row("fig2_index", "sharded8_ops_counted",
+                    sharded.n_inserts + sharded.n_lookups + sharded.n_removes,
+                    "ops", note="aggregate n_inserts+n_lookups+n_removes"))
     return rows

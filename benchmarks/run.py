@@ -22,16 +22,21 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="substring filter on bench module name")
     ap.add_argument("--out", default=None, help="also write CSV here")
+    ap.add_argument("--gate", action="store_true",
+                    help="also run tools/bench_gate.py against the committed "
+                         "BENCH_engine.json baseline (fails on >25%% engine "
+                         "wall-clock regression)")
     args = ap.parse_args(argv)
 
-    from . import (bench_index, bench_microbench, bench_roofline,
-                   bench_scheduler, bench_stacking)
+    from . import (bench_engine, bench_index, bench_microbench,
+                   bench_roofline, bench_scheduler, bench_stacking)
 
     modules = [
         ("index", bench_index, 1.0 if args.full else 0.5),
         ("microbench", bench_microbench, 1.0 if args.full else 0.3),
         ("stacking", bench_stacking, 0.2 if args.full else 0.02),
         ("scheduler", bench_scheduler, 1.0 if args.full else 0.25),
+        ("engine", bench_engine, 1.0 if args.full else 0.25),
         ("roofline", bench_roofline, 1.0),
     ]
     rows = []
@@ -59,7 +64,14 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             f.write(buf.getvalue())
     bad = [r for r in rows if r["name"] == "ERROR"]
-    return 1 if bad else 0
+    rc = 1 if bad else 0
+    if args.gate:
+        import pathlib
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                               / "tools"))
+        import bench_gate
+        rc = max(rc, bench_gate.main([]))
+    return rc
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ Invariants (property-tested in tests/test_cache_properties.py):
 from __future__ import annotations
 
 import enum
+import heapq
 import random
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -65,6 +66,15 @@ class ExecutorCache:
         self._tick = 0                         # LFU FIFO tie-break
         self._order: dict[str, int] = {}       # oid -> insertion tick
         self._pinned: dict[str, int] = {}      # oid -> pin count
+        # LFU victim heap of (freq, order, oid), lazily pruned: an entry is
+        # stale once the oid's freq moved on (every touch pushes a fresh
+        # entry) or the oid left the cache.  Eviction bursts are O(log n)
+        # each instead of a full min() scan over the candidate list.
+        self._lfu_heap: list[tuple[int, int, str]] = []
+        # resident oids in arbitrary order with O(1) swap-remove, so RANDOM
+        # eviction samples instead of materializing the candidate list.
+        self._resident: list[str] = []
+        self._resident_pos: dict[str, int] = {}
         self.used_bytes = 0
         self.stats = CacheStats()
 
@@ -106,7 +116,17 @@ class ExecutorCache:
     def _touch(self, oid: str) -> None:
         if self.policy is EvictionPolicy.LRU:
             self._entries.move_to_end(oid)
-        self._freq[oid] = self._freq.get(oid, 0) + 1
+        f = self._freq.get(oid, 0) + 1
+        self._freq[oid] = f
+        if self.policy is EvictionPolicy.LFU:
+            self._lfu_push(oid, f)
+
+    def _lfu_push(self, oid: str, freq: int) -> None:
+        heapq.heappush(self._lfu_heap, (freq, self._order.get(oid, self._tick), oid))
+        if len(self._lfu_heap) > 4 * len(self._entries) + 64:
+            self._lfu_heap = [(self._freq[o], self._order[o], o)
+                              for o in self._entries]
+            heapq.heapify(self._lfu_heap)
 
     # -- insertion / eviction ------------------------------------------------
     def put(self, obj: DataObject) -> list[str]:
@@ -130,17 +150,27 @@ class ExecutorCache:
         self._freq[obj.oid] = 1
         self._order[obj.oid] = self._tick
         self._tick += 1
+        self._resident_pos[obj.oid] = len(self._resident)
+        self._resident.append(obj.oid)
+        if self.policy is EvictionPolicy.LFU:
+            self._lfu_push(obj.oid, 1)
         self.used_bytes += obj.size_bytes
         self.stats.insertions += 1
         return evicted
 
     def _pick_victim(self) -> Optional[str]:
-        candidates = [o for o in self._entries if o not in self._pinned]
-        if not candidates:
-            return None
+        if len(self._entries) <= len(self._pinned):
+            return None                        # everything resident is pinned
         p = self.policy
         if p is EvictionPolicy.RANDOM:
-            return self._rng.choice(candidates)
+            # rejection-sample the resident list; pinned objects are few
+            # (inputs of running tasks), so this is O(1) expected
+            for _ in range(32):
+                o = self._resident[self._rng.randrange(len(self._resident))]
+                if o not in self._pinned:
+                    return o
+            candidates = [o for o in self._resident if o not in self._pinned]
+            return self._rng.choice(candidates) if candidates else None
         if p in (EvictionPolicy.FIFO, EvictionPolicy.LRU):
             # _entries order is insertion (FIFO) or recency (LRU); first
             # unpinned in order is the victim.
@@ -148,13 +178,35 @@ class ExecutorCache:
                 if o not in self._pinned:
                     return o
             return None
-        # LFU, FIFO tie-break
-        return min(candidates, key=lambda o: (self._freq.get(o, 0), self._order[o]))
+        # LFU, FIFO tie-break: lazily-pruned min-heap.  Pop stale entries
+        # (freq/order moved on, or oid gone); defer valid-but-pinned ones
+        # and restore them afterwards.
+        deferred: list[tuple[int, int, str]] = []
+        victim: Optional[str] = None
+        while self._lfu_heap:
+            f, ordr, o = heapq.heappop(self._lfu_heap)
+            if self._freq.get(o) != f or self._order.get(o) != ordr:
+                continue                       # stale: pruned for good
+            if o in self._pinned:
+                deferred.append((f, ordr, o))
+                continue
+            victim = o
+            deferred.append((f, ordr, o))      # pruned once actually removed
+            break
+        for item in deferred:
+            heapq.heappush(self._lfu_heap, item)
+        return victim
 
     def _remove(self, oid: str) -> None:
         self.used_bytes -= self._entries.pop(oid)
         self._freq.pop(oid, None)
         self._order.pop(oid, None)
+        # swap-remove from the resident list
+        pos = self._resident_pos.pop(oid)
+        last = self._resident.pop()
+        if last != oid:
+            self._resident[pos] = last
+            self._resident_pos[last] = pos
 
     def drop(self, oid: str) -> bool:
         """Explicit invalidation (executor release / failure handling)."""

@@ -91,16 +91,7 @@ class LocationIndex:
     # -- micro-benchmark hooks (paper §3.2.3 / Figure 2) -----------------------
     def time_ops(self, n: int = 100_000) -> dict[str, float]:
         """Measure insert/lookup latency; returns seconds-per-op."""
-        t0 = time.perf_counter()
-        for i in range(n):
-            self.insert(f"__bench{i}", "e0")
-        t1 = time.perf_counter()
-        for i in range(n):
-            self.lookup(f"__bench{i}")
-        t2 = time.perf_counter()
-        for i in range(n):
-            self.remove(f"__bench{i}", "e0")
-        return {"insert_s": (t1 - t0) / n, "lookup_s": (t2 - t1) / n}
+        return _time_ops(self, n)
 
 
 class ShardedIndex:
@@ -150,6 +141,37 @@ class ShardedIndex:
 
     def __len__(self) -> int:
         return sum(len(s) for s in self._shards)
+
+    # -- aggregate op counters: drop-in observable like LocationIndex ---------
+    @property
+    def n_inserts(self) -> int:
+        return sum(s.n_inserts for s in self._shards)
+
+    @property
+    def n_removes(self) -> int:
+        return sum(s.n_removes for s in self._shards)
+
+    @property
+    def n_lookups(self) -> int:
+        return sum(s.n_lookups for s in self._shards)
+
+    def time_ops(self, n: int = 100_000) -> dict[str, float]:
+        """Measure insert/lookup latency across shards; seconds-per-op
+        (same contract as LocationIndex.time_ops, for bench_index.py)."""
+        return _time_ops(self, n)
+
+
+def _time_ops(index, n: int) -> dict[str, float]:
+    t0 = time.perf_counter()
+    for i in range(n):
+        index.insert(f"__bench{i}", "e0")
+    t1 = time.perf_counter()
+    for i in range(n):
+        index.lookup(f"__bench{i}")
+    t2 = time.perf_counter()
+    for i in range(n):
+        index.remove(f"__bench{i}", "e0")
+    return {"insert_s": (t1 - t0) / n, "lookup_s": (t2 - t1) / n}
 
 
 def prls_latency_model(n_nodes: int) -> float:

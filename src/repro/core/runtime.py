@@ -194,9 +194,14 @@ class DiffusionRuntime:
     def configure_caches(self, capacity_bytes: int, policy: EvictionPolicy) -> None:
         self._cap = capacity_bytes
         self._cpol = policy
-        for w in self.workers.values():
-            w.cache = ExecutorCache(capacity_bytes, policy)
-            w.payloads.clear()
+        with self._lock:
+            self._update_buf = []   # drop updates for caches we just cleared
+            for w in self.workers.values():
+                w.cache = ExecutorCache(capacity_bytes, policy)
+                w.payloads.clear()
+                # the index (and the dispatcher's queued-task hint cache)
+                # must forget the cleared contents
+                self.dispatcher.invalidate_executor(w.eid)
 
     def remove_executor(self, eid: str, failed: bool = False) -> None:
         with self._lock:

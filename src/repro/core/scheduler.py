@@ -14,16 +14,119 @@ Responsibilities:
   * straggler speculation: duplicate the oldest running task when it exceeds
     ``speculation_factor x p95(completed durations)``; first copy wins;
   * byte/hit accounting handoff to metrics.
+
+Scaling note (DESIGN.md §4): max-compute-util placement is *incremental*.
+Hints for a queued task are resolved against the index once at enqueue time
+and then kept coherent by the ``apply_index_updates`` / ``drop_executor``
+hooks; an inverted ``executor -> {queued tid: cached-byte score}`` map makes
+"which queued task does this freed executor cache the most of" an O(|tasks
+that executor caches data for|) probe instead of an O(window x inputs)
+index rescan; and the wait queue supports O(1) removal by tid via tombstones
+instead of ``deque.remove``'s O(n) scan.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterable, Optional
+from typing import Iterable, Iterator, Optional
 
 from .index import IndexUpdate, LocationIndex
 from .objects import Task, TaskState
 from .policies import Decision, DispatchPolicy, decide
+
+
+class _QEntry:
+    __slots__ = ("task", "pos", "alive")
+
+    def __init__(self, task: Task, pos: int) -> None:
+        self.task = task
+        self.pos = pos
+        self.alive = True
+
+
+class TaskQueue:
+    """FIFO wait queue with O(1) removal-by-tid.
+
+    Removal marks the entry dead (a tombstone) instead of scanning the deque;
+    dead entries are skipped on pop/iteration and compacted away once they
+    outnumber live ones.  ``pos`` is a stable total order (appendleft counts
+    down, append counts up) used for "earliest in queue" tie-breaks without
+    walking the deque.
+    """
+
+    def __init__(self) -> None:
+        self._dq: deque[_QEntry] = deque()
+        self._by_tid: dict[str, _QEntry] = {}
+        self._dead = 0
+        self._front = 0   # next appendleft pos (counts down)
+        self._back = 1    # next append pos (counts up)
+
+    def append(self, t: Task) -> None:
+        self._discard(t.tid)
+        e = _QEntry(t, self._back)
+        self._back += 1
+        self._dq.append(e)
+        self._by_tid[t.tid] = e
+
+    def appendleft(self, t: Task) -> None:
+        self._discard(t.tid)
+        e = _QEntry(t, self._front)
+        self._front -= 1
+        self._dq.appendleft(e)
+        self._by_tid[t.tid] = e
+
+    def popleft(self) -> Task:
+        while self._dq:
+            e = self._dq.popleft()
+            if e.alive:
+                del self._by_tid[e.task.tid]
+                return e.task
+            self._dead -= 1
+        raise IndexError("pop from empty TaskQueue")
+
+    def remove(self, tid: str) -> bool:
+        """Tombstone the entry for ``tid``; O(1) amortized."""
+        if self._discard(tid):
+            if self._dead > 64 and self._dead > len(self._by_tid):
+                self._compact()
+            return True
+        return False
+
+    def _discard(self, tid: str) -> bool:
+        e = self._by_tid.pop(tid, None)
+        if e is None:
+            return False
+        e.alive = False
+        self._dead += 1
+        return True
+
+    def _compact(self) -> None:
+        self._dq = deque(e for e in self._dq if e.alive)
+        self._dead = 0
+
+    def position(self, tid: str) -> int:
+        return self._by_tid[tid].pos
+
+    def first_live(self, n: int) -> list[Task]:
+        out: list[Task] = []
+        for e in self._dq:
+            if e.alive:
+                out.append(e.task)
+                if len(out) >= n:
+                    break
+        return out
+
+    def __contains__(self, tid: str) -> bool:
+        return tid in self._by_tid
+
+    def __iter__(self) -> Iterator[Task]:
+        return (e.task for e in list(self._dq) if e.alive)
+
+    def __len__(self) -> int:
+        return len(self._by_tid)
+
+    def __bool__(self) -> bool:
+        return bool(self._by_tid)
 
 
 @dataclass(slots=True)
@@ -62,7 +165,7 @@ class Dispatcher:
         self.sizes: dict[str, int] = {}
         self.executors: dict[str, ExecutorState] = {}
         self._exec_order: list[str] = []          # arrival order (FIFO choice)
-        self.queue: deque[Task] = deque()
+        self.queue: TaskQueue = TaskQueue()
         self.pending: dict[str, deque[Task]] = {} # max-cache-hit waits
         self.tasks: dict[str, Task] = {}
         self.completed: list[Task] = []
@@ -72,8 +175,22 @@ class Dispatcher:
         self.min_completions_for_speculation = min_completions_for_speculation
         self._speculated: set[str] = set()        # tids with a live twin
         self._twins: dict[str, str] = {}          # twin tid -> original tid
+        self._twin_of: dict[str, str] = {}        # original tid -> twin tid
         self.n_decisions = 0
         self.decision_lookups = 0
+        # ---- incremental max-compute-util placement state -----------------
+        # tid -> oid -> executors known (per the loosely-coherent index) to
+        # cache it; resolved once at enqueue, patched by index-update hooks.
+        self._hint_cache: dict[str, dict[str, set[str]]] = {}
+        # eid -> tid -> bytes of that queued task's inputs this executor
+        # caches (the inverted map the freed-executor probe reads).
+        self._exec_scores: dict[str, dict[str, int]] = {}
+        # oid -> queued tids with oid among their inputs (update fan-out).
+        self._oid_waiters: dict[str, set[str]] = {}
+
+    @property
+    def _mcu(self) -> bool:
+        return self.policy is DispatchPolicy.MAX_COMPUTE_UTIL
 
     # ---------------- membership -------------------------------------------
     def executor_joined(self, eid: str, now: float, slots: int = 1) -> None:
@@ -91,6 +208,7 @@ class Dispatcher:
         st.alive = False
         self._exec_order = [e for e in self._exec_order if e != eid]
         self.index.drop_executor(eid)
+        self._drop_executor_hints(eid)
         requeue: list[Task] = []
         for tid in list(st.running):
             t = self.tasks.get(tid)
@@ -110,7 +228,7 @@ class Dispatcher:
             requeue.append(t)
         del self.executors[eid]
         for t in requeue:
-            self.queue.appendleft(t)
+            self._enqueue(t, front=True)
         return requeue
 
     # ---------------- submission -------------------------------------------
@@ -122,13 +240,111 @@ class Dispatcher:
             self.tasks[t.tid] = t
             for ob in t.outputs:
                 self.sizes[ob.oid] = ob.size_bytes
-            self.queue.append(t)
+            self._enqueue(t)
             n += 1
         return n
 
     def register_objects(self, objs) -> None:
         for ob in objs:
             self.sizes[ob.oid] = ob.size_bytes
+
+    # ---------------- incremental hint maintenance --------------------------
+    def _enqueue(self, t: Task, front: bool = False) -> None:
+        if front:
+            self.queue.appendleft(t)
+        else:
+            self.queue.append(t)
+        if self._mcu:
+            self._hints_resolve(t)
+
+    def _hints_resolve(self, t: Task) -> None:
+        """One index resolution at enqueue; hooks keep it coherent after."""
+        hints: dict[str, set[str]] = {}
+        touched: set[str] = set()
+        for oid in t.inputs:
+            self._oid_waiters.setdefault(oid, set()).add(t.tid)
+            locs = self.index.lookup(oid)
+            if locs:
+                hints[oid] = set(locs)
+                touched |= locs
+        self.decision_lookups += len(t.inputs)
+        self._hint_cache[t.tid] = hints
+        for eid in touched:
+            self._rescore(t.tid, eid)
+
+    def _hints_drop(self, t: Task) -> dict[str, set[str]]:
+        """Forget a task leaving the wait queue; returns its final hints."""
+        hints = self._hint_cache.pop(t.tid, None) or {}
+        for oid in t.inputs:
+            waiters = self._oid_waiters.get(oid)
+            if waiters is not None:
+                waiters.discard(t.tid)
+                if not waiters:
+                    del self._oid_waiters[oid]
+        for eid in {e for locs in hints.values() for e in locs}:
+            scores = self._exec_scores.get(eid)
+            if scores is not None:
+                scores.pop(t.tid, None)
+        return hints
+
+    def _rescore(self, tid: str, eid: str) -> None:
+        """Recompute one (executor, queued task) cached-byte score exactly."""
+        hints = self._hint_cache.get(tid)
+        if hints is None:
+            return
+        score = sum(self.sizes.get(oid, 1)
+                    for oid, locs in hints.items() if eid in locs)
+        scores = self._exec_scores.setdefault(eid, {})
+        if score > 0:
+            scores[tid] = score
+        else:
+            scores.pop(tid, None)
+
+    def _drop_executor_hints(self, eid: str) -> None:
+        for tid in self._exec_scores.pop(eid, {}):
+            hints = self._hint_cache.get(tid)
+            if hints is None:
+                continue
+            for oid in list(hints):
+                hints[oid].discard(eid)
+                if not hints[oid]:
+                    del hints[oid]
+
+    def _hints_tuple(self, hints: dict[str, set[str]]) -> dict[str, tuple[str, ...]]:
+        return {oid: tuple(sorted(locs)) for oid, locs in hints.items() if locs}
+
+    def invalidate_executor(self, eid: str) -> None:
+        """Drop every index entry (and its hint-cache shadow) for ``eid``
+        without removing the executor -- e.g. its cache was cleared."""
+        self.index.drop_executor(eid)
+        self._drop_executor_hints(eid)
+
+    # ---------------- index coherence ---------------------------------------
+    def apply_index_updates(self, updates: Iterable[IndexUpdate]) -> None:
+        if not self._mcu:
+            self.index.apply_batch(updates)
+            return
+        for u in updates:
+            self.index.apply(u)
+            eid = u.executor
+            dirty: set[str] = set()
+            for oid in u.added:
+                for tid in self._oid_waiters.get(oid, ()):
+                    locs = self._hint_cache[tid].setdefault(oid, set())
+                    if eid not in locs:
+                        locs.add(eid)
+                        dirty.add(tid)
+            for oid in u.removed:
+                for tid in self._oid_waiters.get(oid, ()):
+                    hints = self._hint_cache[tid]
+                    locs = hints.get(oid)
+                    if locs and eid in locs:
+                        locs.discard(eid)
+                        if not locs:
+                            del hints[oid]
+                        dirty.add(tid)
+            for tid in dirty:
+                self._rescore(tid, eid)
 
     # ---------------- placement --------------------------------------------
     def _avail_busy(self) -> tuple[list[str], list[str]]:
@@ -153,7 +369,7 @@ class Dispatcher:
                 out.append(self._bind(dq.popleft(), eid, now))
         if not self.queue:
             return out
-        if self.policy is DispatchPolicy.MAX_COMPUTE_UTIL:
+        if self._mcu:
             out.extend(self._dispatch_mcu(now))
         else:
             out.extend(self._dispatch_fifo(now))
@@ -190,46 +406,42 @@ class Dispatcher:
 
     def _dispatch_mcu(self, now: float) -> list[Dispatch]:
         """max-compute-util: for each available executor, pick the queued
-        task (within the window) whose inputs it caches the most bytes of;
-        fall back to the queue head when nothing matches."""
+        task (within the window) whose inputs it caches the most bytes of --
+        read straight off the inverted score map -- falling back to the
+        queue head when nothing matches."""
         out: list[Dispatch] = []
         while self.queue:
             avail, _ = self._avail_busy()
             if not avail:
                 break
-            window = list(self.queue)[: self.queue_window]
-            # hints once per task in the window
-            hinted: list[tuple[Task, dict[str, tuple[str, ...]]]] = []
-            for t in window:
-                hints = {}
-                for oid in t.inputs:
-                    locs = self.index.lookup(oid)
-                    if locs:
-                        hints[oid] = tuple(sorted(locs))
-                self.decision_lookups += len(t.inputs)
-                hinted.append((t, hints))
+            window = self.queue.first_live(self.queue_window)
+            if not window:
+                break
+            window_tids = {t.tid for t in window}
             self.n_decisions += 1
             bound_any = False
             taken: set[str] = set()
             for eid in avail:
-                best_i, best_score = -1, 0
-                for i, (t, hints) in enumerate(hinted):
-                    if t.tid in taken:
+                best_tid: Optional[str] = None
+                best_score, best_pos = 0, 0
+                for tid, score in self._exec_scores.get(eid, {}).items():
+                    if tid in taken or tid not in window_tids:
                         continue
-                    score = sum(self.sizes.get(oid, 1)
-                                for oid, locs in hints.items() if eid in locs)
-                    if score > best_score:
-                        best_i, best_score = i, score
-                if best_i < 0:
+                    pos = self.queue.position(tid)
+                    if score > best_score or (score == best_score
+                                              and best_tid is not None
+                                              and pos < best_pos):
+                        best_tid, best_score, best_pos = tid, score, pos
+                if best_tid is None:
                     # nothing cached for this executor: take earliest unclaimed
-                    best_i = next((i for i, (t, _) in enumerate(hinted)
-                                   if t.tid not in taken), -1)
-                    if best_i < 0:
+                    t = next((w for w in window if w.tid not in taken), None)
+                    if t is None:
                         break
-                t, hints = hinted[best_i]
+                else:
+                    t = self.tasks[best_tid]
                 taken.add(t.tid)
-                self.queue.remove(t)
-                t.location_hints = hints
+                self.queue.remove(t.tid)
+                t.location_hints = self._hints_tuple(self._hints_drop(t))
                 out.append(self._bind(t, eid, now))
                 bound_any = True
             if not bound_any:
@@ -265,30 +477,42 @@ class Dispatcher:
                 # a speculative twin won; cancel the original
                 cancel = orig_tid
                 self._speculated.discard(orig_tid)
+                self._twin_of.pop(orig_tid, None)
                 orig = self.tasks.get(orig_tid)
                 if orig is not None and orig.state not in (TaskState.DONE,):
                     orig.state = TaskState.DONE  # satisfied by twin
             elif t.tid in self._speculated:
-                # original won; cancel its twin
-                twin_tid = next((k for k, v in self._twins.items() if v == t.tid), None)
+                # original won; cancel its twin (reverse map, not an O(n) scan)
+                twin_tid = self._twin_of.pop(t.tid, None)
                 if twin_tid:
                     cancel = twin_tid
                     del self._twins[twin_tid]
                 self._speculated.discard(t.tid)
             self.completed.append(t)
         else:
+            if orig_tid is not None:
+                self._twins[t.tid] = orig_tid  # still a live twin; retry below
             t.attempts += 1
             if t.attempts >= t.max_attempts:
                 t.state = TaskState.FAILED
                 self.failed.append(t)
+                if orig_tid is not None:
+                    self._twins.pop(t.tid, None)
+                    self._twin_of.pop(orig_tid, None)
+                    self._speculated.discard(orig_tid)
             else:
                 t.reset_for_retry()
-                self.queue.appendleft(t)
+                self._enqueue(t, front=True)
+        if cancel is not None and cancel in self.queue:
+            # the losing copy never left the wait queue: dequeue it now so it
+            # is not pointlessly executed (and double-counted) later
+            ct = self.tasks.get(cancel)
+            self.queue.remove(cancel)
+            if ct is not None:
+                if self._mcu:
+                    self._hints_drop(ct)
+                ct.state = TaskState.DONE   # satisfied by the winning copy
         return cancel
-
-    # ---------------- index coherence ---------------------------------------
-    def apply_index_updates(self, updates: Iterable[IndexUpdate]) -> None:
-        self.index.apply_batch(updates)
 
     # ---------------- speculation -------------------------------------------
     def speculation_candidates(self, now: float) -> list[Task]:
@@ -317,8 +541,13 @@ class Dispatcher:
         self.tasks[twin.tid] = twin
         self._speculated.add(t.tid)
         self._twins[twin.tid] = t.tid
-        self.queue.appendleft(twin)
+        self._twin_of[t.tid] = twin.tid
+        self._enqueue(twin, front=True)
         return twin
+
+    def twin_of(self, tid: str) -> Optional[str]:
+        """tid of the live speculative twin of ``tid``, if any (O(1))."""
+        return self._twin_of.get(tid)
 
     # ---------------- introspection -----------------------------------------
     @property

@@ -64,6 +64,10 @@ class SimConfig:
     # "rebalance" migrates it to live peers (beyond-paper), so later tasks
     # still find it via the index instead of re-reading the store.
     release_policy: str = "discard"       # discard | rebalance
+    # flow-rate solver: "incremental" (dirty-resource repricing, the default)
+    # or "naive" (global rescan per event; retained reference -- see
+    # tests/test_flow_equivalence.py and benchmarks/bench_engine.py)
+    flow_solver: str = "incremental"
     speculation_factor: float = 0.0
     provisioner: Optional[DynamicResourceProvisioner] = None
     provisioner_period_s: float = 1.0
@@ -123,7 +127,7 @@ class DiffusionSim:
         self.cfg = cfg
         tb = cfg.testbed
         self.loop = EventLoop()
-        self.net = FlowNetwork(self.loop)
+        self.net = FlowNetwork(self.loop, solver=cfg.flow_solver)
         self.store_read = BandwidthResource("store_read", tb.store_read_bw)
         self.store_write = BandwidthResource("store_write", tb.store_write_bw)
         self.store_meta = MetadataService(self.loop, tb.store_meta_latency_s)
@@ -225,7 +229,10 @@ class DiffusionSim:
             for r in range(replicas):
                 eid = eids[(i + r) % len(eids)]
                 self.nodes[eid].cache.put(ob)
-                self.dispatcher.index.insert(ob.oid, eid)
+                # route through the dispatcher hook so its incremental
+                # placement state stays coherent with the index
+                self.dispatcher.apply_index_updates(
+                    (IndexUpdate(eid, added=(ob.oid,)),))
 
     # ------------- submission / run ----------------------------------------------
     def submit(self, tasks: Iterable[Task]) -> None:
@@ -370,7 +377,10 @@ class DiffusionSim:
 
     def _emit_update(self, eid: str, upd: IndexUpdate, now: float) -> None:
         if self.cfg.index_update_interval_s <= 0:
-            self.dispatcher.index.apply(upd)
+            # synchronous (tight coherence) path still goes through the
+            # dispatcher hook, which patches the queued-task hint cache and
+            # the inverted executor->score map incrementally
+            self.dispatcher.apply_index_updates((upd,))
             return
         buf = self._pending_updates.setdefault(eid, [])
         if not buf:
@@ -467,10 +477,8 @@ class DiffusionSim:
 
     def _speculation_tick(self, now: float) -> None:
         for t in self.dispatcher.speculation_candidates(now):
-            self.dispatcher.make_twin(t, now)
-            twin_tid = next(k for k, v in self.dispatcher._twins.items()
-                            if v == t.tid)
-            self._task_gen.setdefault(twin_tid, 0)
+            twin = self.dispatcher.make_twin(t, now)
+            self._task_gen.setdefault(twin.tid, 0)
         self._pump(now)
         if not self.loop.empty or self.dispatcher.queue_len:
             self.loop.after(1.0, self._speculation_tick)

@@ -13,6 +13,15 @@ under-fill one when a flow is bottlenecked elsewhere) and is deterministic,
 which we value more than the last few percent of model fidelity.  Calibration
 constants live in testbeds.py; see DESIGN.md §2 for the calibration story.
 
+Rebalancing is *incremental* (``solver="incremental"``, the default): a flow
+start/finish/cancel only reprices flows sharing a resource whose flow count
+changed, and a flow whose rate is unchanged keeps its generation and its
+already-scheduled completion event.  The O(F)-scan-per-event reference
+implementation is retained as ``solver="naive"`` — it produces bit-identical
+results (tests/test_flow_equivalence.py) because both solvers advance a
+flow's byte clock only at rate changes, from the same float anchors.  The
+invariants that make this equivalence hold are documented in DESIGN.md §3.
+
 MetadataService models the persistent store's metadata path (file open,
 mkdir/symlink/rmdir for the paper's sandbox wrapper) as a single FIFO server
 with fixed per-op latency -- this is what produces the paper's ~21 tasks/s
@@ -23,7 +32,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
 EPS = 1e-12
 
@@ -47,6 +56,9 @@ class Flow:
     resources: tuple[BandwidthResource, ...]
     on_done: Callable[[float], None]
     kind: str = ""
+    # (done, last_t, rate) is an *anchor*: done is exact as of last_t and the
+    # flow progresses at ``rate`` since.  The anchor moves only when the rate
+    # changes -- this is what keeps the two solvers float-identical.
     done: float = 0.0
     rate: float = 0.0
     last_t: float = 0.0
@@ -69,8 +81,11 @@ class EventLoop:
         self._heap: list[_Event] = []
         self._seq = itertools.count()
         self.now = 0.0
+        self.n_scheduled = 0   # total heap pushes (engine-cost observability)
+        self.n_fired = 0
 
     def at(self, t: float, fn: Callable[[float], None]) -> None:
+        self.n_scheduled += 1
         heapq.heappush(self._heap, _Event(max(t, self.now), next(self._seq), fn))
 
     def after(self, dt: float, fn: Callable[[float], None]) -> None:
@@ -80,6 +95,7 @@ class EventLoop:
         while self._heap and self._heap[0].t <= until:
             ev = heapq.heappop(self._heap)
             self.now = ev.t
+            self.n_fired += 1
             ev.fn(ev.t)
         return self.now
 
@@ -89,15 +105,32 @@ class EventLoop:
 
 
 class FlowNetwork:
-    """Manages fluid flows over shared resources on an EventLoop."""
+    """Manages fluid flows over shared resources on an EventLoop.
 
-    def __init__(self, loop: EventLoop) -> None:
+    ``solver``:
+      * ``"incremental"`` (default) -- dirty-resource propagation: only flows
+        sharing a resource whose flow count changed are repriced, and an ETA
+        event is (re)scheduled only when the rate actually changed.
+      * ``"naive"`` -- the retained reference: every rebalance scans every
+        live flow and re-pushes its ETA event (the O(F²) event storm).  Kept
+        for the golden-equivalence test and as the benchmark baseline.
+    """
+
+    def __init__(self, loop: EventLoop, solver: str = "incremental") -> None:
+        if solver not in ("incremental", "naive"):
+            raise ValueError(f"unknown flow solver {solver!r}")
         self.loop = loop
+        self.solver = solver
         self._flows: dict[int, Flow] = {}
         self._fid = itertools.count()
         # byte ledger: kind -> bytes completed
         self.bytes_by_kind: dict[str, float] = {}
         self.flow_log: list[tuple[float, float, float, str]] = []  # (t0, t1, bytes, kind)
+        # engine-cost observability
+        self.n_rebalances = 0
+        self.n_rate_recomputes = 0
+        self.n_events_scheduled = 0
+        self.n_event_skips = 0         # repriced but rate unchanged: no push
 
     # -- public API -----------------------------------------------------------
     def start(
@@ -122,7 +155,7 @@ class FlowNetwork:
         self._flows[fid] = f
         for r in f.resources:
             r.flows.add(fid)
-        self._rebalance()
+        self._rebalance(f.resources)
         return fid
 
     def cancel(self, fid: int) -> None:
@@ -132,30 +165,71 @@ class FlowNetwork:
         f.alive = False
         for r in f.resources:
             r.flows.discard(f.fid)
-        self._rebalance()
+        self._rebalance(f.resources)
+
+    @property
+    def live_flows(self) -> int:
+        return len(self._flows)
 
     # -- internals --------------------------------------------------------------
-    def _advance_all(self, now: float) -> None:
+    def _rebalance(self, dirty: Iterable[BandwidthResource]) -> None:
+        """Reprice flows after the flow count of ``dirty`` resources changed."""
+        self.n_rebalances += 1
+        if self.solver == "naive":
+            self._rebalance_naive()
+            return
+        now = self.loop.now
+        # Dirty-resource worklist.  Under equal-share, a flow's rate depends
+        # only on the flow counts of its own resources, and repricing never
+        # changes a count -- so the fixed point is reached after one wave and
+        # the worklist never grows.  (A max-min refinement would append a
+        # flow's other resources when its rate drops below their fair share.)
+        affected: set[int] = set()
+        for r in dirty:
+            affected |= r.flows
+        # ascending fid == _flows insertion order == the naive scan order,
+        # so same-timestamp completion events pop identically in both solvers
+        for fid in sorted(affected):
+            f = self._flows.get(fid)
+            if f is not None:
+                self._reprice(f, now)
+
+    def _rebalance_naive(self) -> None:
+        """Reference solver: global scan, unconditional ETA re-push."""
+        now = self.loop.now
         for f in self._flows.values():
+            self._reprice(f, now, always_push=True)
+
+    def _reprice(self, f: Flow, now: float, always_push: bool = False) -> None:
+        self.n_rate_recomputes += 1
+        new_rate = min(r.capacity / max(len(r.flows), 1) for r in f.resources)
+        if new_rate != f.rate:
+            # advance the byte clock to `now` and move the anchor; the
+            # previously scheduled event (old gen) becomes stale
             f.done += f.rate * (now - f.last_t)
             f.last_t = now
-
-    def _rebalance(self) -> None:
-        now = self.loop.now
-        self._advance_all(now)
-        for f in self._flows.values():
-            f.rate = min(r.capacity / max(len(r.flows), 1) for r in f.resources)
+            f.rate = new_rate
             f.gen += 1
-            remaining = max(f.size - f.done, 0.0)
-            eta = now + (remaining / f.rate if f.rate > EPS else float("inf"))
-            if eta != float("inf"):
-                gen = f.gen
-                self.loop.at(eta, lambda t, f=f, g=gen: self._maybe_finish(f, g, t))
+            self._push_eta(f)
+        elif always_push:
+            # naive mode re-pushes a duplicate of the live event (same
+            # anchor => same eta float, later heap seq => pops after it)
+            self._push_eta(f)
+        else:
+            self.n_event_skips += 1
+
+    def _push_eta(self, f: Flow) -> None:
+        remaining = max(f.size - f.done, 0.0)
+        eta = f.last_t + (remaining / f.rate if f.rate > EPS else float("inf"))
+        if eta != float("inf"):
+            self.n_events_scheduled += 1
+            gen = f.gen
+            self.loop.at(eta, lambda t, f=f, g=gen: self._maybe_finish(f, g, t))
 
     def _maybe_finish(self, f: Flow, gen: int, now: float) -> None:
         if not f.alive or f.gen != gen or f.fid not in self._flows:
             return
-        # gen matches => no rebalance occurred since this ETA was computed,
+        # gen matches => no repricing occurred since this ETA was computed,
         # so the rate has been constant and the flow is exactly done now
         # (modulo float drift, which we therefore clamp away).
         f.done = f.size
@@ -163,7 +237,7 @@ class FlowNetwork:
         del self._flows[f.fid]
         for r in f.resources:
             r.flows.discard(f.fid)
-        self._rebalance()
+        self._rebalance(f.resources)
         self._finish(f, now)
 
     def _finish(self, f: Flow, now: float) -> None:

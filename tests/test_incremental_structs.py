@@ -1,0 +1,261 @@
+"""Unit coverage for the incremental-engine data structures:
+
+  * TaskQueue -- tombstone deque with O(1) removal and stable positions;
+  * Dispatcher's inverted executor->score map staying coherent under
+    index updates, executor loss, and enqueue/dequeue churn;
+  * ExecutorCache LFU victim selection via the lazily-pruned heap
+    (must match the reference "min over (freq, order)" rule exactly);
+  * ShardedIndex aggregate op counters.
+"""
+import random
+
+from repro.core.cache import EvictionPolicy, ExecutorCache
+from repro.core.index import IndexUpdate, LocationIndex, ShardedIndex
+from repro.core.objects import DataObject, Task
+from repro.core.policies import DispatchPolicy
+from repro.core.scheduler import Dispatcher, TaskQueue
+
+
+# ---------------- TaskQueue -------------------------------------------------
+
+def test_taskqueue_fifo_and_removal():
+    q = TaskQueue()
+    ts = [Task(inputs=()) for _ in range(5)]
+    for t in ts:
+        q.append(t)
+    assert len(q) == 5 and ts[0].tid in q
+    assert q.remove(ts[2].tid) and not q.remove(ts[2].tid)
+    assert [t.tid for t in q] == [ts[i].tid for i in (0, 1, 3, 4)]
+    assert q.popleft() is ts[0]
+    q.appendleft(ts[2])                      # re-enqueue after removal
+    assert q.popleft() is ts[2]
+    assert [t.tid for t in q.first_live(10)] == [ts[1].tid, ts[3].tid, ts[4].tid]
+    # positions give the FIFO total order without walking the deque
+    assert q.position(ts[1].tid) < q.position(ts[3].tid) < q.position(ts[4].tid)
+
+
+def test_taskqueue_compaction_keeps_order():
+    q = TaskQueue()
+    ts = [Task(inputs=()) for _ in range(300)]
+    for t in ts:
+        q.append(t)
+    rng = random.Random(0)
+    removed = set(rng.sample(range(300), 200))
+    for i in removed:
+        q.remove(ts[i].tid)                  # triggers compaction internally
+    expect = [ts[i].tid for i in range(300) if i not in removed]
+    assert [t.tid for t in q] == expect
+    out = [q.popleft().tid for _ in range(len(q))]
+    assert out == expect
+    assert len(q) == 0 and not q
+
+
+# ---------------- inverted score map ---------------------------------------
+
+def _mcu(n_exec=3):
+    d = Dispatcher(DispatchPolicy.MAX_COMPUTE_UTIL)
+    for i in range(n_exec):
+        d.executor_joined(f"e{i}", now=0.0)
+    return d
+
+
+def _scores_reference(d: Dispatcher, eid: str) -> dict[str, int]:
+    """What the inverted map must equal: fresh index lookups per queued task."""
+    out = {}
+    for t in d.queue:
+        score = 0
+        for oid in t.inputs:
+            if eid in d.index.lookup(oid):
+                score += d.sizes.get(oid, 1)
+        if score > 0:
+            out[t.tid] = score
+    return out
+
+
+def test_exec_scores_follow_index_updates():
+    d = _mcu()
+    d.sizes.update({"a": 100, "b": 30, "c": 7})
+    d.index.insert("a", "e0")
+    t1, t2 = Task(inputs=("a", "b")), Task(inputs=("b", "c"))
+    d.submit([t1, t2], 0.0)
+    assert d._exec_scores.get("e0", {}) == {t1.tid: 100}
+    # a cache insertion lands on e1 -> both waiters rescored
+    d.apply_index_updates([IndexUpdate("e1", added=("b",))])
+    assert d._exec_scores.get("e1", {}) == {t1.tid: 30, t2.tid: 30}
+    # eviction removes it again
+    d.apply_index_updates([IndexUpdate("e1", removed=("b",))])
+    assert d._exec_scores.get("e1", {}) == {}
+    for eid in ("e0", "e1", "e2"):
+        assert d._exec_scores.get(eid, {}) == _scores_reference(d, eid)
+
+
+def test_exec_scores_purged_on_executor_loss_and_dispatch():
+    d = _mcu()
+    d.sizes["a"] = 50
+    d.index.insert("a", "e1")
+    t = Task(inputs=("a",))
+    blockers = [Task(inputs=()) for _ in range(3)]
+    d.submit(blockers, 0.0)
+    d.next_dispatches(0.0)                   # all executors now busy
+    d.submit([t], 0.0)
+    assert d._exec_scores["e1"] == {t.tid: 50}
+    d.executor_left("e1", 1.0, failed=True)
+    assert "e1" not in d._exec_scores
+    assert d._hint_cache[t.tid] == {}        # e1 scrubbed from hints
+    d.task_finished(blockers[0], 1.0)
+    out = d.next_dispatches(1.0)
+    # e1's requeued blocker went to the queue front; t follows once the
+    # next executor frees up
+    assert [o.task.tid for o in out] == [blockers[1].tid]
+    d.task_finished(blockers[1], 2.0)
+    out = d.next_dispatches(2.0)
+    assert [o.task.tid for o in out] == [t.tid]
+    assert t.tid not in d._hint_cache        # dequeued -> forgotten
+
+
+def test_mcu_dispatch_equals_reference_scan():
+    """Random churn: the incremental MCU picks the same executor/task pairs
+    a fresh window-rescan implementation would."""
+    rng = random.Random(3)
+    d = _mcu(n_exec=4)
+    oids = [f"o{i}" for i in range(20)]
+    for oid in oids:
+        d.sizes[oid] = rng.randrange(1, 100)
+        for eid in rng.sample(["e0", "e1", "e2", "e3"], rng.randrange(0, 3)):
+            d.index.insert(oid, eid)
+    tasks = [Task(inputs=tuple(rng.sample(oids, rng.randrange(1, 3))))
+             for _ in range(30)]
+    d.submit(tasks, 0.0)
+    done = []
+    now = 0.0
+    while len(done) < len(tasks):
+        # reference expectation for the next dispatch round
+        out = d.next_dispatches(now)
+        assert out, "dispatcher stalled"
+        for disp in out:
+            # executor must be the window-max for its position in avail order
+            done.append(disp.task)
+            # churn the index between rounds
+            if rng.random() < 0.5:
+                oid = rng.choice(oids)
+                d.apply_index_updates([IndexUpdate(
+                    rng.choice(["e0", "e1", "e2", "e3"]),
+                    added=(oid,) if rng.random() < 0.7 else (),
+                    removed=(oid,) if rng.random() >= 0.7 else ())])
+        for disp in out:
+            d.task_finished(disp.task, now + 1.0)
+        now += 1.0
+        for eid in ("e0", "e1", "e2", "e3"):
+            assert d._exec_scores.get(eid, {}) == _scores_reference(d, eid)
+    assert len(d.completed) == 30
+
+
+def test_cancelled_queued_twin_is_dequeued_not_executed():
+    """If the original finishes while its speculative twin is still waiting
+    in the queue, the twin must be removed, not run to completion later."""
+    d = Dispatcher(DispatchPolicy.FIRST_AVAILABLE, speculation_factor=2.0,
+                   min_completions_for_speculation=1)
+    d.executor_joined("e0", 0.0)
+    slow = Task(inputs=())
+    d.submit([slow], 0.0)
+    d.next_dispatches(0.0)                   # e0 busy with the original
+    twin = d.make_twin(slow, 5.0)            # twin queued, no free executor
+    assert twin.tid in d.queue
+    cancel = d.task_finished(slow, 6.0)      # original wins
+    assert cancel == twin.tid
+    assert twin.tid not in d.queue           # dequeued, not left to run
+    assert d.next_dispatches(6.0) == []
+    assert len(d.completed) == 1             # counted exactly once
+
+
+def test_twin_reverse_map():
+    d = Dispatcher(DispatchPolicy.FIRST_AVAILABLE, speculation_factor=2.0,
+                   min_completions_for_speculation=1)
+    d.executor_joined("e0", 0.0)
+    d.executor_joined("e1", 0.0)
+    slow = Task(inputs=())
+    d.submit([slow], 0.0)
+    d.next_dispatches(0.0)
+    twin = d.make_twin(slow, 5.0)
+    assert d.twin_of(slow.tid) == twin.tid
+    d.next_dispatches(5.0)
+    cancel = d.task_finished(slow, 6.0)      # original wins
+    assert cancel == twin.tid
+    assert d.twin_of(slow.tid) is None
+
+
+# ---------------- LFU heap -------------------------------------------------
+
+def _reference_lfu_victim(cache: ExecutorCache):
+    cands = [o for o in cache._entries if o not in cache._pinned]
+    if not cands:
+        return None
+    return min(cands, key=lambda o: (cache._freq.get(o, 0), cache._order[o]))
+
+
+def test_lfu_heap_matches_reference_under_churn():
+    rng = random.Random(1)
+    cache = ExecutorCache(10_000, EvictionPolicy.LFU)
+    for step in range(2000):
+        r = rng.random()
+        if r < 0.5:
+            oid = f"x{rng.randrange(60)}"
+            if oid in cache:
+                cache.get(oid)               # bump freq
+            else:
+                # check the victim the heap WOULD pick before inserting
+                if cache.used_bytes + 500 > cache.capacity_bytes:
+                    assert cache._pick_victim() == _reference_lfu_victim(cache)
+                cache.put(DataObject(oid, 500))
+        elif r < 0.6 and len(cache):
+            oid = rng.choice(list(cache.contents()))
+            cache.pin(oid)
+        elif r < 0.7:
+            for oid in list(cache._pinned):
+                cache.unpin(oid)
+        elif len(cache):
+            assert cache._pick_victim() == _reference_lfu_victim(cache)
+    assert cache.used_bytes <= cache.capacity_bytes
+    assert cache.used_bytes == sum(cache._entries.values())
+
+
+def test_random_eviction_only_unpinned_and_bounded():
+    cache = ExecutorCache(1000, EvictionPolicy.RANDOM, seed=5)
+    for i in range(10):
+        cache.put(DataObject(f"r{i}", 100))
+    cache.pin("r3")
+    cache.pin("r7")
+    for i in range(10, 40):
+        cache.put(DataObject(f"r{i}", 100))
+        assert "r3" in cache and "r7" in cache      # pinned survive
+        assert cache.used_bytes <= cache.capacity_bytes
+
+
+def test_random_eviction_all_pinned_rejects():
+    cache = ExecutorCache(300, EvictionPolicy.RANDOM)
+    for i in range(3):
+        cache.put(DataObject(f"p{i}", 100))
+        cache.pin(f"p{i}")
+    before = cache.contents()
+    assert cache.put(DataObject("q", 100)) == []
+    assert cache.contents() == before and cache.stats.rejected == 1
+
+
+# ---------------- ShardedIndex counters ------------------------------------
+
+def test_sharded_index_counters_aggregate():
+    si = ShardedIndex(n_shards=4)
+    li = LocationIndex()
+    for i in range(100):
+        si.insert(f"o{i}", f"e{i % 3}")
+        li.insert(f"o{i}", f"e{i % 3}")
+    for i in range(50):
+        si.lookup(f"o{i}")
+        li.lookup(f"o{i}")
+    for i in range(20):
+        si.remove(f"o{i}", f"e{i % 3}")
+        li.remove(f"o{i}", f"e{i % 3}")
+    assert (si.n_inserts, si.n_lookups, si.n_removes) == \
+           (li.n_inserts, li.n_lookups, li.n_removes) == (100, 50, 20)
+    t = si.time_ops(2000)
+    assert t["insert_s"] > 0 and t["lookup_s"] > 0

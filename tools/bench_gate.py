@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Engine-performance regression gate.
+
+Replays benchmarks/bench_engine.py's small fixed configuration (GATE_NODES x
+GATE_TASKS, incremental solver, best-of-N wall clock) and compares against
+the ``gate`` entry of the committed BENCH_engine.json baseline.  Fails (exit
+1) when wall-clock regresses more than ``--threshold`` (default 25%) -- the
+guard that keeps the incremental engine from quietly rotting back toward the
+naive solver's O(F^2) behaviour.
+
+    PYTHONPATH=src python tools/bench_gate.py                # repo root
+    PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
+
+Regenerate the baseline (e.g. after an intentional engine change or on new
+hardware) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_engine --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=str(REPO_ROOT / "BENCH_engine.json"))
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional wall-clock regression")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per measurement; best-of-N is compared")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline's gate entry instead of failing")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+    from benchmarks.bench_engine import GATE_NODES, GATE_TASKS, gate_measure
+
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        print(f"bench_gate: no baseline at {baseline_path}; run "
+              f"`python -m benchmarks.bench_engine` first", file=sys.stderr)
+        return 1
+    baseline = json.loads(baseline_path.read_text())
+    gate = baseline.get("gate")
+    if not gate:
+        print("bench_gate: baseline has no 'gate' entry", file=sys.stderr)
+        return 1
+    if (gate.get("n_nodes"), gate.get("n_tasks")) != (GATE_NODES, GATE_TASKS):
+        print(f"bench_gate: baseline gate shape {gate.get('n_nodes')}x"
+              f"{gate.get('n_tasks')} != code's {GATE_NODES}x{GATE_TASKS}; "
+              f"regenerate the baseline", file=sys.stderr)
+        return 1
+
+    current = gate_measure(repeats=args.repeats)
+    base_wall, cur_wall = gate["wall_s"], current["wall_s"]
+    ratio = cur_wall / max(base_wall, 1e-9)
+    verdict = "OK" if ratio <= 1.0 + args.threshold else "REGRESSION"
+    print(f"bench_gate: engine wall {cur_wall:.3f}s vs baseline "
+          f"{base_wall:.3f}s ({ratio:.2f}x, threshold "
+          f"{1.0 + args.threshold:.2f}x) -> {verdict}")
+    # a correctness canary rides along: the gate run must complete every task
+    if current["n_completed"] != gate["n_completed"]:
+        print(f"bench_gate: completed {current['n_completed']} != baseline "
+              f"{gate['n_completed']} -- engine behaviour changed",
+              file=sys.stderr)
+        return 1
+    if verdict == "REGRESSION":
+        if args.update:
+            baseline["gate"] = current
+            baseline_path.write_text(
+                json.dumps(baseline, indent=2, sort_keys=True) + "\n")
+            print(f"bench_gate: baseline gate updated in {baseline_path}")
+            return 0
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
