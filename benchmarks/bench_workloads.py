@@ -1,0 +1,200 @@
+"""Workload-subsystem benchmark: open-loop elasticity + trace replay cost.
+
+Two scenarios, both through the full engine (DiffusionSim + provisioner +
+repro.workloads):
+
+  sine      the companion paper's (arXiv 0808.3535) sine-wave demand ramp at
+            up to --nodes executors: measures the grow/shrink cycle
+            (allocations, releases, performance index, avg slowdown) and the
+            engine's wall-clock cost of heap-scheduled ARRIVAL events;
+  zipf      a Zipf(1.1) replay: generates the workload, records it to JSONL,
+            replays it, runs the replay, and asserts the replayed run's
+            metrics fingerprint matches the direct run -- so the committed
+            baseline also guards trace-format stability.
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_workloads \
+        --nodes 256 --tasks 20000 --out BENCH_workloads.json
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import sys
+import time
+
+from repro.core import ANL_UC, DispatchPolicy, DynamicResourceProvisioner
+from repro.core.provisioner import AllocationPolicy
+from repro.core.simulator import DiffusionSim, SimConfig
+from repro.workloads import (MetricsCollector, SineWaveArrivals,
+                             ZipfPopularity, generate, record, replay)
+
+from .common import row
+
+MB = 10**6
+
+#: the small fixed configuration tools/bench_gate.py replays against the
+#: committed baseline (kept tiny so the gate costs seconds, not minutes)
+GATE_NODES = 32
+GATE_TASKS = 2_000
+
+
+def _sine_workload(n_tasks: int, n_nodes: int, seed: int):
+    # demand sized so the peak wants roughly the full pool and the trough
+    # nearly none: mean = nodes/2 tasks/s at 1 s/task, 95% amplitude.
+    mean = max(n_nodes / 2.0, 1.0)
+    return generate(
+        "sine", SineWaveArrivals(mean_rate=mean, amplitude=0.95 * mean,
+                                 period_s=120.0),
+        ZipfPopularity(1.1), n_tasks=n_tasks,
+        n_objects=max(n_tasks // 20, 16), object_bytes=10 * MB,
+        compute_seconds=1.0, seed=seed)
+
+
+def _provisioner(n_nodes: int) -> DynamicResourceProvisioner:
+    return DynamicResourceProvisioner(
+        min_executors=1, max_executors=n_nodes,
+        policy=AllocationPolicy.EXPONENTIAL, queue_threshold=2,
+        idle_timeout_s=5.0, trigger_cooldown_s=1.0)
+
+
+def _run(wl, n_nodes: int, provisioner=None, seed: int = 0):
+    cfg = SimConfig(
+        testbed=ANL_UC, n_nodes=1 if provisioner else n_nodes,
+        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+        cache_capacity_bytes=10**13, provisioner=provisioner, seed=seed)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    t0 = time.perf_counter()
+    r = sim.run()
+    wall = time.perf_counter() - t0
+    m = MetricsCollector(ANL_UC).collect(r, n_submitted=sim.n_submitted)
+    return r, m, wall
+
+
+def measure_sine(n_nodes: int, n_tasks: int, seed: int = 0) -> dict:
+    """Elastic sine-wave run; the provisioner must grow AND shrink."""
+    wl = _sine_workload(n_tasks, n_nodes, seed)
+    prov = _provisioner(n_nodes)
+    _, m, wall = _run(wl, n_nodes, provisioner=prov, seed=seed)
+    return {
+        "scenario": "sine", "n_nodes": n_nodes, "n_tasks": n_tasks,
+        "wall_s": round(wall, 4),
+        "sim_makespan_s": m.makespan_s,
+        "n_completed": m.n_completed,
+        "n_allocated": prov.n_allocated,
+        "n_released": prov.n_released,
+        "peak_executors": m.peak_executors,
+        "low_executors": m.low_executors,
+        "cache_hit_ratio": m.cache_hit_ratio,
+        "avg_slowdown": m.avg_slowdown,
+        "performance_index": m.performance_index,
+        "tasks_per_wall_s": round(n_tasks / max(wall, 1e-9), 1),
+    }
+
+
+def measure_zipf_replay(n_nodes: int, n_tasks: int, seed: int = 0) -> dict:
+    """Zipf workload: direct run vs JSONL-replayed run, identity-checked."""
+    wl = generate(
+        "zipf", SineWaveArrivals(mean_rate=max(n_nodes / 2.0, 1.0),
+                                 amplitude=0.0, period_s=60.0),
+        ZipfPopularity(1.1), n_tasks=n_tasks,
+        n_objects=max(n_tasks // 10, 16), object_bytes=10 * MB,
+        compute_seconds=0.2, seed=seed)
+    buf = io.StringIO()
+    t0 = time.perf_counter()
+    record(wl, buf)
+    record_s = time.perf_counter() - t0
+    buf.seek(0)
+    t0 = time.perf_counter()
+    wl2 = replay(buf)
+    replay_s = time.perf_counter() - t0
+    _, m_direct, _ = _run(wl, n_nodes, seed=seed)
+    _, m_replayed, wall = _run(wl2, n_nodes, seed=seed)
+    return {
+        "scenario": "zipf_replay", "n_nodes": n_nodes, "n_tasks": n_tasks,
+        "wall_s": round(wall, 4),
+        "record_s": round(record_s, 4),
+        "replay_s": round(replay_s, 4),
+        "sim_makespan_s": m_replayed.makespan_s,
+        "n_completed": m_replayed.n_completed,
+        "cache_hit_ratio": m_replayed.cache_hit_ratio,
+        "avg_slowdown": m_replayed.avg_slowdown,
+        "replay_identical": m_direct == m_replayed,
+        "tasks_per_wall_s": round(n_tasks / max(wall, 1e-9), 1),
+    }
+
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The small fixed run bench_gate.py replays; best-of-N wall clock.
+
+    Sums the sine + zipf-replay walls so the gate covers both the ARRIVAL
+    path and the trace-replay path; the correctness canaries (completions,
+    grow/shrink, replay identity) ride along.
+    """
+    best = None
+    for _ in range(repeats):
+        s = measure_sine(GATE_NODES, GATE_TASKS)
+        z = measure_zipf_replay(GATE_NODES, GATE_TASKS)
+        m = {
+            "n_nodes": GATE_NODES, "n_tasks": GATE_TASKS,
+            "wall_s": round(s["wall_s"] + z["wall_s"], 4),
+            "n_completed": s["n_completed"] + z["n_completed"],
+            "n_allocated": s["n_allocated"],
+            "n_released": s["n_released"],
+            "replay_identical": z["replay_identical"],
+        }
+        if best is None or m["wall_s"] < best["wall_s"]:
+            best = m
+    return best
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: scaled-down workload scenarios as CSV rows."""
+    n_tasks = max(int(8_000 * scale), 800)
+    s = measure_sine(GATE_NODES, n_tasks)
+    z = measure_zipf_replay(GATE_NODES, n_tasks)
+    return [
+        row("workloads", "sine_wall_s", s["wall_s"], "s",
+            note=f"{GATE_NODES} nodes / {n_tasks} tasks, elastic pool"),
+        row("workloads", "sine_allocated", s["n_allocated"], "executors"),
+        row("workloads", "sine_released", s["n_released"], "executors"),
+        row("workloads", "sine_performance_index", s["performance_index"],
+            "ratio", note="ideal core-s / allocated core-s (0808.3535 PI)"),
+        row("workloads", "sine_avg_slowdown", s["avg_slowdown"], "x"),
+        row("workloads", "zipf_replay_wall_s", z["wall_s"], "s"),
+        row("workloads", "zipf_cache_hit_ratio", z["cache_hit_ratio"],
+            "ratio"),
+        row("workloads", "replay_identical",
+            1.0 if z["replay_identical"] else 0.0, "bool",
+            note="JSONL-replayed run metrics == direct run"),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=256)
+    ap.add_argument("--tasks", type=int, default=20_000)
+    ap.add_argument("--out", default="BENCH_workloads.json")
+    args = ap.parse_args(argv)
+
+    sine = measure_sine(args.nodes, args.tasks)
+    zipf = measure_zipf_replay(args.nodes, args.tasks)
+    print(f"# sine: +{sine['n_allocated']}/-{sine['n_released']} executors, "
+          f"PI {sine['performance_index']:.3f}, wall {sine['wall_s']}s",
+          file=sys.stderr)
+    print(f"# zipf replay: identical={zipf['replay_identical']}, "
+          f"hit {zipf['cache_hit_ratio']:.3f}, wall {zipf['wall_s']}s",
+          file=sys.stderr)
+    out = {"sine": sine, "zipf_replay": zipf, "gate": gate_measure()}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

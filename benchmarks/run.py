@@ -24,12 +24,14 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None, help="also write CSV here")
     ap.add_argument("--gate", action="store_true",
                     help="also run tools/bench_gate.py against the committed "
-                         "BENCH_engine.json baseline (fails on >25%% engine "
-                         "wall-clock regression)")
+                         "BENCH_engine.json + BENCH_workloads.json baselines "
+                         "(fails on >25%% wall-clock regression or a "
+                         "correctness-canary miss)")
     args = ap.parse_args(argv)
 
     from . import (bench_engine, bench_index, bench_microbench,
-                   bench_roofline, bench_scheduler, bench_stacking)
+                   bench_roofline, bench_scheduler, bench_stacking,
+                   bench_workloads)
 
     modules = [
         ("index", bench_index, 1.0 if args.full else 0.5),
@@ -37,6 +39,7 @@ def main(argv=None) -> int:
         ("stacking", bench_stacking, 0.2 if args.full else 0.02),
         ("scheduler", bench_scheduler, 1.0 if args.full else 0.25),
         ("engine", bench_engine, 1.0 if args.full else 0.25),
+        ("workloads", bench_workloads, 1.0 if args.full else 0.25),
         ("roofline", bench_roofline, 1.0),
     ]
     rows = []

@@ -2,11 +2,18 @@
 stacking over data diffusion, with the REAL compute executed by the Pallas
 stacking kernel (repro/kernels/stacking, interpret mode on CPU).
 
-Two layers run together here:
+Three layers run together here:
+  * workload plane: a seeded ``repro.workloads`` StackingTrace (the §4.3
+    trace shape: every file accessed ``locality`` times, order shuffled)
+    paced into the runtime by the open-loop submitter thread;
   * scheduling plane: the threaded DiffusionRuntime moves (synthetic) image
     files through executor caches under max-compute-util, exactly as §5.3;
   * compute plane: each task extracts its object's ROI and the coadd runs
     through stack_rois (calibrate -> sub-pixel shift -> accumulate).
+
+All randomness is derived from fixed seeds (file content from the file id,
+shift offsets from the task's input id), so the stacked pixels -- and the
+printed summary -- are identical run-to-run regardless of thread timing.
 
   PYTHONPATH=src python examples/astronomy_stacking.py --locality 10
 """
@@ -19,9 +26,12 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.astro_stacking import ROI_SHAPE, workload
-from repro.core import DataObject, DispatchPolicy, Task
+from repro.core import DataObject, DispatchPolicy
 from repro.core.runtime import DiffusionRuntime
 from repro.kernels.stacking import ops as st_ops
+from repro.workloads import PoissonArrivals, StackingTrace, generate
+
+SEED = 0
 
 
 def main(argv=None) -> int:
@@ -31,47 +41,69 @@ def main(argv=None) -> int:
                     help="number of stacking objects (scaled workload)")
     ap.add_argument("--hosts", type=int, default=4)
     ap.add_argument("--policy", default="max-compute-util")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="wall seconds per workload second for the paced "
+                         "submitter (0 = submit as fast as possible)")
     args = ap.parse_args(argv)
 
-    wl = workload(args.locality)
+    wl_cfg = workload(args.locality)
+    locality = max(int(args.locality), 1)
     n_files = max(int(args.objects / args.locality), 1)
-    rng = np.random.default_rng(0)
     h, w = ROI_SHAPE
+
+    # seeded workload: Poisson arrivals, §4.3 stacking-trace popularity
+    wl = generate(
+        "astro",
+        PoissonArrivals(rate_per_s=max(args.objects / 2.0, 1.0)),
+        StackingTrace(locality=locality, shuffle_seed=SEED),
+        n_tasks=args.objects,
+        objects=[DataObject(f"img{i}", 8 * h * w * 4) for i in range(n_files)],
+        seed=SEED)
+
+    def make_tiles(ob: DataObject) -> np.ndarray:
+        """File content derived from the file id: identical every run."""
+        file_rng = np.random.default_rng([SEED, int(ob.oid[3:])])
+        return file_rng.normal(500, 100, size=(8, h, w)).astype(np.float32)
+
+    def stack_object(inputs):
+        ((oid, tiles),) = inputs.items()
+        n = tiles.shape[0]
+        sky = tiles.mean(axis=(1, 2)) * 0.1
+        cal = np.ones(n, np.float32)
+        # shift offsets seeded by the *input id*, not a shared stream, so
+        # results do not depend on thread scheduling order
+        task_rng = np.random.default_rng([SEED + 1, int(oid[3:])])
+        dy = task_rng.random(n).astype(np.float32)
+        dx = task_rng.random(n).astype(np.float32)
+        return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
 
     rt = DiffusionRuntime(n_executors=args.hosts,
                           policy=DispatchPolicy(args.policy),
                           cache_capacity_bytes=1 << 30)
-    # synthetic "FITS" files: a stack of image tiles per file
-    for i in range(n_files):
-        tiles = rng.normal(500, 100, size=(8, h, w)).astype(np.float32)
-        rt.put_object(DataObject(f"img{i}", tiles.nbytes), tiles)
-
-    def stack_object(inputs):
-        (tiles,) = inputs.values()
-        n = tiles.shape[0]
-        sky = tiles.mean(axis=(1, 2)) * 0.1
-        cal = np.ones(n, np.float32)
-        dy = rng.random(n).astype(np.float32)
-        dx = rng.random(n).astype(np.float32)
-        return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
-
-    tasks = [Task(inputs=(f"img{i % n_files}",), fn=stack_object)
-             for i in range(args.objects)]
     t0 = time.time()
-    rt.submit(tasks)
-    ok = rt.wait(300)
+    submitter = rt.submit_workload(wl, task_fn=stack_object,
+                                   payload_factory=make_tiles,
+                                   time_scale=args.time_scale)
+    submitter.join(300)
+    ok = not submitter.is_alive() and rt.wait(300)
     dt = time.time() - t0
     assert ok, "stacking timed out"
-    results = [t.result for t in tasks]
+    done = {t.tid: t for t in rt.dispatcher.completed}
+    results = [done[f"astro-{i}"].result for i in range(args.objects)]
     assert all(r.shape == ROI_SHAPE for r in results)
     lg = rt.ledger
-    ideal = wl.ideal_cache_hit_ratio
+    ideal = wl_cfg.ideal_cache_hit_ratio
+    # deterministic summary -> stdout; wall-clock timing -> stderr (the only
+    # run-to-run-variable quantity in this example)
+    print(f"# wall time {dt:.2f}s (time_scale {args.time_scale})",
+          file=sys.stderr)
     print(f"stacked {len(results)} objects over {n_files} files "
-          f"(locality {args.locality}) on {args.hosts} hosts in {dt:.2f}s")
+          f"(locality {args.locality}) on {args.hosts} hosts")
     print(f"  cache hit ratio: {lg.global_hit_ratio:.2%} "
           f"(paper ideal 1-1/L = {ideal:.0%}; paper achieves >=90% of it)")
+    cached = (lg.bytes_c2c + lg.bytes_local) / 1e6
     print(f"  bytes: store={lg.bytes_store / 1e6:.1f}MB "
-          f"c2c={lg.bytes_c2c / 1e6:.1f}MB local={lg.bytes_local / 1e6:.1f}MB")
+          f"cache-served={cached:.1f}MB")
     print(f"  sample stacked-pixel mean: {float(results[0].mean()):.2f}")
     rt.shutdown()
     return 0

@@ -12,8 +12,10 @@ De-allocation: release executors idle longer than ``idle_timeout_s``
 (down to ``min_executors``).  The paper's experiments hold the pool fixed
 (\"do not investigate the effects of dynamic resource provisioning\"); the
 microbenchmarks therefore run with allocation=all-at-once and releases
-disabled, but DRP is exercised by tests/test_provisioner.py and the
-elastic-training example.
+disabled.  The DRP's policy matrix is covered by tests/test_provisioner.py,
+and the full grow/shrink cycle is driven end-to-end by the open-loop
+sine-wave workloads (repro.workloads + DiffusionSim.submit_workload; see
+benchmarks/bench_workloads.py and tests/test_workloads.py).
 """
 from __future__ import annotations
 

@@ -12,6 +12,10 @@ byte-ledger entry, so scheduling behaviour (placement, hit ratios, byte
 ledgers -- everything the paper evaluates) is identical while staying
 runnable in one process.  The Channel abstraction marks exactly the two
 seams (task dispatch, index updates) that become RPCs on a fleet.
+
+Submission is closed-loop (``submit``) or open-loop (``submit_workload``: a
+paced submitter thread replays a ``repro.workloads`` arrival schedule on the
+wall clock, optionally time-scaled).
 """
 from __future__ import annotations
 
@@ -168,18 +172,24 @@ class DiffusionRuntime:
         self._outstanding = 0
         self._update_buf: list[IndexUpdate] = []
         self._update_batch = max(index_update_batch, 1)
+        self._stop_pacing = threading.Event()
         self._seed = seed
+        self._next_worker_id = 0
         for i in range(n_executors):
             self.add_executor()
 
     # -- membership ----------------------------------------------------------------
     def add_executor(self) -> str:
         with self._lock:
-            eid = f"w{len(self.workers)}"
+            # monotonic ids: len(workers) would reuse a live eid after a
+            # removal and silently overwrite that worker (losing its task)
+            wid = self._next_worker_id
+            self._next_worker_id += 1
+            eid = f"w{wid}"
             w = ExecutorWorker(eid, self,
                                cache_capacity=self._cache_capacity(),
                                policy=self._cache_policy(),
-                               seed=self._seed + len(self.workers))
+                               seed=self._seed + wid)
             self.workers[eid] = w
             self.dispatcher.executor_joined(eid, time.monotonic())
         w.start()
@@ -208,11 +218,23 @@ class DiffusionRuntime:
             w = self.workers.pop(eid, None)
             if w is None:
                 return
-            requeued = self.dispatcher.executor_left(eid, time.monotonic(),
-                                                     failed=failed)
-            # tasks already running on the dead worker will be dropped by the
-            # alive check in _execute; their retries were re-queued above.
-            self._outstanding -= 0  # retries keep the same outstanding count
+            st = self.dispatcher.executors.get(eid)
+            running = set(st.running) if st is not None else set()
+            self.dispatcher.executor_left(eid, time.monotonic(),
+                                          failed=failed)
+            # in-flight completions from the dead worker are dropped by the
+            # membership guard in _execute.  Re-queued retries keep their
+            # outstanding count, but a task whose attempts were exhausted by
+            # executor_left is terminally FAILED and will never complete --
+            # account it here or wait() leaks forever.
+            terminal = sum(
+                1 for tid in running
+                if (t := self.dispatcher.tasks.get(tid)) is not None
+                and t.state is TaskState.FAILED)
+            if terminal:
+                self._outstanding -= terminal
+                if self._outstanding == 0:
+                    self._done.notify_all()
         w.stop()
         self._pump()
 
@@ -229,6 +251,51 @@ class DiffusionRuntime:
             self._outstanding += len(ts)
         self._pump()
         return len(ts)
+
+    def submit_workload(self, wl, *, task_fn: Optional[Callable[..., Any]] = None,
+                        payload_factory: Optional[Callable[[DataObject], Any]] = None,
+                        time_scale: float = 1.0,
+                        block: bool = False) -> threading.Thread:
+        """Open-loop submission: a paced submitter thread sleeps each task's
+        ``repro.workloads`` arrival gap (wall-clock, scaled by ``time_scale``;
+        0 collapses to as-fast-as-possible) and submits it, so demand arrives
+        on its own clock instead of as one pre-staged batch.
+
+        ``task_fn`` is attached to tasks that carry no callable (workload
+        events describe *shape*, not code); ``payload_factory`` materialises
+        store payloads for catalog objects not yet put.  ``wait()`` counts
+        tasks only after they arrive, so to drain a paced run: join the
+        returned thread, then ``wait()``.  ``shutdown()`` aborts any
+        in-flight paced schedule (the thread exits at its next arrival).
+        """
+        if time_scale < 0:
+            raise ValueError("time_scale must be >= 0")
+        if payload_factory is not None:
+            for ob in wl.objects:
+                if ob.oid not in self.store:
+                    self.put_object(ob, payload_factory(ob))
+        events = wl.tasks()
+
+        def _pace() -> None:
+            t0 = time.monotonic()
+            for t_arr, task in events:
+                if self._stop_pacing.is_set():
+                    return
+                if task.fn is None:
+                    task.fn = task_fn
+                if time_scale > 0:
+                    delay = t_arr * time_scale - (time.monotonic() - t0)
+                    # interruptible sleep: shutdown() aborts the schedule
+                    if delay > 0 and self._stop_pacing.wait(delay):
+                        return
+                self.submit((task,))
+
+        th = threading.Thread(target=_pace, daemon=True,
+                              name="workload-submitter")
+        th.start()
+        if block:
+            th.join()
+        return th
 
     def _pump(self) -> None:
         with self._lock:
@@ -289,6 +356,13 @@ class DiffusionRuntime:
             ok = False
             t.result = e
         with self._lock:
+            if self.workers.get(w.eid) is not w:
+                # this worker was removed mid-execution: executor_left already
+                # re-queued (or failed out) the task, so this attempt's
+                # outcome must not complete it a second time -- that would
+                # double-decrement _outstanding and wake wait() early while
+                # the retry is still in flight
+                return
             self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
             if ok or t.state is TaskState.FAILED:
                 self._outstanding -= 1
@@ -312,6 +386,7 @@ class DiffusionRuntime:
         return True
 
     def shutdown(self) -> None:
+        self._stop_pacing.set()    # abort any paced submitter threads
         for w in self.workers.values():
             w.stop()
 

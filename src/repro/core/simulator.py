@@ -19,6 +19,12 @@ Task lifecycle (mirrors §3.2.2):
 Fault tolerance exercised here: executor failure at a configured time
 (flows cancelled, index invalidated, tasks re-queued), straggler speculation
 (dispatcher twins), elastic pool via the DRP.
+
+Submission is either closed-loop (``submit``: a batch lands on the wait
+queue at once) or open-loop (``submit_workload``: one heap-scheduled ARRIVAL
+event per task at its ``repro.workloads`` arrival time, so queue depth
+tracks *demand* and the DRP grows/shrinks the pool against it; pool-size
+changes are sampled into ``pool_log`` for the workload metrics layer).
 """
 from __future__ import annotations
 
@@ -89,6 +95,10 @@ class SimResult:
     store_reads: int
     dispatcher: Dispatcher
     flow_log: list[tuple[float, float, float, str]]
+    # (t, live-executor count) samples; one initial entry, then one per
+    # membership change.  MetricsCollector integrates this for the
+    # provisioning metrics (executor-seconds, performance index).
+    pool_log: list[tuple[float, int]] = field(default_factory=list)
 
     @property
     def busy_span(self) -> float:
@@ -147,16 +157,25 @@ class DiffusionSim:
         self.local_hits = 0
         self.peer_hits = 0
         self.store_reads = 0
+        self.pool_log: list[tuple[float, int]] = []
+        self.n_submitted = 0
         for _ in range(cfg.n_nodes):
             self._add_node(0.0)
+        self._log_pool(0.0)
         for eid, t in cfg.fail_at.items():
             self.loop.at(t, lambda now, e=eid: self._fail_node(e, now))
+        self._prov_tick_live = False
         if cfg.provisioner is not None:
+            self._prov_tick_live = True
             self.loop.after(cfg.provisioner_period_s, self._provision_tick)
         if cfg.speculation_factor > 0:
             self.loop.after(1.0, self._speculation_tick)
 
     # ------------- membership -------------------------------------------------
+    def _log_pool(self, now: float) -> None:
+        self.pool_log.append(
+            (now, sum(1 for n in self.nodes.values() if n.alive)))
+
     def _add_node(self, now: float) -> str:
         tb = self.cfg.testbed
         eid = f"e{self._next_node_id}"
@@ -191,6 +210,7 @@ class DiffusionSim:
             for fid in self._task_flows.pop(tid, []):
                 self.net.cancel(fid)
         self.dispatcher.executor_left(eid, now, failed=True)
+        self._log_pool(now)
         self._pump(now)
 
     def _release_node(self, eid: str, now: float) -> None:
@@ -215,6 +235,7 @@ class DiffusionSim:
                                    lambda tt: None, kind="c2c")
         node.cache.drop_all()
         self.dispatcher.executor_left(eid, now, failed=False)
+        self._log_pool(now)
 
     # ------------- data placement ----------------------------------------------
     def add_objects(self, objs: Iterable[DataObject]) -> None:
@@ -238,9 +259,27 @@ class DiffusionSim:
     def submit(self, tasks: Iterable[Task]) -> None:
         ts = list(tasks)
         self.dispatcher.submit(ts, self.loop.now)
+        self.n_submitted += len(ts)
         for t in ts:
             self._task_gen.setdefault(t.tid, 0)
+        # resurrect the provisioner tick if it parked after a drained run
+        if self.cfg.provisioner is not None and not self._prov_tick_live:
+            self._prov_tick_live = True
+            self.loop.after(self.cfg.provisioner_period_s, self._provision_tick)
         self._pump(self.loop.now)
+
+    def submit_workload(self, wl) -> int:
+        """Open-loop submission: register the workload's catalog and heap-
+        schedule one ARRIVAL event per task at its arrival time.  The wait
+        queue then reflects *demand* rather than a pre-staged batch, which
+        is what drives the DynamicResourceProvisioner's grow/shrink cycle.
+        Returns the number of arrivals scheduled."""
+        self.add_objects(wl.objects)
+        n = 0
+        for t_arr, task in wl.tasks():
+            self.loop.at(t_arr, lambda now, tk=task: self.submit((tk,)))
+            n += 1
+        return n
 
     def run(self, until: float = float("inf")) -> SimResult:
         self.loop.run(until)
@@ -257,6 +296,7 @@ class DiffusionSim:
             store_reads=self.store_reads,
             dispatcher=d,
             flow_log=self.net.flow_log,
+            pool_log=list(self.pool_log),
         )
 
     # ------------- scheduling pump -----------------------------------------------
@@ -469,10 +509,13 @@ class DiffusionSim:
         if (not (self.loop.empty and self.dispatcher.queue_len == 0)
                 or live_after > prov.min_executors):
             self.loop.after(self.cfg.provisioner_period_s, self._provision_tick)
+        else:
+            self._prov_tick_live = False
 
     def _alloc_arrived(self, now: float) -> None:
         self._inflight_alloc -= 1
         self._add_node(now)
+        self._log_pool(now)
         self._pump(now)
 
     def _speculation_tick(self, now: float) -> None:

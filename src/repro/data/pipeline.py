@@ -101,10 +101,14 @@ class DiffusionDataPipeline:
 
     # -- prefetching iterator ----------------------------------------------
     def _producer(self, start_step: int, n_steps: int) -> None:
-        for s in range(start_step, start_step + n_steps):
-            if self._stop.is_set():
-                return
-            self._q.put((s, self.fetch_step(s)))
+        try:
+            for s in range(start_step, start_step + n_steps):
+                if self._stop.is_set():
+                    return
+                self._q.put((s, self.fetch_step(s)))
+        except BaseException as e:  # noqa: BLE001 - surface in the consumer
+            # a dead producer must not leave batches() blocked on q.get()
+            self._q.put((-1, e))
 
     def batches(self, start_step: int, n_steps: int
                 ) -> Iterator[tuple[int, np.ndarray]]:
@@ -112,7 +116,10 @@ class DiffusionDataPipeline:
             target=self._producer, args=(start_step, n_steps), daemon=True)
         self._thread.start()
         for _ in range(n_steps):
-            yield self._q.get()
+            step, b = self._q.get()
+            if isinstance(b, BaseException):
+                raise b
+            yield step, b
 
     def close(self) -> None:
         self._stop.set()

@@ -1,0 +1,43 @@
+"""Workload generation, trace record/replay, and run metrics.
+
+The open-loop layer the paper's elasticity story needs: arrival processes
+(arrivals.py) x object-popularity models (popularity.py) compose into a
+:class:`Workload` of timed tasks (workload.py); workloads serialise to a
+versioned JSONL trace and replay bit-identically (trace.py); finished runs
+reduce to the papers' headline numbers (metrics.py).  Engines consume
+workloads via ``DiffusionSim.submit_workload`` (heap-scheduled ARRIVAL
+events) and ``DiffusionRuntime.submit_workload`` (paced submitter thread).
+"""
+from .arrivals import (ARRIVALS, ArrivalProcess, BatchArrivals,
+                       BurstyArrivals, DiurnalArrivals, PoissonArrivals,
+                       SineWaveArrivals)
+from .metrics import MetricsCollector, RunMetrics
+from .popularity import (POPULARITY, PopularityModel, ShiftingWorkingSet,
+                         StackingTrace, UniformScan, ZipfPopularity)
+from .trace import TRACE_VERSION, events_fingerprint, record, replay
+from .workload import TaskEvent, Workload, generate
+
+__all__ = [
+    "ARRIVALS",
+    "ArrivalProcess",
+    "BatchArrivals",
+    "BurstyArrivals",
+    "DiurnalArrivals",
+    "MetricsCollector",
+    "POPULARITY",
+    "PoissonArrivals",
+    "PopularityModel",
+    "RunMetrics",
+    "ShiftingWorkingSet",
+    "SineWaveArrivals",
+    "StackingTrace",
+    "TRACE_VERSION",
+    "TaskEvent",
+    "UniformScan",
+    "Workload",
+    "ZipfPopularity",
+    "events_fingerprint",
+    "generate",
+    "record",
+    "replay",
+]

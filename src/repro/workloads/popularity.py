@@ -1,0 +1,147 @@
+"""Object-popularity models: *which* objects each arriving task reads.
+
+Composable with any arrival process (arrivals.py) via workload.generate().
+Each model deterministically maps (task index, seeded rng) -> input oids, so
+a (model, seed) pair always produces the same access sequence.
+
+  UniformScan        round-robin over the catalog -- the repo's historical
+                     ``uniform_tasks`` microbenchmark shape: with
+                     n_tasks = locality * n_objects every object is read
+                     exactly ``locality`` times.
+  ZipfPopularity     rank-skewed draws (web/cache-trace classic): object of
+                     rank r drawn with probability ~ 1/r^alpha.
+  ShiftingWorkingSet a hot window over the catalog that slides every
+                     ``shift_every`` tasks -- defeats pure-LFU caching and
+                     exercises eviction + re-diffusion.
+  StackingTrace      the astronomy-stacking shape of §4.3/Table 2: each file
+                     is read ``locality`` times total, interleaved in a
+                     seeded shuffle (the paper's trace has no temporal
+                     clustering by file).
+"""
+from __future__ import annotations
+
+import bisect
+import itertools
+import random
+from dataclasses import dataclass
+
+
+class PopularityModel:
+    """Base: pick the input objects (by index into the catalog) per task."""
+
+    def pick(self, i: int, rng: random.Random, n_objects: int) -> tuple[int, ...]:
+        raise NotImplementedError  # pragma: no cover - abstract
+
+    def spec(self) -> dict:
+        d = {k: v for k, v in vars(self).items() if not k.startswith("_")}
+        d["kind"] = type(self).__name__
+        return d
+
+
+@dataclass(init=False)
+class UniformScan(PopularityModel):
+    """Task i reads object (i * stride) % n -- a sequential (or strided)
+    scan; locality L falls out of submitting L*n tasks."""
+
+    stride: int
+
+    def __init__(self, stride: int = 1) -> None:
+        if stride < 1:
+            raise ValueError("stride must be >= 1")
+        self.stride = stride
+
+    def pick(self, i: int, rng: random.Random, n_objects: int) -> tuple[int, ...]:
+        return ((i * self.stride) % n_objects,)
+
+
+@dataclass(init=False)
+class ZipfPopularity(PopularityModel):
+    """Zipf(alpha) over object rank; rank r (1-based) has weight r^-alpha.
+    Object index == rank-1, so low indices are hot."""
+
+    alpha: float
+
+    def __init__(self, alpha: float = 1.0) -> None:
+        if alpha < 0:
+            raise ValueError("alpha must be >= 0")
+        self.alpha = alpha
+        self._cdf: list[float] = []
+        self._cdf_n = -1
+
+    def _ensure_cdf(self, n: int) -> None:
+        if self._cdf_n == n:
+            return
+        weights = [1.0 / (r ** self.alpha) for r in range(1, n + 1)]
+        total = sum(weights)
+        acc, cdf = 0.0, []
+        for w in weights:
+            acc += w / total
+            cdf.append(acc)
+        cdf[-1] = 1.0
+        self._cdf, self._cdf_n = cdf, n
+
+    def pick(self, i: int, rng: random.Random, n_objects: int) -> tuple[int, ...]:
+        self._ensure_cdf(n_objects)
+        return (bisect.bisect_left(self._cdf, rng.random()),)
+
+
+@dataclass(init=False)
+class ShiftingWorkingSet(PopularityModel):
+    """Uniform draws from a hot window of ``working_set`` objects that
+    advances by ``shift_by`` every ``shift_every`` tasks (wrapping)."""
+
+    working_set: int
+    shift_every: int
+    shift_by: int
+
+    def __init__(self, working_set: int, shift_every: int,
+                 shift_by: int = 1) -> None:
+        if working_set < 1 or shift_every < 1 or shift_by < 0:
+            raise ValueError("working_set/shift_every >= 1, shift_by >= 0")
+        self.working_set = working_set
+        self.shift_every = shift_every
+        self.shift_by = shift_by
+
+    def pick(self, i: int, rng: random.Random, n_objects: int) -> tuple[int, ...]:
+        base = (i // self.shift_every) * self.shift_by
+        w = min(self.working_set, n_objects)
+        return ((base + rng.randrange(w)) % n_objects,)
+
+
+@dataclass(init=False)
+class StackingTrace(PopularityModel):
+    """§4.3 stacking-trace shape: every object is accessed exactly
+    ``locality`` times and the full access list is shuffled once with
+    ``shuffle_seed`` (temporal order uncorrelated with file id, as in the
+    paper's SDSS trace).  Submitting more than locality*n tasks wraps the
+    shuffled list."""
+
+    locality: int
+    shuffle_seed: int
+
+    def __init__(self, locality: int, shuffle_seed: int = 0) -> None:
+        if locality < 1:
+            raise ValueError("locality must be >= 1")
+        self.locality = locality
+        self.shuffle_seed = shuffle_seed
+        self._order: list[int] = []
+        self._order_n = -1
+
+    def _ensure_order(self, n: int) -> None:
+        if self._order_n == n:
+            return
+        order = list(itertools.chain.from_iterable(
+            range(n) for _ in range(self.locality)))
+        random.Random(self.shuffle_seed).shuffle(order)
+        self._order, self._order_n = order, n
+
+    def pick(self, i: int, rng: random.Random, n_objects: int) -> tuple[int, ...]:
+        self._ensure_order(n_objects)
+        return (self._order[i % len(self._order)],)
+
+
+#: registry used by trace replay and the mk_workload CLI
+POPULARITY: dict[str, type[PopularityModel]] = {
+    cls.__name__: cls
+    for cls in (UniformScan, ZipfPopularity, ShiftingWorkingSet, StackingTrace)
+}

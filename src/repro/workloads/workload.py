@@ -1,0 +1,142 @@
+"""Workload = arrival process x popularity model -> timed task events.
+
+A :class:`Workload` is an immutable list of :class:`TaskEvent` (arrival
+time + task shape) over an object catalog.  Engines consume it through
+``tasks()``, which materialises *fresh* :class:`repro.core.objects.Task`
+instances on every call -- the events themselves are never mutated, so one
+Workload can be run many times (and across both engines) with identical
+inputs.  Task ids are assigned deterministically (``{name}-{i}``), never
+from the global task counter, so a recorded trace replays with the same
+ids (trace.py round-trips bit-identically).
+
+Invariants (relied on by the simulator's ARRIVAL events, the runtime's
+paced submitter, and the trace tests):
+  * events are sorted by arrival time (ties keep generation order);
+  * every input oid appears in ``objects``;
+  * generation is a pure function of (generator specs, seed, n_tasks).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional, Sequence
+
+from repro.core.objects import DataObject, Task
+
+from .arrivals import ArrivalProcess
+from .popularity import PopularityModel
+
+
+@dataclass(frozen=True, slots=True)
+class TaskEvent:
+    """One open-loop arrival: at time ``t`` a task with this shape arrives."""
+
+    t: float
+    tid: str
+    inputs: tuple[str, ...]
+    outputs: tuple[tuple[str, int], ...] = ()   # (oid, size_bytes)
+    compute_seconds: float = 0.0
+    store_metadata_ops: int = 0
+
+    def make_task(self) -> Task:
+        return Task(
+            inputs=self.inputs,
+            outputs=tuple(DataObject(oid, sz) for oid, sz in self.outputs),
+            compute_seconds=self.compute_seconds,
+            store_metadata_ops=self.store_metadata_ops,
+            tid=self.tid,
+        )
+
+
+class Workload:
+    """An immutable timed-task sequence over an object catalog."""
+
+    def __init__(self, name: str, objects: Sequence[DataObject],
+                 events: Sequence[TaskEvent], spec: Optional[dict] = None) -> None:
+        ts = [e.t for e in events]
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            raise ValueError("workload events must be sorted by arrival time")
+        known = {ob.oid for ob in objects}
+        for e in events:
+            missing = [oid for oid in e.inputs if oid not in known]
+            if missing:
+                raise ValueError(f"event {e.tid} reads unknown objects {missing}")
+        self.name = name
+        self.objects: tuple[DataObject, ...] = tuple(objects)
+        self.events: tuple[TaskEvent, ...] = tuple(events)
+        self.spec = dict(spec or {})
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[tuple[float, Task]]:
+        for e in self.events:
+            yield e.t, e.make_task()
+
+    def tasks(self) -> list[tuple[float, Task]]:
+        """Fresh Task objects for one run (engines mutate Task state)."""
+        return [(e.t, e.make_task()) for e in self.events]
+
+    @property
+    def duration(self) -> float:
+        """Arrival span (time of the last arrival)."""
+        return self.events[-1].t if self.events else 0.0
+
+    def offered_load(self) -> float:
+        """Mean arrival rate over the arrival span (tasks/s)."""
+        return len(self.events) / self.duration if self.duration > 0 else 0.0
+
+
+def generate(
+    name: str,
+    arrivals: ArrivalProcess,
+    popularity: PopularityModel,
+    n_tasks: int,
+    *,
+    objects: Optional[Sequence[DataObject]] = None,
+    n_objects: int = 0,
+    object_bytes: int = 0,
+    compute_seconds: float | Callable[[int, random.Random], float] = 0.0,
+    output_bytes: int = 0,
+    store_metadata_ops: int = 0,
+    seed: int = 0,
+) -> Workload:
+    """Compose an arrival process and a popularity model into a Workload.
+
+    Pass either an explicit ``objects`` catalog or (``n_objects``,
+    ``object_bytes``) to synthesise one.  ``compute_seconds`` may be a
+    constant or a callable ``(task_index, rng) -> seconds`` for heavy-tailed
+    service times.  Everything is a pure function of ``seed``.
+    """
+    if objects is None:
+        if n_objects <= 0:
+            raise ValueError("need objects or n_objects > 0")
+        objects = [DataObject(f"{name}.o{i}", object_bytes)
+                   for i in range(n_objects)]
+    objects = list(objects)
+    rng = random.Random(seed ^ 0x9E3779B9)   # decorrelated from arrival draws
+    events: list[TaskEvent] = []
+    for i, t in enumerate(arrivals.times(n_tasks, seed)):
+        idx = popularity.pick(i, rng, len(objects))
+        cs = compute_seconds(i, rng) if callable(compute_seconds) \
+            else compute_seconds
+        outputs = ((f"{name}-{i}.out", output_bytes),) if output_bytes > 0 else ()
+        events.append(TaskEvent(
+            t=t,
+            tid=f"{name}-{i}",
+            inputs=tuple(objects[j].oid for j in idx),
+            outputs=outputs,
+            compute_seconds=cs,
+            store_metadata_ops=store_metadata_ops,
+        ))
+    spec = {
+        "name": name,
+        "seed": seed,
+        "n_tasks": n_tasks,
+        "arrivals": arrivals.spec(),
+        "popularity": popularity.spec(),
+        "object_bytes": object_bytes,
+        "output_bytes": output_bytes,
+        "store_metadata_ops": store_metadata_ops,
+    }
+    return Workload(name, objects, events, spec)

@@ -1,6 +1,9 @@
 """Property-based tests for the per-executor cache (paper §3.2.2)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (not in image)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.cache import EvictionPolicy, ExecutorCache

@@ -1,4 +1,8 @@
 """Location index (§3.2.3) + the four dispatch policies (§3.2.2)."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (not in image)")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

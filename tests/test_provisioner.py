@@ -1,0 +1,127 @@
+"""DynamicResourceProvisioner (Falkon §3.1): all four allocation policies,
+exponential-burst reset, trigger cooldown, idle-timeout release."""
+import pytest
+
+from repro.core.provisioner import (AllocationPolicy,
+                                    DynamicResourceProvisioner)
+
+
+def _prov(policy, **kw):
+    kw.setdefault("min_executors", 0)
+    kw.setdefault("max_executors", 16)
+    kw.setdefault("queue_threshold", 1)
+    kw.setdefault("idle_timeout_s", 10.0)
+    kw.setdefault("trigger_cooldown_s", 1.0)
+    return DynamicResourceProvisioner(policy=policy, **kw)
+
+
+# --------------------------- allocation policies -----------------------------
+
+def test_one_at_a_time_allocates_single_executor_per_trigger():
+    p = _prov(AllocationPolicy.ONE_AT_A_TIME)
+    for i in range(3):
+        acts = p.step(now=float(i * 2), queue_len=5, live_executors=i,
+                      inflight_allocations=0, idle_executors=[])
+        assert acts.allocate == 1
+    assert p.n_allocated == 3
+
+
+def test_additive_allocates_k_per_trigger():
+    p = _prov(AllocationPolicy.ADDITIVE, additive_k=4)
+    acts = p.step(now=0.0, queue_len=9, live_executors=0,
+                  inflight_allocations=0, idle_executors=[])
+    assert acts.allocate == 4
+    acts = p.step(now=5.0, queue_len=9, live_executors=4,
+                  inflight_allocations=0, idle_executors=[])
+    assert acts.allocate == 4
+
+
+def test_exponential_doubles_per_consecutive_trigger():
+    p = _prov(AllocationPolicy.EXPONENTIAL, max_executors=64)
+    got = []
+    live = 0
+    for i in range(4):
+        acts = p.step(now=float(i * 2), queue_len=99, live_executors=live,
+                      inflight_allocations=0, idle_executors=[])
+        got.append(acts.allocate)
+        live += acts.allocate
+    assert got == [1, 2, 4, 8]
+
+
+def test_exponential_burst_resets_when_queue_drains():
+    p = _prov(AllocationPolicy.EXPONENTIAL, max_executors=64)
+    p.step(now=0.0, queue_len=9, live_executors=0,
+           inflight_allocations=0, idle_executors=[])
+    p.step(now=2.0, queue_len=9, live_executors=1,
+           inflight_allocations=0, idle_executors=[])
+    assert p._exp_burst == 4                       # primed to keep doubling
+    # queue drains below threshold: the burst resets to 1
+    p.step(now=4.0, queue_len=0, live_executors=3,
+           inflight_allocations=0, idle_executors=[])
+    acts = p.step(now=6.0, queue_len=9, live_executors=3,
+                  inflight_allocations=0, idle_executors=[])
+    assert acts.allocate == 1
+
+
+def test_all_at_once_jumps_to_max():
+    p = _prov(AllocationPolicy.ALL_AT_ONCE, max_executors=16)
+    acts = p.step(now=0.0, queue_len=1, live_executors=3,
+                  inflight_allocations=1, idle_executors=[])
+    assert acts.allocate == 12                     # max - live - inflight
+
+
+@pytest.mark.parametrize("policy", list(AllocationPolicy))
+def test_never_exceeds_max_executors(policy):
+    p = _prov(policy, max_executors=8, additive_k=100)
+    acts = p.step(now=0.0, queue_len=1000, live_executors=6,
+                  inflight_allocations=1, idle_executors=[])
+    assert acts.allocate <= 1                      # only one slot of room
+    acts = p.step(now=5.0, queue_len=1000, live_executors=8,
+                  inflight_allocations=0, idle_executors=[])
+    assert acts.allocate == 0                      # pool already at max
+
+
+def test_below_threshold_queue_never_triggers():
+    p = _prov(AllocationPolicy.ALL_AT_ONCE, queue_threshold=4)
+    acts = p.step(now=0.0, queue_len=3, live_executors=0,
+                  inflight_allocations=0, idle_executors=[])
+    assert acts.allocate == 0 and p.n_allocated == 0
+
+
+# --------------------------- cooldown ----------------------------------------
+
+def test_trigger_cooldown_suppresses_back_to_back_allocation():
+    p = _prov(AllocationPolicy.ONE_AT_A_TIME, trigger_cooldown_s=5.0)
+    assert p.step(now=0.0, queue_len=9, live_executors=0,
+                  inflight_allocations=0, idle_executors=[]).allocate == 1
+    # within the cooldown window: no trigger even though the queue is deep
+    assert p.step(now=2.0, queue_len=9, live_executors=0,
+                  inflight_allocations=1, idle_executors=[]).allocate == 0
+    # once the cooldown elapses, triggering resumes
+    assert p.step(now=5.0, queue_len=9, live_executors=1,
+                  inflight_allocations=0, idle_executors=[]).allocate == 1
+
+
+# --------------------------- release -----------------------------------------
+
+def test_idle_timeout_release_down_to_min():
+    p = _prov(AllocationPolicy.ALL_AT_ONCE, min_executors=2)
+    acts = p.step(now=100.0, queue_len=0, live_executors=5,
+                  inflight_allocations=0,
+                  idle_executors=["e0", "e1", "e2", "e3", "e4"])
+    assert acts.release == ["e0", "e1", "e2"]      # 5 live - 2 min
+    assert p.n_released == 3
+
+
+def test_no_release_while_queue_nonempty():
+    p = _prov(AllocationPolicy.ALL_AT_ONCE, min_executors=0)
+    acts = p.step(now=100.0, queue_len=1, live_executors=4,
+                  inflight_allocations=0, idle_executors=["e0", "e1"])
+    assert acts.release == []
+
+
+def test_release_limited_to_idle_set():
+    p = _prov(AllocationPolicy.ALL_AT_ONCE, min_executors=0)
+    acts = p.step(now=100.0, queue_len=0, live_executors=8,
+                  inflight_allocations=0, idle_executors=["e5"])
+    assert acts.release == ["e5"]                  # busy executors stay

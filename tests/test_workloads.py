@@ -1,0 +1,312 @@
+"""Workload subsystem: arrival processes, popularity models, open-loop
+engine integration (ARRIVAL events + provisioner elasticity), metrics."""
+import collections
+
+import pytest
+
+from repro.core import ANL_UC, DispatchPolicy, DynamicResourceProvisioner
+from repro.core.provisioner import AllocationPolicy
+from repro.core.simulator import DiffusionSim, SimConfig
+from repro.workloads import (BatchArrivals, BurstyArrivals, DiurnalArrivals,
+                             MetricsCollector, PoissonArrivals,
+                             ShiftingWorkingSet, SineWaveArrivals,
+                             StackingTrace, UniformScan, ZipfPopularity,
+                             generate)
+
+MB = 10**6
+
+
+# --------------------------- arrival processes --------------------------------
+
+def test_arrivals_deterministic_in_seed():
+    p = PoissonArrivals(5.0)
+    a = list(p.times(200, seed=7))
+    b = list(p.times(200, seed=7))
+    c = list(p.times(200, seed=8))
+    assert a == b
+    assert a != c
+    assert all(t2 >= t1 for t1, t2 in zip(a, a[1:]))
+
+
+def test_poisson_mean_rate():
+    ts = list(PoissonArrivals(10.0).times(4000, seed=0))
+    rate = len(ts) / ts[-1]
+    assert rate == pytest.approx(10.0, rel=0.1)
+
+
+def test_sine_wave_modulates_rate():
+    """More arrivals land in the peak half-period than in the trough."""
+    p = SineWaveArrivals(mean_rate=10.0, amplitude=9.0, period_s=100.0)
+    ts = [t for t in p.times(3000, seed=1) if t < 300.0]
+    phase = [(t % 100.0) for t in ts]
+    peak = sum(1 for x in phase if 0 <= x < 50)       # sin > 0 half
+    trough = sum(1 for x in phase if 50 <= x < 100)   # sin < 0 half
+    assert peak > 3 * trough
+
+
+def test_bursty_concentrates_in_bursts():
+    p = BurstyArrivals(base_rate=1.0, burst_rate=50.0,
+                       burst_every_s=60.0, burst_len_s=6.0)
+    ts = [t for t in p.times(2000, seed=2) if t < 600.0]
+    in_burst = sum(1 for t in ts if (t % 60.0) < 6.0)
+    # bursts cover 10% of the time but should carry the vast majority
+    assert in_burst / len(ts) > 0.75
+
+
+def test_diurnal_peaks_midday():
+    p = DiurnalArrivals(peak_rate=20.0, trough_rate=0.5, day_s=200.0)
+    ts = [t for t in p.times(3000, seed=3) if t < 600.0]
+    midday = sum(1 for t in ts if 50 <= (t % 200.0) < 150)
+    night = len(ts) - midday
+    assert midday > 3 * night
+
+
+def test_batch_arrivals_all_at_once():
+    assert list(BatchArrivals().times(5, seed=0)) == [0.0] * 5
+
+
+# --------------------------- popularity models --------------------------------
+
+def test_uniform_scan_exact_locality():
+    wl = generate("scan", BatchArrivals(), UniformScan(), n_tasks=30,
+                  n_objects=10, object_bytes=1, seed=0)
+    counts = collections.Counter(e.inputs[0] for e in wl.events)
+    assert all(v == 3 for v in counts.values())      # locality exactly 3
+
+
+def test_zipf_skews_toward_low_ranks():
+    wl = generate("zipf", BatchArrivals(), ZipfPopularity(alpha=1.2),
+                  n_tasks=3000, n_objects=50, object_bytes=1, seed=0)
+    counts = collections.Counter(e.inputs[0] for e in wl.events)
+    hot = counts["zipf.o0"]
+    cold = counts.get("zipf.o49", 0)
+    assert hot > 10 * max(cold, 1)
+    assert hot > counts.get("zipf.o5", 0)
+
+
+def test_shifting_working_set_moves():
+    pop = ShiftingWorkingSet(working_set=4, shift_every=100, shift_by=10)
+    wl = generate("shift", BatchArrivals(), pop, n_tasks=200,
+                  n_objects=40, object_bytes=1, seed=0)
+    first = {e.inputs[0] for e in wl.events[:100]}
+    second = {e.inputs[0] for e in wl.events[100:]}
+    assert first == {f"shift.o{i}" for i in range(4)}
+    assert second == {f"shift.o{i}" for i in range(10, 14)}
+
+
+def test_stacking_trace_locality_and_shuffle():
+    pop = StackingTrace(locality=5, shuffle_seed=4)
+    wl = generate("stk", BatchArrivals(), pop, n_tasks=100,
+                  n_objects=20, object_bytes=1, seed=0)
+    counts = collections.Counter(e.inputs[0] for e in wl.events)
+    assert all(v == 5 for v in counts.values())
+    # shuffled: not simply 20 scans back-to-back
+    first_20 = [e.inputs[0] for e in wl.events[:20]]
+    assert len(set(first_20)) < 20
+
+
+def test_generate_is_pure_function_of_seed():
+    def mk(seed):
+        return generate("w", PoissonArrivals(4.0), ZipfPopularity(1.0),
+                        n_tasks=100, n_objects=10, object_bytes=MB, seed=seed)
+    a, b, c = mk(5), mk(5), mk(6)
+    assert [(e.t, e.tid, e.inputs) for e in a.events] \
+        == [(e.t, e.tid, e.inputs) for e in b.events]
+    assert [e.t for e in a.events] != [e.t for e in c.events]
+
+
+def test_workload_rejects_unknown_inputs_and_unsorted_events():
+    from repro.core import DataObject
+    from repro.workloads import TaskEvent, Workload
+    obs = [DataObject("a", 1)]
+    with pytest.raises(ValueError, match="unknown objects"):
+        Workload("w", obs, [TaskEvent(t=0.0, tid="t0", inputs=("b",))])
+    with pytest.raises(ValueError, match="sorted"):
+        Workload("w", obs, [TaskEvent(t=1.0, tid="t0", inputs=("a",)),
+                            TaskEvent(t=0.5, tid="t1", inputs=("a",))])
+
+
+# --------------------------- engine integration -------------------------------
+
+def test_open_loop_arrivals_spread_submissions():
+    """ARRIVAL events submit over simulated time, not all at t=0."""
+    wl = generate("p", PoissonArrivals(2.0), UniformScan(), n_tasks=40,
+                  n_objects=8, object_bytes=MB, compute_seconds=0.01, seed=0)
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=4,
+                    policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                    cache_capacity_bytes=10**12)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    r = sim.run()
+    assert r.n_completed == 40
+    # the run lasts at least as long as the arrival span
+    assert r.makespan >= wl.duration
+    submits = sorted(t.submit_time for t in r.dispatcher.completed)
+    assert submits[0] > 0.0
+    assert submits[-1] == pytest.approx(wl.duration)
+
+
+def test_sine_wave_grows_and_shrinks_pool_and_replays_bit_identical(tmp_path):
+    """The PR's acceptance scenario: an open-loop sine-wave workload drives
+    the DynamicResourceProvisioner through full grow/shrink cycles, and the
+    same trace replayed from its JSONL recording produces bit-identical
+    metrics."""
+    from repro.workloads import record, replay
+    wl = generate(
+        "sine", SineWaveArrivals(mean_rate=8.0, amplitude=7.5, period_s=60.0),
+        ZipfPopularity(1.1), n_tasks=500, n_objects=40,
+        object_bytes=10 * MB, compute_seconds=0.5, seed=11)
+    path = tmp_path / "sine.jsonl"
+    record(wl, path)
+
+    def run(w):
+        prov = DynamicResourceProvisioner(
+            min_executors=1, max_executors=32,
+            policy=AllocationPolicy.ADDITIVE, additive_k=4,
+            queue_threshold=2, idle_timeout_s=4.0, trigger_cooldown_s=1.0)
+        cfg = SimConfig(testbed=ANL_UC, n_nodes=1,
+                        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                        cache_capacity_bytes=10**12,
+                        provisioner=prov, seed=3)
+        sim = DiffusionSim(cfg)
+        sim.submit_workload(w)
+        r = sim.run()
+        m = MetricsCollector(ANL_UC).collect(r, n_submitted=sim.n_submitted)
+        return prov, m
+
+    prov, m = run(wl)
+    assert m.n_completed == 500
+    assert prov.n_allocated > 0          # the pool grew under the upswing...
+    assert prov.n_released > 0           # ...and shrank in the trough
+    assert m.peak_executors > m.low_executors
+    _, m_replayed = run(replay(path))
+    assert m == m_replayed               # bit-identical metrics from JSONL
+
+
+def test_runtime_paced_submitter_thread():
+    """The threaded runtime consumes the same workload via a paced
+    submitter; time_scale compresses the arrival clock for the test."""
+    from repro.core.runtime import DiffusionRuntime
+    wl = generate("rtw", PoissonArrivals(50.0), UniformScan(), n_tasks=30,
+                  n_objects=6, object_bytes=100, seed=0)
+    rt = DiffusionRuntime(n_executors=2,
+                          policy=DispatchPolicy.MAX_COMPUTE_UTIL)
+    seen = []
+
+    def task_fn(inputs):
+        (payload,) = inputs.values()
+        seen.append(payload)
+        return payload + 1
+
+    th = rt.submit_workload(wl, task_fn=task_fn,
+                            payload_factory=lambda ob: len(ob.oid),
+                            time_scale=0.01)
+    th.join(30.0)
+    assert not th.is_alive()
+    assert rt.wait(30.0)
+    done = [t for t in rt.dispatcher.completed]
+    assert len(done) == 30
+    assert all(t.result == len(t.inputs[0]) + 1 for t in done)
+    assert rt.ledger.global_hit_ratio > 0         # objects re-read from cache
+    rt.shutdown()
+
+
+def test_runtime_survives_executor_removal_mid_workload():
+    """Regression: a worker removed mid-execution must not double-complete
+    its in-flight task (the retry is the only completion that counts) --
+    previously this corrupted _outstanding and hung wait()."""
+    from repro.core.runtime import DiffusionRuntime
+    for trial in range(3):
+        wl = generate("fault", PoissonArrivals(500.0), UniformScan(),
+                      n_tasks=60, n_objects=6, object_bytes=64, seed=trial)
+        rt = DiffusionRuntime(n_executors=3,
+                              policy=DispatchPolicy.MAX_COMPUTE_UTIL)
+        th = rt.submit_workload(
+            wl, task_fn=lambda inputs: sum(len(v) for v in inputs.values()),
+            payload_factory=lambda ob: b"y" * 64, time_scale=0.005)
+        rt.remove_executor("w1", failed=True)
+        th.join(30.0)
+        assert not th.is_alive()
+        assert rt.wait(30.0), "wait() hung after mid-run executor removal"
+        n_done = len(rt.dispatcher.completed)
+        n_failed = len(rt.dispatcher.failed)
+        assert n_done + n_failed == 60
+        assert rt._outstanding == 0
+        rt.shutdown()
+
+
+def test_runtime_terminal_failure_on_removed_worker_does_not_leak_wait():
+    """Regression: a last-attempt task running on a removed worker goes
+    terminally FAILED (no retry); wait() must still drain to zero."""
+    import time as _time
+    from repro.core import DataObject, Task
+    from repro.core.runtime import DiffusionRuntime
+    rt = DiffusionRuntime(n_executors=1)
+    rt.put_object(DataObject("a", 4), b"aaaa")
+    t = Task(inputs=("a",), fn=lambda inputs: _time.sleep(0.5) or 1,
+             max_attempts=1)
+    rt.submit([t])
+    _time.sleep(0.1)                         # task is running on w0
+    rt.remove_executor("w0", failed=True)
+    assert rt.wait(10.0), "wait() leaked after terminal in-flight failure"
+    assert rt._outstanding == 0
+    assert len(rt.dispatcher.failed) == 1
+    rt.shutdown()
+
+
+def test_runtime_executor_ids_never_reused():
+    """Regression: add after remove must mint a fresh id -- reusing
+    f"w{len(workers)}" overwrote a live worker and lost its task."""
+    from repro.core.runtime import DiffusionRuntime
+    rt = DiffusionRuntime(n_executors=3)
+    rt.remove_executor("w1")
+    assert rt.add_executor() == "w3"
+    assert sorted(rt.workers) == ["w0", "w2", "w3"]
+    rt.shutdown()
+
+
+# --------------------------- metrics ------------------------------------------
+
+def test_metrics_collector_basics():
+    wl = generate("m", BatchArrivals(), UniformScan(), n_tasks=60,
+                  n_objects=20, object_bytes=10 * MB,
+                  compute_seconds=0.05, seed=0)
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=4,
+                    policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                    cache_capacity_bytes=10**12)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    r = sim.run()
+    m = MetricsCollector(ANL_UC).collect(r, n_submitted=sim.n_submitted)
+    assert m.n_tasks == m.n_completed == 60
+    assert 0.0 < m.cache_hit_ratio < 1.0           # locality 3 -> some hits
+    assert m.local_hit_ratio <= m.cache_hit_ratio
+    assert m.read_bandwidth_bps > 0
+    assert m.moved_bandwidth_bps >= m.read_bandwidth_bps
+    assert 0.0 < m.efficiency <= 1.0
+    assert m.avg_slowdown >= 1.0                   # can't beat the ideal
+    assert m.p95_slowdown >= m.avg_slowdown * 0.5
+    assert m.peak_executors == m.low_executors == 4
+    assert m.executor_seconds == pytest.approx(4 * r.makespan)
+    assert 0.0 < m.performance_index <= 1.0
+    d = m.as_dict()
+    assert d["n_completed"] == 60
+
+
+def test_pool_log_records_elasticity():
+    wl = generate("e", PoissonArrivals(20.0), UniformScan(), n_tasks=100,
+                  n_objects=10, object_bytes=MB, compute_seconds=1.0, seed=0)
+    prov = DynamicResourceProvisioner(
+        min_executors=1, max_executors=8,
+        policy=AllocationPolicy.EXPONENTIAL, queue_threshold=1,
+        idle_timeout_s=2.0, trigger_cooldown_s=0.5)
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=1,
+                    policy=DispatchPolicy.FIRST_AVAILABLE,
+                    cache_capacity_bytes=10**12, provisioner=prov)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    r = sim.run()
+    assert r.pool_log[0] == (0.0, 1)
+    sizes = [n for _, n in r.pool_log]
+    assert max(sizes) > 1                          # growth was recorded
+    assert sizes[-1] <= max(sizes)                 # and the shrink tail

@@ -1,20 +1,26 @@
 #!/usr/bin/env python
-"""Engine-performance regression gate.
+"""Performance regression gates for the simulation engine AND the workload
+subsystem.
 
-Replays benchmarks/bench_engine.py's small fixed configuration (GATE_NODES x
-GATE_TASKS, incremental solver, best-of-N wall clock) and compares against
-the ``gate`` entry of the committed BENCH_engine.json baseline.  Fails (exit
-1) when wall-clock regresses more than ``--threshold`` (default 25%) -- the
-guard that keeps the incremental engine from quietly rotting back toward the
-naive solver's O(F^2) behaviour.
+Each gate replays a small fixed configuration and compares best-of-N wall
+clock against the ``gate`` entry of its committed baseline, failing (exit 1)
+on more than ``--threshold`` regression (default 25%):
+
+  engine     benchmarks/bench_engine.py  vs BENCH_engine.json -- guards the
+             incremental flow solver / indexed dispatch fast path;
+  workloads  benchmarks/bench_workloads.py vs BENCH_workloads.json -- guards
+             the open-loop ARRIVAL path + JSONL trace replay, with
+             correctness canaries (all tasks complete, the provisioner both
+             grows and shrinks, replayed metrics identical).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
 
-Regenerate the baseline (e.g. after an intentional engine change or on new
-hardware) with:
+Regenerate a baseline (intentional engine change / new hardware) with:
 
     PYTHONPATH=src python -m benchmarks.bench_engine --out BENCH_engine.json
+    PYTHONPATH=src python -m benchmarks.bench_workloads \
+        --out BENCH_workloads.json
 """
 from __future__ import annotations
 
@@ -26,59 +32,99 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=str(REPO_ROOT / "BENCH_engine.json"))
-    ap.add_argument("--threshold", type=float, default=0.25,
-                    help="max allowed fractional wall-clock regression")
-    ap.add_argument("--repeats", type=int, default=3,
-                    help="runs per measurement; best-of-N is compared")
-    ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline's gate entry instead of failing")
-    args = ap.parse_args(argv)
-
-    sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
-    sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks.bench_engine import GATE_NODES, GATE_TASKS, gate_measure
-
-    baseline_path = Path(args.baseline)
+def _check_gate(name: str, baseline_path: Path, measure, shape: tuple,
+                threshold: float, update: bool,
+                canaries=()) -> int:
+    """Generic wall-clock gate. ``measure()`` -> current gate dict;
+    ``shape`` is the (n_nodes, n_tasks) the baseline must match;
+    ``canaries`` is a list of (label, fn(base, cur) -> ok) checks."""
     if not baseline_path.exists():
-        print(f"bench_gate: no baseline at {baseline_path}; run "
-              f"`python -m benchmarks.bench_engine` first", file=sys.stderr)
+        print(f"bench_gate[{name}]: no baseline at {baseline_path}; run the "
+              f"matching benchmarks module first", file=sys.stderr)
         return 1
     baseline = json.loads(baseline_path.read_text())
     gate = baseline.get("gate")
     if not gate:
-        print("bench_gate: baseline has no 'gate' entry", file=sys.stderr)
+        print(f"bench_gate[{name}]: baseline has no 'gate' entry",
+              file=sys.stderr)
         return 1
-    if (gate.get("n_nodes"), gate.get("n_tasks")) != (GATE_NODES, GATE_TASKS):
-        print(f"bench_gate: baseline gate shape {gate.get('n_nodes')}x"
-              f"{gate.get('n_tasks')} != code's {GATE_NODES}x{GATE_TASKS}; "
+    if (gate.get("n_nodes"), gate.get("n_tasks")) != shape:
+        print(f"bench_gate[{name}]: baseline gate shape {gate.get('n_nodes')}"
+              f"x{gate.get('n_tasks')} != code's {shape[0]}x{shape[1]}; "
               f"regenerate the baseline", file=sys.stderr)
         return 1
 
-    current = gate_measure(repeats=args.repeats)
+    current = measure()
     base_wall, cur_wall = gate["wall_s"], current["wall_s"]
     ratio = cur_wall / max(base_wall, 1e-9)
-    verdict = "OK" if ratio <= 1.0 + args.threshold else "REGRESSION"
-    print(f"bench_gate: engine wall {cur_wall:.3f}s vs baseline "
+    verdict = "OK" if ratio <= 1.0 + threshold else "REGRESSION"
+    print(f"bench_gate[{name}]: wall {cur_wall:.3f}s vs baseline "
           f"{base_wall:.3f}s ({ratio:.2f}x, threshold "
-          f"{1.0 + args.threshold:.2f}x) -> {verdict}")
-    # a correctness canary rides along: the gate run must complete every task
-    if current["n_completed"] != gate["n_completed"]:
-        print(f"bench_gate: completed {current['n_completed']} != baseline "
-              f"{gate['n_completed']} -- engine behaviour changed",
-              file=sys.stderr)
-        return 1
+          f"{1.0 + threshold:.2f}x) -> {verdict}")
+    for label, check in canaries:
+        if not check(gate, current):
+            print(f"bench_gate[{name}]: canary failed: {label}",
+                  file=sys.stderr)
+            return 1
     if verdict == "REGRESSION":
-        if args.update:
+        if update:
             baseline["gate"] = current
             baseline_path.write_text(
                 json.dumps(baseline, indent=2, sort_keys=True) + "\n")
-            print(f"bench_gate: baseline gate updated in {baseline_path}")
+            print(f"bench_gate[{name}]: baseline gate updated in "
+                  f"{baseline_path}")
             return 0
         return 1
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default=str(REPO_ROOT / "BENCH_engine.json"))
+    ap.add_argument("--workloads-baseline",
+                    default=str(REPO_ROOT / "BENCH_workloads.json"))
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional wall-clock regression")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per measurement; best-of-N is compared")
+    ap.add_argument("--only", choices=["engine", "workloads"], default=None,
+                    help="run a single gate instead of both")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite a regressing baseline's gate entry "
+                         "instead of failing")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+    from benchmarks import bench_engine, bench_workloads
+
+    rc = 0
+    if args.only in (None, "engine"):
+        rc = max(rc, _check_gate(
+            "engine", Path(args.baseline),
+            lambda: bench_engine.gate_measure(repeats=args.repeats),
+            (bench_engine.GATE_NODES, bench_engine.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[("completed count matches baseline",
+                       lambda b, c: c["n_completed"] == b["n_completed"])]))
+    if args.only in (None, "workloads"):
+        rc = max(rc, _check_gate(
+            "workloads", Path(args.workloads_baseline),
+            lambda: bench_workloads.gate_measure(repeats=args.repeats),
+            (bench_workloads.GATE_NODES, bench_workloads.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("provisioner grew the pool",
+                 lambda b, c: c["n_allocated"] > 0),
+                ("provisioner shrank the pool",
+                 lambda b, c: c["n_released"] > 0),
+                ("JSONL replay metrics identical",
+                 lambda b, c: bool(c["replay_identical"])),
+            ]))
+    return rc
 
 
 if __name__ == "__main__":

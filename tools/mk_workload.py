@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Workload CLI: generate seeded traces, replay them through the simulator.
+
+Generate a trace (versioned JSONL, bit-reproducible from the seed):
+
+    PYTHONPATH=src python tools/mk_workload.py generate \
+        --arrivals sine --rate 16 --amplitude 15 --period 120 \
+        --popularity zipf --alpha 1.1 \
+        --tasks 5000 --objects 250 --object-mb 10 --compute-s 0.5 \
+        --seed 0 --out sine.jsonl
+
+Replay it through the discrete-event engine (optionally elastic) and print
+the run's headline metrics as JSON:
+
+    PYTHONPATH=src python tools/mk_workload.py run sine.jsonl \
+        --nodes 64 --policy max-compute-util --provision
+
+``run`` accepts either a trace file or ``-`` plus the same generation flags
+(generate-and-run without touching disk).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.core import DispatchPolicy, DynamicResourceProvisioner  # noqa: E402
+from repro.core.provisioner import AllocationPolicy                # noqa: E402
+from repro.core.simulator import DiffusionSim, SimConfig           # noqa: E402
+from repro.core.testbeds import ANL_UC, TPU_V5E_HOSTS              # noqa: E402
+from repro import workloads as W                                   # noqa: E402
+
+MB = 10**6
+
+TESTBEDS = {"anl_uc": ANL_UC, "tpu_v5e": TPU_V5E_HOSTS}
+
+
+def _build_arrivals(args) -> W.ArrivalProcess:
+    if args.arrivals == "batch":
+        return W.BatchArrivals()
+    if args.arrivals == "poisson":
+        return W.PoissonArrivals(args.rate)
+    if args.arrivals == "sine":
+        amp = args.amplitude if args.amplitude is not None else 0.9 * args.rate
+        return W.SineWaveArrivals(mean_rate=args.rate, amplitude=amp,
+                                  period_s=args.period)
+    if args.arrivals == "bursty":
+        burst = args.burst_rate if args.burst_rate is not None \
+            else 10 * args.rate
+        return W.BurstyArrivals(base_rate=args.rate, burst_rate=burst,
+                                burst_every_s=args.period,
+                                burst_len_s=args.burst_len)
+    if args.arrivals == "diurnal":
+        peak = args.burst_rate if args.burst_rate is not None \
+            else 10 * args.rate
+        return W.DiurnalArrivals(peak_rate=peak, trough_rate=args.rate,
+                                 day_s=args.period)
+    raise SystemExit(f"unknown arrivals {args.arrivals!r}")
+
+
+def _build_popularity(args) -> W.PopularityModel:
+    if args.popularity == "scan":
+        return W.UniformScan()
+    if args.popularity == "zipf":
+        return W.ZipfPopularity(alpha=args.alpha)
+    if args.popularity == "shifting":
+        return W.ShiftingWorkingSet(working_set=args.working_set,
+                                    shift_every=args.shift_every)
+    if args.popularity == "stacking":
+        return W.StackingTrace(locality=args.locality,
+                               shuffle_seed=args.seed)
+    raise SystemExit(f"unknown popularity {args.popularity!r}")
+
+
+def _generate(args) -> W.Workload:
+    return W.generate(
+        args.name, _build_arrivals(args), _build_popularity(args),
+        n_tasks=args.tasks, n_objects=args.objects,
+        object_bytes=int(args.object_mb * MB),
+        compute_seconds=args.compute_s,
+        store_metadata_ops=args.meta_ops, seed=args.seed)
+
+
+def _add_gen_flags(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--name", default="wl")
+    p.add_argument("--arrivals", default="poisson",
+                   choices=["batch", "poisson", "sine", "bursty", "diurnal"])
+    p.add_argument("--rate", type=float, default=8.0,
+                   help="mean (poisson/sine) / base (bursty) / trough "
+                        "(diurnal) arrival rate, tasks/s")
+    p.add_argument("--amplitude", type=float, default=None,
+                   help="sine amplitude (default 0.9*rate)")
+    p.add_argument("--period", type=float, default=120.0,
+                   help="sine/diurnal period or bursty inter-burst gap, s")
+    p.add_argument("--burst-rate", type=float, default=None,
+                   help="bursty burst rate / diurnal peak rate, tasks/s")
+    p.add_argument("--burst-len", type=float, default=10.0)
+    p.add_argument("--popularity", default="zipf",
+                   choices=["scan", "zipf", "shifting", "stacking"])
+    p.add_argument("--alpha", type=float, default=1.1)
+    p.add_argument("--working-set", type=int, default=32)
+    p.add_argument("--shift-every", type=int, default=500)
+    p.add_argument("--locality", type=int, default=10)
+    p.add_argument("--tasks", type=int, default=5_000)
+    p.add_argument("--objects", type=int, default=250)
+    p.add_argument("--object-mb", type=float, default=10.0)
+    p.add_argument("--compute-s", type=float, default=0.5)
+    p.add_argument("--meta-ops", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0)
+
+
+def cmd_generate(args) -> int:
+    wl = _generate(args)
+    n = W.record(wl, args.out)
+    print(f"# wrote {n} tasks / {len(wl.objects)} objects to {args.out} "
+          f"(arrival span {wl.duration:.1f}s, "
+          f"offered {wl.offered_load():.2f} tasks/s)", file=sys.stderr)
+    return 0
+
+
+def cmd_run(args) -> int:
+    if args.trace == "-":
+        wl = _generate(args)
+    else:
+        wl = W.replay(args.trace)
+    prov = None
+    if args.provision:
+        prov = DynamicResourceProvisioner(
+            min_executors=1, max_executors=args.nodes,
+            policy=AllocationPolicy(args.alloc_policy),
+            queue_threshold=2, idle_timeout_s=args.idle_timeout,
+            trigger_cooldown_s=1.0)
+    tb = TESTBEDS[args.testbed]
+    cfg = SimConfig(
+        testbed=tb, n_nodes=1 if prov else args.nodes,
+        policy=DispatchPolicy(args.policy),
+        cache_capacity_bytes=int(args.cache_gb * 1e9),
+        provisioner=prov, seed=args.sim_seed)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    r = sim.run()
+    m = W.MetricsCollector(tb, cpus_per_node=cfg.cpus_per_node).collect(
+        r, n_submitted=sim.n_submitted)
+    out = m.as_dict()
+    if prov is not None:
+        out["n_allocated"] = prov.n_allocated
+        out["n_released"] = prov.n_released
+    json.dump(out, sys.stdout, indent=2, sort_keys=True)
+    print()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("generate", help="generate a JSONL trace")
+    _add_gen_flags(g)
+    g.add_argument("--out", default="workload.jsonl")
+    g.set_defaults(fn=cmd_generate)
+
+    r = sub.add_parser("run", help="run a trace (or '-' to generate inline) "
+                                   "through the simulator")
+    r.add_argument("trace")
+    _add_gen_flags(r)
+    r.add_argument("--nodes", type=int, default=16)
+    r.add_argument("--policy", default="max-compute-util")
+    r.add_argument("--testbed", default="anl_uc", choices=sorted(TESTBEDS))
+    r.add_argument("--cache-gb", type=float, default=100.0)
+    r.add_argument("--provision", action="store_true",
+                   help="start from 1 node and let the DRP grow/shrink")
+    r.add_argument("--alloc-policy", default="exponential",
+                   choices=[p.value for p in AllocationPolicy])
+    r.add_argument("--idle-timeout", type=float, default=5.0)
+    r.add_argument("--sim-seed", type=int, default=0)
+    r.set_defaults(fn=cmd_run)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
