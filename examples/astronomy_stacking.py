@@ -12,10 +12,15 @@ Three layers run together here:
     through stack_rois (calibrate -> sub-pixel shift -> accumulate).
 
 All randomness is derived from fixed seeds (file content from the file id,
-shift offsets from the task's input id), so the stacked pixels -- and the
+shift offsets from the task's input ids), so the stacked pixels -- and the
 printed summary -- are identical run-to-run regardless of thread timing.
 
+``--stack-width K`` turns each request into the paper's true many-files
+stack: a k-input join over the primary file's stack group (K=1 keeps the
+historical one-file-per-task shape and byte-identical output).
+
   PYTHONPATH=src python examples/astronomy_stacking.py --locality 10
+  PYTHONPATH=src python examples/astronomy_stacking.py --stack-width 3
 """
 import argparse
 import sys
@@ -41,6 +46,9 @@ def main(argv=None) -> int:
                     help="number of stacking objects (scaled workload)")
     ap.add_argument("--hosts", type=int, default=4)
     ap.add_argument("--policy", default="max-compute-util")
+    ap.add_argument("--stack-width", type=int, default=1,
+                    help="files coadded per request (k-input joins over "
+                         "stack groups; 1 = classic one-file tasks)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="wall seconds per workload second for the paced "
                          "submitter (0 = submit as fast as possible)")
@@ -55,7 +63,8 @@ def main(argv=None) -> int:
     wl = generate(
         "astro",
         PoissonArrivals(rate_per_s=max(args.objects / 2.0, 1.0)),
-        StackingTrace(locality=locality, shuffle_seed=SEED),
+        StackingTrace(locality=locality, shuffle_seed=SEED,
+                      k=args.stack_width),
         n_tasks=args.objects,
         objects=[DataObject(f"img{i}", 8 * h * w * 4) for i in range(n_files)],
         seed=SEED)
@@ -66,13 +75,16 @@ def main(argv=None) -> int:
         return file_rng.normal(500, 100, size=(8, h, w)).astype(np.float32)
 
     def stack_object(inputs):
-        ((oid, tiles),) = inputs.items()
+        # one file (classic) or a whole stack group (k-input join): coadd
+        # every tile of every input file into one ROI
+        tiles = np.concatenate(list(inputs.values()), axis=0)
         n = tiles.shape[0]
         sky = tiles.mean(axis=(1, 2)) * 0.1
         cal = np.ones(n, np.float32)
-        # shift offsets seeded by the *input id*, not a shared stream, so
+        # shift offsets seeded by the *input ids*, not a shared stream, so
         # results do not depend on thread scheduling order
-        task_rng = np.random.default_rng([SEED + 1, int(oid[3:])])
+        task_rng = np.random.default_rng(
+            [SEED + 1] + [int(oid[3:]) for oid in inputs])
         dy = task_rng.random(n).astype(np.float32)
         dx = task_rng.random(n).astype(np.float32)
         return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))

@@ -75,11 +75,16 @@ class Task:
     # filled by the dispatcher for cache-aware policies: oid -> executors
     # known (at dispatch time) to cache it.  first-available ships none.
     location_hints: dict[str, tuple[str, ...]] = field(default_factory=dict)
-    # byte ledger filled in by whoever executed the task
+    # byte ledger filled in by whoever executed the task.  Multi-input
+    # (join) tasks accumulate one entry per input: ``cache_hits`` counts
+    # local-cache inputs, ``peer_hits`` inputs served cache-to-cache, and
+    # ``cache_misses`` inputs not found locally (peer + store) -- so
+    # ``cache_misses - peer_hits`` inputs touched the persistent store.
     bytes_local: int = 0
     bytes_cache_to_cache: int = 0
     bytes_store: int = 0
     cache_hits: int = 0
+    peer_hits: int = 0
     cache_misses: int = 0
     result: Any = None
 
@@ -88,7 +93,7 @@ class Task:
         self.executor = None
         self.location_hints = {}
         self.bytes_local = self.bytes_cache_to_cache = self.bytes_store = 0
-        self.cache_hits = self.cache_misses = 0
+        self.cache_hits = self.peer_hits = self.cache_misses = 0
 
 
 def make_objects(prefix: str, n: int, size_bytes: int) -> list[DataObject]:

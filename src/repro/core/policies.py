@@ -12,6 +12,14 @@ a :class:`Decision`; the dispatcher in scheduler.py owns queues and state.
   max-compute-util       among AVAILABLE executors pick the one caching the
                          most input bytes -- max utilization.
 
+Scores are *partial-overlap bytes*: for a k-input (join) task every policy
+sums the bytes of whichever subset of inputs each executor caches, so an
+executor holding 2 of 3 stacked files outranks one holding a single smaller
+file -- the overlap-scoring problem §4.3's stacked reads pose (and the win
+condition of 0808.3535's data-aware dispatch).  The dispatcher's windowed
+max-compute-util path keeps these scores incrementally (scheduler.py §6
+invariants); this module stays the pure per-task reference.
+
 ``next-available`` (used for the paper's GPFS baseline runs) is an alias of
 first-available.
 """

@@ -63,6 +63,27 @@ class ObjectStore:
 
 
 @dataclass
+class _InputLedger:
+    """Per-attempt input accounting, merged into the Task under the runtime
+    lock once the attempt is known to still count (see _execute)."""
+
+    bytes_local: int = 0
+    bytes_cache_to_cache: int = 0
+    bytes_store: int = 0
+    cache_hits: int = 0
+    peer_hits: int = 0
+    cache_misses: int = 0
+
+    def merge_into(self, t: Task) -> None:
+        t.bytes_local += self.bytes_local
+        t.bytes_cache_to_cache += self.bytes_cache_to_cache
+        t.bytes_store += self.bytes_store
+        t.cache_hits += self.cache_hits
+        t.peer_hits += self.peer_hits
+        t.cache_misses += self.cache_misses
+
+
+@dataclass
 class RuntimeLedger:
     lock: threading.Lock = field(default_factory=threading.Lock)
     bytes_local: int = 0
@@ -308,13 +329,25 @@ class DiffusionRuntime:
                 continue
             w.inbox.put(d)
 
-    def _resolve(self, w: ExecutorWorker, oid: str,
+    def _resolve(self, acc: "_InputLedger", w: ExecutorWorker, oid: str,
                  hints: dict[str, tuple[str, ...]]) -> Any:
+        """Stage one input, accounting the run ledger and a per-attempt
+        accumulator (joins need the per-task split: a k-input task may hit
+        locally on some inputs, peer-fetch others, miss the rest).  The
+        accumulator -- NOT the task -- is written here because this runs
+        lock-free on the worker thread: if the worker is removed mid-
+        execution, executor_left resets and re-queues the task, and a
+        zombie attempt must not race its counters against the retry's.
+        _execute merges the accumulator under the lock, after the
+        membership guard drops de-registered workers."""
         size = self.dispatcher.sizes.get(oid, 0)
         payload = w.cache_lookup(oid)
         if payload is not None:
             self.ledger.account("local", size)
+            acc.cache_hits += 1
+            acc.bytes_local += size
             return payload
+        acc.cache_misses += 1
         for peer_id in hints.get(oid, ()):
             if peer_id == w.eid:
                 continue
@@ -324,11 +357,14 @@ class DiffusionRuntime:
             payload = peer.cache_peek(oid)
             if payload is not None:
                 self.ledger.account("c2c", size)
+                acc.peer_hits += 1
+                acc.bytes_cache_to_cache += size
                 obj = self.store.meta(oid) if oid in self.store else DataObject(oid, size)
                 self._emit(w.cache_admit(obj, payload))
                 return payload
         obj, payload = self.store.get(oid)
         self.ledger.account("store", obj.size_bytes)
+        acc.bytes_store += obj.size_bytes
         self._emit(w.cache_admit(obj, payload))
         return payload
 
@@ -344,8 +380,9 @@ class DiffusionRuntime:
         t.state = TaskState.RUNNING
         t.start_time = time.monotonic()
         ok = True
+        acc = _InputLedger()
         try:
-            inputs = {oid: self._resolve(w, oid, disp.hints) for oid in t.inputs}
+            inputs = {oid: self._resolve(acc, w, oid, disp.hints) for oid in t.inputs}
             if t.fn is not None:
                 t.result = t.fn(**inputs) if _wants_kwargs(t.fn) else t.fn(inputs)
             for ob in t.outputs:
@@ -361,8 +398,10 @@ class DiffusionRuntime:
                 # re-queued (or failed out) the task, so this attempt's
                 # outcome must not complete it a second time -- that would
                 # double-decrement _outstanding and wake wait() early while
-                # the retry is still in flight
+                # the retry is still in flight -- and its input ledger must
+                # not pollute the retry's counters (acc is dropped here)
                 return
+            acc.merge_into(t)
             self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
             if ok or t.state is TaskState.FAILED:
                 self._outstanding -= 1

@@ -23,6 +23,16 @@ hooks; an inverted ``executor -> {queued tid: cached-byte score}`` map makes
 that executor caches data for|) probe instead of an O(window x inputs)
 index rescan; and the wait queue supports O(1) removal by tid via tombstones
 instead of ``deque.remove``'s O(n) scan.
+
+Multi-input (join) scoring (DESIGN.md §6): a task may read k inputs and an
+executor may cache any subset of them, so a score is *bytes of this task's
+inputs the executor caches* -- partial overlap counts, which is exactly
+where data-aware dispatch wins (0808.3535): a 2-of-3-inputs overlap out-
+scores a smaller full hit.  Byte-score ties break toward the higher overlap
+*fraction* (cached bytes / total input bytes -- equivalently, same cached
+bytes over fewer total bytes, i.e. less left to fetch), then toward the
+earlier queue position.  ``reference_scores()`` is the retained brute-force
+scorer the incremental maps must bit-match (tests/test_join_scoring.py).
 """
 from __future__ import annotations
 
@@ -404,11 +414,45 @@ class Dispatcher:
             self.queue.appendleft(t)
         return out
 
+    def input_bytes_total(self, tid: str) -> int:
+        """Total bytes of a task's (distinct) inputs, late-size aware --
+        the overlap-fraction denominator (same size default as _rescore)."""
+        ins = self.tasks[tid].inputs
+        if len(ins) == 1:               # classic single-input fast path
+            return self.sizes.get(ins[0], 1)
+        return sum(self.sizes.get(oid, 1) for oid in dict.fromkeys(ins))
+
+    def reference_scores(self) -> dict[str, dict[str, int]]:
+        """Brute-force reference for the incremental ``_exec_scores`` maps.
+
+        Rebuilds executor -> {queued tid: cached input bytes} from scratch
+        with fresh index lookups over every live queued task.  The
+        incremental maps must equal this exactly at any quiescent point
+        (``scores_match_reference``); kept as the correctness oracle for
+        tests/test_join_scoring.py and benchmarks/bench_joins.py, the same
+        way transport.py retains its naive flow solver."""
+        ref: dict[str, dict[str, int]] = {}
+        for t in self.queue:
+            for oid in dict.fromkeys(t.inputs):
+                sz = self.sizes.get(oid, 1)
+                for eid in self.index.lookup(oid):
+                    if eid in self.executors:
+                        scores = ref.setdefault(eid, {})
+                        scores[t.tid] = scores.get(t.tid, 0) + sz
+        return ref
+
+    def scores_match_reference(self) -> bool:
+        """Bit-exact equality of the incremental maps vs reference_scores()."""
+        live = {eid: dict(s) for eid, s in self._exec_scores.items() if s}
+        return live == self.reference_scores()
+
     def _dispatch_mcu(self, now: float) -> list[Dispatch]:
         """max-compute-util: for each available executor, pick the queued
         task (within the window) whose inputs it caches the most bytes of --
         read straight off the inverted score map -- falling back to the
-        queue head when nothing matches."""
+        queue head when nothing matches.  Byte ties prefer the higher
+        overlap fraction (= smaller input total for equal cached bytes),
+        then the earlier queue position."""
         out: list[Dispatch] = []
         while self.queue:
             avail, _ = self._avail_busy()
@@ -423,15 +467,26 @@ class Dispatcher:
             taken: set[str] = set()
             for eid in avail:
                 best_tid: Optional[str] = None
-                best_score, best_pos = 0, 0
+                best_score, best_pos, best_total = 0, 0, -1
                 for tid, score in self._exec_scores.get(eid, {}).items():
-                    if tid in taken or tid not in window_tids:
+                    if score < best_score or tid in taken \
+                            or tid not in window_tids:
                         continue
+                    if score > best_score:
+                        best_tid, best_score = tid, score
+                        best_pos = self.queue.position(tid)
+                        best_total = -1          # lazily filled on first tie
+                        continue
+                    # equal cached bytes: fraction score/total is larger for
+                    # the smaller total (exact int compare, no division);
+                    # equal totals fall back to queue order
+                    if best_total < 0:
+                        best_total = self.input_bytes_total(best_tid)
+                    total = self.input_bytes_total(tid)
                     pos = self.queue.position(tid)
-                    if score > best_score or (score == best_score
-                                              and best_tid is not None
-                                              and pos < best_pos):
-                        best_tid, best_score, best_pos = tid, score, pos
+                    if total < best_total \
+                            or (total == best_total and pos < best_pos):
+                        best_tid, best_pos, best_total = tid, pos, total
                 if best_tid is None:
                     # nothing cached for this executor: take earliest unclaimed
                     t = next((w for w in window if w.tid not in taken), None)

@@ -371,6 +371,7 @@ class DiffusionSim:
             src = self.nodes[self._rng.choice(sorted(peers))]
             src.cache.pin(oid)
             self.peer_hits += 1
+            t.peer_hits += 1
             t.bytes_cache_to_cache += size
             tb = self.cfg.testbed
 

@@ -197,11 +197,30 @@ def _apply_sub(cfg: ModelConfig, spec: LayerSpec, x, p, positions, rules,
     return x, aux
 
 
+@jax.custom_jvp
+def _grad_safe_barrier(x: jax.Array) -> jax.Array:
+    """``optimization_barrier`` with a differentiation rule.
+
+    ``jax.lax.optimization_barrier`` has no JVP/VJP registered, so any grad
+    taken through the remat'd block scan dies with NotImplementedError.  The
+    barrier only needs to pin the *primal* against convert-hoisting; the
+    tangent passes through untouched (identity), which also gives reverse
+    mode a well-defined (identity) transpose.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@_grad_safe_barrier.defjvp
+def _grad_safe_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return _grad_safe_barrier(x), dx
+
+
 def _block_fn(cfg: ModelConfig, rules, positions, causal=True):
     def fn(x, block_params):
         # barrier INSIDE the checkpointed fn: stops convert-hoisting of the
         # saved carry stack in the backward pass as well as the forward
-        x = jax.lax.optimization_barrier(x)
+        x = _grad_safe_barrier(x)
         aux_total = jnp.zeros((), jnp.float32)
         for i, spec in enumerate(cfg.pattern):
             x, aux = _apply_sub(cfg, spec, x, block_params[f"sub{i}"],

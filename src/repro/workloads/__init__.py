@@ -14,7 +14,8 @@ from .arrivals import (ARRIVALS, ArrivalProcess, BatchArrivals,
 from .metrics import MetricsCollector, RunMetrics
 from .popularity import (POPULARITY, PopularityModel, ShiftingWorkingSet,
                          StackingTrace, UniformScan, ZipfPopularity)
-from .trace import TRACE_VERSION, events_fingerprint, record, replay
+from .trace import (SUPPORTED_VERSIONS, TRACE_VERSION, events_fingerprint,
+                    record, replay)
 from .workload import TaskEvent, Workload, generate
 
 __all__ = [
@@ -28,6 +29,7 @@ __all__ = [
     "PoissonArrivals",
     "PopularityModel",
     "RunMetrics",
+    "SUPPORTED_VERSIONS",
     "ShiftingWorkingSet",
     "SineWaveArrivals",
     "StackingTrace",

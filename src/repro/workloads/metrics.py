@@ -4,7 +4,16 @@ Given a finished simulator run (SimResult + the pool log the simulator keeps
 for elastic runs), :class:`MetricsCollector` computes:
 
   cache_hit_ratio       any access served without touching the persistent
-                        store (paper Figure 10's metric; local + peer hits);
+                        store (paper Figure 10's metric; local + peer hits).
+                        Accounting is *per input*, not per task, so the
+                        ratio stays meaningful for k-input joins: a task
+                        that hits 2 of its 3 stacked files contributes
+                        2 hits + 1 store read, not one blended outcome;
+  join split            the per-task view of the same ledger: how many
+                        completed tasks had ALL inputs served cache-side
+                        (full_hit_tasks), a strict subset (partial_hit_
+                        tasks), or none (zero_hit_tasks), plus the mean
+                        join width (mean_inputs_per_task);
   read_bandwidth_bps /  aggregate I/O bandwidth: task-input consumption and
   moved_bandwidth_bps   total bytes moved per second of busy span (Fig 3/4);
   efficiency            delivered read bandwidth / the testbed's ideal for
@@ -47,6 +56,11 @@ class RunMetrics:
     store_reads: int
     local_hit_ratio: float
     cache_hit_ratio: float            # global: (local + peer) / all accesses
+    # join (multi-input) split, over completed tasks with >= 1 input
+    mean_inputs_per_task: float
+    full_hit_tasks: int               # every input local/peer-served
+    partial_hit_tasks: int            # some inputs cache-side, some store
+    zero_hit_tasks: int               # every input read from the store
     # aggregate I/O
     read_bandwidth_bps: float
     moved_bandwidth_bps: float
@@ -115,11 +129,23 @@ class MetricsCollector:
 
         slowdowns: list[float] = []
         ideal_core_s = 0.0
+        n_inputs = full_hit = partial_hit = zero_hit = 0
         for t in d.completed:
             ideal = _ideal_task_seconds(t, d.sizes, tb)
             ideal_core_s += ideal
             turnaround = t.end_time - t.submit_time
             slowdowns.append(max(turnaround, 0.0) / max(ideal, 1e-12))
+            n_inputs += len(t.inputs)
+            if t.inputs:
+                # cache-side inputs = local hits + peer fetches; the rest
+                # touched the store (cache_misses counts peer AND store)
+                cached = t.cache_hits + t.peer_hits
+                if t.cache_misses == t.peer_hits:
+                    full_hit += 1
+                elif cached == 0:
+                    zero_hit += 1
+                else:
+                    partial_hit += 1
         slowdowns.sort()
         avg_sd = sum(slowdowns) / len(slowdowns) if slowdowns else 0.0
         p95_sd = slowdowns[min(int(0.95 * len(slowdowns)),
@@ -140,6 +166,11 @@ class MetricsCollector:
             store_reads=result.store_reads,
             local_hit_ratio=result.local_hit_ratio if accesses else 0.0,
             cache_hit_ratio=result.global_hit_ratio if accesses else 0.0,
+            mean_inputs_per_task=(n_inputs / len(d.completed)
+                                  if d.completed else 0.0),
+            full_hit_tasks=full_hit,
+            partial_hit_tasks=partial_hit,
+            zero_hit_tasks=zero_hit,
             read_bandwidth_bps=read_bw,
             moved_bandwidth_bps=result.moved_throughput(),
             efficiency=read_bw / ideal_bw if ideal_bw > 0 else 0.0,

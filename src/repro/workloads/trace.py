@@ -2,21 +2,34 @@
 
 Format (one JSON object per line):
 
-  {"kind": "header", "version": 1, "name": ..., "n_objects": ...,
+  {"kind": "header", "version": 2, "name": ..., "n_objects": ...,
    "n_tasks": ..., "spec": {...}}                       # line 1, required
   {"kind": "object", "oid": ..., "size": ...}           # catalog entries
-  {"kind": "task", "t": ..., "tid": ..., "inputs": [...],
+  {"kind": "task", "t": ..., "tid": ..., "inputs": [[oid, size], ...],
    "outputs": [[oid, size], ...], "compute_s": ..., "meta_ops": ...}
 
-Round-trip guarantee: ``replay(record(wl)) `` reproduces the *exact* event
+Version history:
+
+  v1  single-input era: ``"inputs": [oid, ...]`` (sizes live only in the
+      catalog).  Still read bit-identically -- a v1 trace replays to the
+      same TaskEvents (and therefore the same RunMetrics) it always did;
+      tests/data/trace_v1.jsonl is the committed regression fixture.
+  v2  multi-input (join) era: each input is an ``[oid, size]`` pair, so a
+      task line is self-describing (k-input byte totals without a catalog
+      join) and size drift between the task lines and the catalog is a
+      hard error instead of silent disagreement.
+
+Round-trip guarantee: ``replay(record(wl))`` reproduces the *exact* event
 sequence -- same tids, arrival times, input/output sets and sizes -- because
 Python's json emits shortest-round-trip float reprs and the reader rebuilds
 the same frozen TaskEvents.  Running the replayed workload through a
 deterministic engine therefore yields bit-identical metrics (enforced by
 tests/test_workload_trace.py).
 
-The version field gates future schema evolution: readers reject versions
-they do not understand instead of silently misparsing.
+The version field gates schema evolution: readers *hard-error* on versions
+they do not understand (anything outside SUPPORTED_VERSIONS) instead of
+best-effort parsing -- a half-understood trace silently skews every metric
+downstream of it.
 """
 from __future__ import annotations
 
@@ -28,7 +41,10 @@ from repro.core.objects import DataObject
 
 from .workload import TaskEvent, Workload
 
-TRACE_VERSION = 1
+#: version written by :func:`record`
+TRACE_VERSION = 2
+#: versions :func:`replay` understands (v1 = single-input era traces)
+SUPPORTED_VERSIONS = (1, 2)
 
 
 def _open(path_or_file: Union[str, Path, IO[str]], mode: str):
@@ -38,7 +54,8 @@ def _open(path_or_file: Union[str, Path, IO[str]], mode: str):
 
 
 def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
-    """Write ``wl`` as JSONL; returns the number of task events written."""
+    """Write ``wl`` as JSONL (schema v2); returns the task events written."""
+    sizes = {ob.oid: ob.size_bytes for ob in wl.objects}
     f, should_close = _open(path_or_file, "w")
     try:
         f.write(json.dumps({
@@ -52,7 +69,7 @@ def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
         for e in wl.events:
             f.write(json.dumps({
                 "kind": "task", "t": e.t, "tid": e.tid,
-                "inputs": list(e.inputs),
+                "inputs": [[oid, sizes[oid]] for oid in e.inputs],
                 "outputs": [[oid, sz] for oid, sz in e.outputs],
                 "compute_s": e.compute_seconds,
                 "meta_ops": e.store_metadata_ops,
@@ -61,6 +78,20 @@ def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
         if should_close:
             f.close()
     return len(wl.events)
+
+
+def _parse_inputs(rec: dict, version: int, sizes: dict[str, int]) -> tuple[str, ...]:
+    if version == 1:
+        return tuple(rec["inputs"])
+    inputs = []
+    for oid, sz in rec["inputs"]:
+        known = sizes.get(oid)
+        if known is not None and known != sz:
+            raise ValueError(
+                f"task {rec.get('tid')!r} input {oid!r} size {sz} "
+                f"disagrees with catalog size {known}")
+        inputs.append(oid)
+    return tuple(inputs)
 
 
 def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
@@ -75,21 +106,23 @@ def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
         if header.get("kind") != "header":
             raise ValueError("trace must start with a header line")
         version = header.get("version")
-        if version != TRACE_VERSION:
+        if version not in SUPPORTED_VERSIONS:
             raise ValueError(
                 f"unsupported trace version {version!r} "
-                f"(this reader understands {TRACE_VERSION})")
+                f"(this reader understands {SUPPORTED_VERSIONS})")
         objects: list[DataObject] = []
+        sizes: dict[str, int] = {}
         events: list[TaskEvent] = []
         for ln in lines:
             rec = json.loads(ln)
             kind = rec.get("kind")
             if kind == "object":
                 objects.append(DataObject(rec["oid"], rec["size"]))
+                sizes[rec["oid"]] = rec["size"]
             elif kind == "task":
                 events.append(TaskEvent(
                     t=rec["t"], tid=rec["tid"],
-                    inputs=tuple(rec["inputs"]),
+                    inputs=_parse_inputs(rec, version, sizes),
                     outputs=tuple((oid, sz) for oid, sz in rec["outputs"]),
                     compute_seconds=rec["compute_s"],
                     store_metadata_ops=rec["meta_ops"],

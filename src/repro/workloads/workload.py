@@ -14,6 +14,11 @@ paced submitter, and the trace tests):
   * events are sorted by arrival time (ties keep generation order);
   * every input oid appears in ``objects``;
   * generation is a pure function of (generator specs, seed, n_tasks).
+
+Tasks may read *multiple* inputs (k-input "joins" -- the §4.3 stacked
+reads); ``TaskEvent.inputs`` is the ordered tuple of oids and
+``mean_inputs_per_task`` exposes the join width.  Single-input workloads
+are unchanged.
 """
 from __future__ import annotations
 
@@ -85,6 +90,12 @@ class Workload:
     def offered_load(self) -> float:
         """Mean arrival rate over the arrival span (tasks/s)."""
         return len(self.events) / self.duration if self.duration > 0 else 0.0
+
+    def mean_inputs_per_task(self) -> float:
+        """Mean join width k (1.0 for classic single-input workloads)."""
+        if not self.events:
+            return 0.0
+        return sum(len(e.inputs) for e in self.events) / len(self.events)
 
 
 def generate(

@@ -1,0 +1,201 @@
+"""Partial-overlap (join) scoring: the incremental executor->score maps and
+the windowed MCU selection must bit-match a brute-force reference scorer on
+randomized k-input queues with mid-queue evictions and executor churn.
+
+Extends the tests/test_index_and_policies.py pattern without requiring
+hypothesis (not in the image): seeded randomized walks over the Dispatcher
+API, asserting ``scores_match_reference()`` -- incremental maps == a from-
+scratch index rescan -- after *every* operation, plus an independent
+re-implementation of the documented MCU selection rule (max cached bytes,
+ties to higher overlap fraction, then earlier queue position) that each
+``next_dispatches`` result is compared against.
+"""
+import random
+
+import pytest
+
+from repro.core import ANL_UC
+from repro.core.index import IndexUpdate
+from repro.core.objects import DataObject, Task, TaskState
+from repro.core.policies import DispatchPolicy
+from repro.core.scheduler import Dispatcher
+from repro.core.simulator import DiffusionSim, SimConfig
+from repro.workloads import (MetricsCollector, PoissonArrivals,
+                             ZipfPopularity, generate)
+
+MB = 10**6
+
+
+# ---------------- reference dispatch (independent re-implementation) --------
+
+def _predict_mcu(d: Dispatcher) -> list[tuple[str, str]]:
+    """(tid, eid) pairs _dispatch_mcu must produce, derived ONLY from
+    reference_scores() + the documented selection rule.  Assumes 1 slot per
+    executor (what the walk uses)."""
+    ref = d.reference_scores()
+    live = [t.tid for t in d.queue]                     # ascending position
+    free = [e for e in d._exec_order
+            if d.executors[e].alive and d.executors[e].available]
+    out: list[tuple[str, str]] = []
+    while live and free:
+        window = live[:d.queue_window]
+        taken: set[str] = set()
+        bound: list[str] = []
+        for eid in free:
+            best = None                                 # (tid, score, total, pos)
+            for tid, score in ref.get(eid, {}).items():
+                if tid in taken or tid not in window:
+                    continue
+                pos = window.index(tid)
+                total = d.input_bytes_total(tid)
+                if best is None or score > best[1] \
+                        or (score == best[1]
+                            and (total < best[2]
+                                 or (total == best[2] and pos < best[3]))):
+                    best = (tid, score, total, pos)
+            if best is None:
+                tid = next((w for w in window if w not in taken), None)
+                if tid is None:
+                    break
+            else:
+                tid = best[0]
+            taken.add(tid)
+            bound.append(eid)
+            out.append((tid, eid))
+        if not bound:
+            break
+        live = [t for t in live if t not in taken]
+        free = [e for e in free if e not in bound]
+    return out
+
+
+# ---------------- randomized walk -------------------------------------------
+
+def _walk(seed: int, steps: int = 350) -> None:
+    rng = random.Random(seed)
+    d = Dispatcher(DispatchPolicy.MAX_COMPUTE_UTIL)
+    oids = [f"o{i}" for i in range(24)]
+    objs = [DataObject(o, rng.choice((1, 4, 10)) * MB) for o in oids]
+    d.register_objects(objs)
+    next_eid, live_eids = 0, []
+
+    def join(now: float) -> None:
+        nonlocal next_eid
+        eid = f"e{next_eid}"
+        next_eid += 1
+        d.executor_joined(eid, now)
+        live_eids.append(eid)
+
+    for _ in range(3):
+        join(0.0)
+    inflight: list[Task] = []
+    now = 0.0
+    for step in range(steps):
+        now += 1.0
+        # drop tasks churn/retry bookkeeping took back from us
+        inflight = [t for t in inflight
+                    if t.state in (TaskState.DISPATCHED, TaskState.RUNNING)]
+        op = rng.random()
+        if op < 0.28:                                   # k-input arrival
+            k = rng.randint(1, 4)
+            d.submit([Task(inputs=tuple(rng.sample(oids, k)))], now)
+        elif op < 0.50 and live_eids:                   # cache insertions
+            eid = rng.choice(live_eids)
+            added = tuple(rng.sample(oids, rng.randint(1, 3)))
+            d.apply_index_updates([IndexUpdate(eid, added=added)])
+        elif op < 0.65 and live_eids:                   # mid-queue evictions
+            eid = rng.choice(live_eids)
+            held = sorted(d.index.holdings(eid))
+            if held:
+                removed = tuple(rng.sample(held, min(len(held), 2)))
+                d.apply_index_updates([IndexUpdate(eid, removed=removed)])
+        elif op < 0.78:                                 # dispatch round
+            want = _predict_mcu(d)
+            got = [(disp.task.tid, disp.executor)
+                   for disp in d.next_dispatches(now)]
+            assert got == want, f"seed {seed} step {step}: {got} != {want}"
+            inflight.extend(d.tasks[tid] for tid, _ in got)
+        elif op < 0.86 and inflight:                    # completion / failure
+            t = inflight.pop(rng.randrange(len(inflight)))
+            d.task_finished(t, now, ok=rng.random() < 0.9)
+        elif op < 0.92 and len(live_eids) > 1:          # churn: executor dies
+            eid = live_eids.pop(rng.randrange(len(live_eids)))
+            d.executor_left(eid, now, failed=rng.random() < 0.5)
+        elif op < 0.96 and live_eids:                   # cache wiped in place
+            d.invalidate_executor(rng.choice(live_eids))
+        else:                                           # churn: executor joins
+            join(now)
+        assert d.scores_match_reference(), \
+            f"incremental/reference divergence at seed {seed} step {step}"
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_incremental_scores_bit_match_reference(seed):
+    _walk(seed)
+
+
+# ---------------- tie-break semantics ----------------------------------------
+
+def _mkdisp(sizes: dict[str, int]) -> Dispatcher:
+    d = Dispatcher(DispatchPolicy.MAX_COMPUTE_UTIL)
+    d.executor_joined("e0", 0.0)
+    d.register_objects([DataObject(o, sz) for o, sz in sizes.items()])
+    return d
+
+
+def test_partial_overlap_bytes_beat_smaller_full_hit():
+    """2-of-3 inputs cached (20 MB) out-scores a full 1-of-1 hit (15 MB)."""
+    d = _mkdisp({"a1": 10 * MB, "a2": 10 * MB, "a3": 10 * MB, "c1": 15 * MB})
+    for oid in ("a1", "a2", "c1"):
+        d.index.insert(oid, "e0")
+    full = Task(inputs=("c1",))
+    join = Task(inputs=("a1", "a2", "a3"))
+    d.submit([full, join], 0.0)          # full is EARLIER in the queue
+    out = d.next_dispatches(0.0)
+    assert out[0].task is join           # 20 MB overlap > 15 MB full hit
+
+
+def test_byte_tie_breaks_toward_higher_overlap_fraction():
+    """Equal cached bytes: 1-of-1 (fraction 1.0) beats 2-of-3 (0.67)."""
+    d = _mkdisp({"a1": 10 * MB, "a2": 10 * MB, "a3": 10 * MB, "b1": 20 * MB})
+    for oid in ("a1", "a2", "b1"):
+        d.index.insert(oid, "e0")
+    join = Task(inputs=("a1", "a2", "a3"))   # 20 of 30 MB cached
+    single = Task(inputs=("b1",))            # 20 of 20 MB cached
+    d.submit([join, single], 0.0)            # join is EARLIER in the queue
+    out = d.next_dispatches(0.0)
+    assert out[0].task is single             # same bytes, less left to fetch
+
+
+def test_fraction_tie_falls_back_to_queue_order():
+    d = _mkdisp({"a": 10 * MB, "b": 10 * MB})
+    d.index.insert("a", "e0")
+    d.index.insert("b", "e0")
+    first = Task(inputs=("a",))
+    second = Task(inputs=("b",))
+    d.submit([first, second], 0.0)
+    assert d.next_dispatches(0.0)[0].task is first
+
+
+# ---------------- end-to-end: joins through the engine ------------------------
+
+def _join_run(policy: DispatchPolicy, seed: int = 3):
+    wl = generate(
+        "joins", PoissonArrivals(8.0),
+        ZipfPopularity(alpha=1.1, k=3, corr=0.8),
+        n_tasks=400, n_objects=60, object_bytes=5 * MB,
+        compute_seconds=0.05, seed=seed)
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=8, policy=policy,
+                    cache_capacity_bytes=10**12, seed=seed)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    r = sim.run()
+    assert sim.dispatcher.scores_match_reference()   # drained => both empty
+    return MetricsCollector(ANL_UC).collect(r, n_submitted=sim.n_submitted)
+
+
+def test_data_aware_beats_first_available_on_joins():
+    mch = _join_run(DispatchPolicy.MAX_CACHE_HIT)
+    fa = _join_run(DispatchPolicy.FIRST_AVAILABLE)
+    assert mch.n_completed == fa.n_completed == 400
+    assert mch.cache_hit_ratio > fa.cache_hit_ratio

@@ -3,6 +3,7 @@
 and a replayed trace drives the simulator to bit-identical metrics."""
 import io
 import json
+from pathlib import Path
 
 import pytest
 
@@ -108,3 +109,77 @@ def test_truncated_trace_rejected(tmp_path):
 def test_empty_file_rejected():
     with pytest.raises(ValueError, match="empty"):
         replay(io.StringIO(""))
+
+
+# --------------------------- schema versioning --------------------------------
+
+V1_FIXTURE = __file__.rsplit("/", 1)[0] + "/data/trace_v1.jsonl"
+
+
+def _v1_equivalent_workload():
+    """The fixture's generation recipe -- the single copy lives next to the
+    gate canary in benchmarks.bench_joins; import it so test and gate can
+    never drift apart."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.bench_joins import v1_equivalent_workload
+    return v1_equivalent_workload()
+
+
+def test_committed_v1_trace_replays_bit_identically():
+    """Regression: the v2 reader must keep replaying single-input-era (v1)
+    traces to the exact events -- and therefore exact RunMetrics -- they
+    always produced."""
+    header = json.loads(Path(V1_FIXTURE).read_text().splitlines()[0])
+    assert header["version"] == 1                 # fixture really is v1
+    wl1 = replay(V1_FIXTURE)
+    wl = _v1_equivalent_workload()
+    assert events_fingerprint(wl1) == events_fingerprint(wl)
+
+    def run(w):
+        cfg = SimConfig(testbed=ANL_UC, n_nodes=4,
+                        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                        cache_capacity_bytes=10**12, seed=2)
+        sim = DiffusionSim(cfg)
+        sim.submit_workload(w)
+        return MetricsCollector(ANL_UC).collect(sim.run(),
+                                                n_submitted=sim.n_submitted)
+
+    assert run(wl1) == run(wl)                    # bit-identical RunMetrics
+
+
+def test_v2_task_lines_are_self_describing_and_joins_roundtrip(tmp_path):
+    wl = generate("j2", PoissonArrivals(5.0),
+                  ZipfPopularity(1.1, k=3, corr=0.5), n_tasks=50,
+                  n_objects=16, object_bytes=2 * MB, seed=4)
+    path = tmp_path / "j2.jsonl"
+    record(wl, path)
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines[0]["version"] == TRACE_VERSION == 2
+    task_lines = [r for r in lines if r["kind"] == "task"]
+    assert all(len(r["inputs"]) == 3 for r in task_lines)
+    assert all(sz == 2 * MB for r in task_lines for _, sz in r["inputs"])
+    assert events_fingerprint(replay(path)) == events_fingerprint(wl)
+
+
+def test_v2_input_size_drift_is_a_hard_error(tmp_path):
+    wl = generate("d", BatchArrivals(), UniformScan(), n_tasks=5,
+                  n_objects=3, object_bytes=7, seed=0)
+    path = tmp_path / "d.jsonl"
+    record(wl, path)
+    lines = path.read_text().splitlines()
+    bad = json.loads(lines[-1])
+    bad["inputs"][0][1] = 999                     # disagree with the catalog
+    path.write_text("\n".join(lines[:-1] + [json.dumps(bad)]) + "\n")
+    with pytest.raises(ValueError, match="disagrees with catalog"):
+        replay(path)
+
+
+def test_future_versions_hard_error_not_best_effort():
+    """A reader must refuse what it cannot fully parse: version 3 with
+    well-formed v2-looking records still raises."""
+    buf = io.StringIO(
+        json.dumps({"kind": "header", "version": 3, "name": "f",
+                    "n_objects": 0, "n_tasks": 0}) + "\n")
+    with pytest.raises(ValueError, match="unsupported trace version"):
+        replay(buf)

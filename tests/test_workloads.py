@@ -310,3 +310,121 @@ def test_pool_log_records_elasticity():
     sizes = [n for _, n in r.pool_log]
     assert max(sizes) > 1                          # growth was recorded
     assert sizes[-1] <= max(sizes)                 # and the shrink tail
+
+
+# --------------------------- multi-input (join) tasks -------------------------
+
+def test_k_input_models_emit_distinct_inputs_of_width_k():
+    for pop in (UniformScan(k=3), ZipfPopularity(1.1, k=3, corr=0.6),
+                ShiftingWorkingSet(working_set=8, shift_every=50, k=3,
+                                   corr=0.6),
+                StackingTrace(locality=3, shuffle_seed=2, k=3, corr=0.6)):
+        wl = generate("j", BatchArrivals(), pop, n_tasks=120,
+                      n_objects=24, object_bytes=MB, seed=5)
+        for e in wl.events:
+            assert len(e.inputs) == 3
+            assert len(set(e.inputs)) == 3          # joins never repeat a leg
+        assert wl.mean_inputs_per_task() == 3.0
+
+
+def test_correlation_knob_controls_overlap():
+    """corr=1 neighbours share most inputs with nearby primaries; corr=0
+    joins are near-independent draws -- measured as mean pairwise overlap
+    between consecutive tasks reading the same primary neighborhood."""
+    def mean_overlap(corr):
+        pop = ZipfPopularity(alpha=0.0, k=4, corr=corr)   # uniform primaries
+        wl = generate("c", BatchArrivals(), pop, n_tasks=600,
+                      n_objects=30, object_bytes=1, seed=9)
+        by_primary = collections.defaultdict(list)
+        for e in wl.events:
+            by_primary[e.inputs[0]].append(set(e.inputs))
+        pairs, total = 0, 0
+        for sets in by_primary.values():
+            for a, b in zip(sets, sets[1:]):
+                total += len(a & b)
+                pairs += 1
+        return total / max(pairs, 1)
+    assert mean_overlap(1.0) == pytest.approx(4.0)   # identical neighborhoods
+    assert mean_overlap(1.0) > mean_overlap(0.0) + 1.0
+
+
+def test_k_equals_one_is_bit_identical_to_legacy_models():
+    """The k/corr knobs must not perturb the single-input draw stream."""
+    for legacy, knobbed in ((ZipfPopularity(1.1), ZipfPopularity(1.1, k=1, corr=0.3)),
+                            (StackingTrace(4, 7), StackingTrace(4, 7, k=1))):
+        wa = generate("a", PoissonArrivals(5.0), legacy, n_tasks=150,
+                      n_objects=20, object_bytes=MB, seed=3)
+        wb = generate("a", PoissonArrivals(5.0), knobbed, n_tasks=150,
+                      n_objects=20, object_bytes=MB, seed=3)
+        assert [e.inputs for e in wa.events] == [e.inputs for e in wb.events]
+
+
+def test_metrics_split_hits_per_input_for_joins():
+    """A k=3 stacked workload yields partial-hit tasks (some inputs cached,
+    some not) and the split covers every completed task with inputs."""
+    wl = generate("jm", PoissonArrivals(10.0),
+                  StackingTrace(locality=4, shuffle_seed=1, k=3, corr=1.0),
+                  n_tasks=240, n_objects=24, object_bytes=5 * MB,
+                  compute_seconds=0.02, seed=2)
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=4,
+                    policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                    cache_capacity_bytes=10**12, seed=1)
+    sim = DiffusionSim(cfg)
+    sim.submit_workload(wl)
+    m = MetricsCollector(ANL_UC).collect(sim.run(), n_submitted=sim.n_submitted)
+    assert m.n_completed == 240
+    assert m.mean_inputs_per_task == pytest.approx(3.0)
+    assert m.full_hit_tasks + m.partial_hit_tasks + m.zero_hit_tasks == 240
+    assert m.full_hit_tasks > 0            # stacks re-read -> warm stacks
+    assert m.zero_hit_tasks > 0            # every object's first stack read
+    # per-input ledger matches the global access counters
+    d = sim.dispatcher
+    assert sum(t.cache_hits for t in d.completed) == m.local_hits
+    assert sum(t.peer_hits for t in d.completed) == m.peer_hits
+    assert sum(t.cache_misses - t.peer_hits for t in d.completed) \
+        == m.store_reads
+
+
+def test_runtime_threads_per_task_join_ledger():
+    """The threaded engine fills the same per-input task ledger."""
+    from repro.core import DataObject
+    from repro.core.runtime import DiffusionRuntime
+    rt = DiffusionRuntime(n_executors=2,
+                          policy=DispatchPolicy.MAX_COMPUTE_UTIL)
+    for i in range(6):
+        rt.put_object(DataObject(f"o{i}", 100), i)
+    from repro.core.objects import Task
+    t1 = Task(inputs=("o0", "o1", "o2"), fn=lambda inputs: sum(inputs.values()))
+    rt.submit([t1])
+    assert rt.wait(10.0)
+    assert t1.cache_hits + t1.cache_misses == 3
+    assert t1.bytes_store == 300            # cold caches: all from the store
+    t2 = Task(inputs=("o0", "o1", "o5"), fn=lambda inputs: sum(inputs.values()))
+    rt.submit([t2])                         # o0/o1 now cached somewhere
+    assert rt.wait(10.0)
+    assert t2.cache_hits + t2.peer_hits >= 1
+    assert t2.bytes_local + t2.bytes_cache_to_cache + t2.bytes_store == 300
+    rt.shutdown()
+
+
+def test_uniform_scan_join_window_distinct_under_stride_collisions():
+    """stride*(j2-j1) % n == 0 used to emit duplicate inputs in one task."""
+    for stride, n in ((5, 10), (10, 10), (4, 8)):
+        pop = UniformScan(stride=stride, k=3)
+        import random as _r
+        for i in range(20):
+            p = pop.pick(i, _r.Random(0), n)
+            assert len(p) == 3 and len(set(p)) == 3, (stride, n, p)
+
+
+def test_stacking_trace_partial_last_group_keeps_full_width():
+    """Primaries in the catalog's last partial stack group used to emit
+    tasks narrower than k; out-of-range members must be replaced by
+    independent draws instead of silently dropped."""
+    pop = StackingTrace(locality=1, shuffle_seed=0, k=4, corr=1.0)
+    wl = generate("pg", BatchArrivals(), pop, n_tasks=10, n_objects=10,
+                  object_bytes=1, seed=0)
+    for e in wl.events:
+        assert len(e.inputs) == 4
+        assert len(set(e.inputs)) == 4
+    assert wl.mean_inputs_per_task() == 4.0

@@ -11,7 +11,11 @@ on more than ``--threshold`` regression (default 25%):
   workloads  benchmarks/bench_workloads.py vs BENCH_workloads.json -- guards
              the open-loop ARRIVAL path + JSONL trace replay, with
              correctness canaries (all tasks complete, the provisioner both
-             grows and shrinks, replayed metrics identical).
+             grows and shrinks, replayed metrics identical);
+  joins      benchmarks/bench_joins.py vs BENCH_joins.json -- guards k-input
+             partial-overlap dispatch, with canaries (data-aware beats
+             first-available on cache-hit ratio, incremental scores bit-
+             match the brute-force reference, v1 traces replay identical).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -21,6 +25,7 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_engine --out BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.bench_workloads \
         --out BENCH_workloads.json
+    PYTHONPATH=src python -m benchmarks.bench_joins --out BENCH_joins.json
 """
 from __future__ import annotations
 
@@ -84,12 +89,15 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_engine.json"))
     ap.add_argument("--workloads-baseline",
                     default=str(REPO_ROOT / "BENCH_workloads.json"))
+    ap.add_argument("--joins-baseline",
+                    default=str(REPO_ROOT / "BENCH_joins.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
-    ap.add_argument("--only", choices=["engine", "workloads"], default=None,
-                    help="run a single gate instead of both")
+    ap.add_argument("--only", choices=["engine", "workloads", "joins"],
+                    default=None,
+                    help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
                     help="rewrite a regressing baseline's gate entry "
                          "instead of failing")
@@ -97,7 +105,7 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import bench_engine, bench_workloads
+    from benchmarks import bench_engine, bench_joins, bench_workloads
 
     rc = 0
     if args.only in (None, "engine"):
@@ -123,6 +131,22 @@ def main(argv=None) -> int:
                  lambda b, c: c["n_released"] > 0),
                 ("JSONL replay metrics identical",
                  lambda b, c: bool(c["replay_identical"])),
+            ]))
+    if args.only in (None, "joins"):
+        rc = max(rc, _check_gate(
+            "joins", Path(args.joins_baseline),
+            lambda: bench_joins.gate_measure(repeats=args.repeats),
+            (bench_joins.GATE_NODES, bench_joins.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("data-aware beats first-available on cache-hit ratio",
+                 lambda b, c: c["hit_advantage"] > 0),
+                ("incremental scores bit-match brute-force reference",
+                 lambda b, c: bool(c["scores_match_reference"])),
+                ("v1 trace replays to bit-identical RunMetrics",
+                 lambda b, c: bool(c["v1_replay_identical"])),
             ]))
     return rc
 

@@ -17,6 +17,13 @@ the run's headline metrics as JSON:
 
 ``run`` accepts either a trace file or ``-`` plus the same generation flags
 (generate-and-run without touching disk).
+
+Multi-input (join) workloads -- each task stacks K correlated objects, the
+§4.3 shape -- via ``--inputs-per-task K --input-corr C`` on both paths:
+
+    PYTHONPATH=src python tools/mk_workload.py run - \
+        --popularity zipf --inputs-per-task 3 --input-corr 0.8 \
+        --tasks 2000 --objects 200 --nodes 64 --policy max-cache-hit
 """
 from __future__ import annotations
 
@@ -63,16 +70,18 @@ def _build_arrivals(args) -> W.ArrivalProcess:
 
 
 def _build_popularity(args) -> W.PopularityModel:
+    k, corr = args.inputs_per_task, args.input_corr
     if args.popularity == "scan":
-        return W.UniformScan()
+        return W.UniformScan(k=k)
     if args.popularity == "zipf":
-        return W.ZipfPopularity(alpha=args.alpha)
+        return W.ZipfPopularity(alpha=args.alpha, k=k, corr=corr)
     if args.popularity == "shifting":
         return W.ShiftingWorkingSet(working_set=args.working_set,
-                                    shift_every=args.shift_every)
+                                    shift_every=args.shift_every,
+                                    k=k, corr=corr)
     if args.popularity == "stacking":
         return W.StackingTrace(locality=args.locality,
-                               shuffle_seed=args.seed)
+                               shuffle_seed=args.seed, k=k, corr=corr)
     raise SystemExit(f"unknown popularity {args.popularity!r}")
 
 
@@ -105,6 +114,14 @@ def _add_gen_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--working-set", type=int, default=32)
     p.add_argument("--shift-every", type=int, default=500)
     p.add_argument("--locality", type=int, default=10)
+    p.add_argument("--inputs-per-task", type=int, default=1, metavar="K",
+                   help="join width: objects read per task (k-input tasks; "
+                        "the §4.3 stacked reads)")
+    p.add_argument("--input-corr", type=float, default=1.0, metavar="C",
+                   help="probability an extra input comes from the primary "
+                        "draw's neighborhood / stack group instead of an "
+                        "independent draw (0..1; ignored by --popularity "
+                        "scan)")
     p.add_argument("--tasks", type=int, default=5_000)
     p.add_argument("--objects", type=int, default=250)
     p.add_argument("--object-mb", type=float, default=10.0)
