@@ -2,7 +2,9 @@
 stacking over data diffusion, with the REAL compute executed by the Pallas
 stacking kernel (repro/kernels/stacking, interpret mode on CPU).
 
-Three layers run together here:
+Three layers run together here, all bound by one declarative
+:class:`ExperimentSpec` executed on the threaded engine
+(``repro.experiments.RuntimeEngine``):
   * workload plane: a seeded ``repro.workloads`` StackingTrace (the §4.3
     trace shape: every file accessed ``locality`` times, order shuffled)
     paced into the runtime by the open-loop submitter thread;
@@ -13,7 +15,9 @@ Three layers run together here:
 
 All randomness is derived from fixed seeds (file content from the file id,
 shift offsets from the task's input ids), so the stacked pixels -- and the
-printed summary -- are identical run-to-run regardless of thread timing.
+printed summary -- are identical run-to-run regardless of thread timing,
+and identical to the pre-spec construction path (the spec builds the exact
+historical DiffusionRuntime).
 
 ``--stack-width K`` turns each request into the paper's true many-files
 stack: a k-input join over the primary file's stack group (K=1 keeps the
@@ -24,17 +28,16 @@ historical one-file-per-task shape and byte-identical output).
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
 from repro.configs.astro_stacking import ROI_SHAPE, workload
-from repro.core import DataObject, DispatchPolicy
-from repro.core.runtime import DiffusionRuntime
+from repro.core import DataObject
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               RuntimeEngine, WorkloadSpec)
 from repro.kernels.stacking import ops as st_ops
-from repro.workloads import PoissonArrivals, StackingTrace, generate
 
 SEED = 0
 
@@ -59,14 +62,22 @@ def main(argv=None) -> int:
     n_files = max(int(args.objects / args.locality), 1)
     h, w = ROI_SHAPE
 
-    # seeded workload: Poisson arrivals, §4.3 stacking-trace popularity
-    wl = generate(
-        "astro",
-        PoissonArrivals(rate_per_s=max(args.objects / 2.0, 1.0)),
-        StackingTrace(locality=locality, shuffle_seed=SEED,
-                      k=args.stack_width),
-        n_tasks=args.objects,
-        objects=[DataObject(f"img{i}", 8 * h * w * 4) for i in range(n_files)],
+    # one declarative spec: Poisson arrivals x §4.3 stacking-trace
+    # popularity over an img{i} catalog, on --hosts 1GiB-cache workers
+    spec = ExperimentSpec(
+        name="astro",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=args.hosts),
+        cache=CacheSpec(capacity_bytes=1 << 30),
+        policy=args.policy,
+        workload=WorkloadSpec(
+            name="astro",
+            arrivals={"kind": "PoissonArrivals",
+                      "rate_per_s": max(args.objects / 2.0, 1.0)},
+            popularity={"kind": "StackingTrace", "locality": locality,
+                        "shuffle_seed": SEED, "k": args.stack_width,
+                        "corr": 1.0},
+            n_tasks=args.objects, n_objects=n_files,
+            object_bytes=8 * h * w * 4, object_prefix="img", seed=SEED),
         seed=SEED)
 
     def make_tiles(ob: DataObject) -> np.ndarray:
@@ -89,35 +100,26 @@ def main(argv=None) -> int:
         dx = task_rng.random(n).astype(np.float32)
         return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
 
-    rt = DiffusionRuntime(n_executors=args.hosts,
-                          policy=DispatchPolicy(args.policy),
-                          cache_capacity_bytes=1 << 30)
-    t0 = time.time()
-    submitter = rt.submit_workload(wl, task_fn=stack_object,
-                                   payload_factory=make_tiles,
-                                   time_scale=args.time_scale)
-    submitter.join(300)
-    ok = not submitter.is_alive() and rt.wait(300)
-    dt = time.time() - t0
-    assert ok, "stacking timed out"
-    done = {t.tid: t for t in rt.dispatcher.completed}
+    eng = RuntimeEngine().prepare(spec)
+    rep = eng.run(task_fn=stack_object, payload_factory=make_tiles,
+                  time_scale=args.time_scale, timeout=600.0)
+    done = {t.tid: t for t in eng.runtime.dispatcher.completed}
     results = [done[f"astro-{i}"].result for i in range(args.objects)]
     assert all(r.shape == ROI_SHAPE for r in results)
-    lg = rt.ledger
     ideal = wl_cfg.ideal_cache_hit_ratio
     # deterministic summary -> stdout; wall-clock timing -> stderr (the only
     # run-to-run-variable quantity in this example)
-    print(f"# wall time {dt:.2f}s (time_scale {args.time_scale})",
+    print(f"# wall time {rep.wall_s:.2f}s (time_scale {args.time_scale})",
           file=sys.stderr)
     print(f"stacked {len(results)} objects over {n_files} files "
           f"(locality {args.locality}) on {args.hosts} hosts")
-    print(f"  cache hit ratio: {lg.global_hit_ratio:.2%} "
+    print(f"  cache hit ratio: {rep.cache_hit_ratio:.2%} "
           f"(paper ideal 1-1/L = {ideal:.0%}; paper achieves >=90% of it)")
-    cached = (lg.bytes_c2c + lg.bytes_local) / 1e6
-    print(f"  bytes: store={lg.bytes_store / 1e6:.1f}MB "
+    cached = (rep.bytes_by_kind["c2c"] + rep.bytes_by_kind["local"]) / 1e6
+    print(f"  bytes: store={rep.bytes_by_kind['store_read'] / 1e6:.1f}MB "
           f"cache-served={cached:.1f}MB")
     print(f"  sample stacked-pixel mean: {float(results[0].mean()):.2f}")
-    rt.shutdown()
+    eng.shutdown()
     return 0
 
 

@@ -93,3 +93,14 @@ class DynamicResourceProvisioner:
             acts.release = idle_executors[:releasable]
             self.n_released += len(acts.release)
         return acts
+
+    def snapshot(self) -> dict:
+        """JSON-able provisioning outcome for a finished run (consumed by
+        the experiment layer's RunReport)."""
+        return {
+            "policy": self.policy.value,
+            "min_executors": self.min_executors,
+            "max_executors": self.max_executors,
+            "n_allocated": self.n_allocated,
+            "n_released": self.n_released,
+        }

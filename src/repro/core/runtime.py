@@ -196,8 +196,24 @@ class DiffusionRuntime:
         self._stop_pacing = threading.Event()
         self._seed = seed
         self._next_worker_id = 0
+        # store the cache shape BEFORE spawning workers: historically these
+        # ctor kwargs were never persisted, so _cache_capacity()/
+        # _cache_policy() fell back to their getattr defaults (1 GiB LRU)
+        # and only configure_caches() could change worker caches -- every
+        # caller's ctor cache args were silently dead
+        self._cap = cache_capacity_bytes
+        self._cpol = cache_policy
+        # membership log mirroring DiffusionSim.pool_log: (seconds since
+        # construction, live workers) per change -- the experiment layer's
+        # RunReport reads pool history from the same-shaped field on both
+        # engines.
+        self._t0 = time.monotonic()
+        self.pool_log: list[tuple[float, int]] = []
         for i in range(n_executors):
             self.add_executor()
+        # collapse the construction ramp into one t=0 sample (mirrors
+        # DiffusionSim logging its initial pool once, after all adds)
+        self.pool_log = [(0.0, len(self.workers))]
 
     # -- membership ----------------------------------------------------------------
     def add_executor(self) -> str:
@@ -213,14 +229,16 @@ class DiffusionRuntime:
                                seed=self._seed + wid)
             self.workers[eid] = w
             self.dispatcher.executor_joined(eid, time.monotonic())
+            self.pool_log.append((time.monotonic() - self._t0,
+                                  len(self.workers)))
         w.start()
         return eid
 
     def _cache_capacity(self) -> int:
-        return getattr(self, "_cap", 1 << 30)
+        return self._cap
 
     def _cache_policy(self) -> EvictionPolicy:
-        return getattr(self, "_cpol", EvictionPolicy.LRU)
+        return self._cpol
 
     def configure_caches(self, capacity_bytes: int, policy: EvictionPolicy) -> None:
         self._cap = capacity_bytes
@@ -239,6 +257,8 @@ class DiffusionRuntime:
             w = self.workers.pop(eid, None)
             if w is None:
                 return
+            self.pool_log.append((time.monotonic() - self._t0,
+                                  len(self.workers)))
             st = self.dispatcher.executors.get(eid)
             running = set(st.running) if st is not None else set()
             self.dispatcher.executor_left(eid, time.monotonic(),

@@ -112,3 +112,10 @@ TPU_V5E_HOSTS = TestbedSpec(
     task_overhead_s=1e-3,
     executor_startup_s=60.0,
 )
+
+#: canonical name -> spec registry (the experiment layer binds testbeds by
+#: name so an ExperimentSpec stays a plain JSON document)
+TESTBEDS: dict[str, TestbedSpec] = {
+    "anl_uc": ANL_UC,
+    "tpu_v5e": TPU_V5E_HOSTS,
+}

@@ -1,0 +1,431 @@
+"""Experiment API (repro.experiments): spec round-trip strictness, engine
+adapters bit-identical to the legacy construction paths, RunReport schema
+parity across engines, and the seed-paired sweep runner.
+
+The bit-identity tests are the PR's regression lock: a spec-driven
+`SimEngine`/`RuntimeEngine` run must produce exactly the numbers the
+historical hand-written `SimConfig` / `DiffusionRuntime(...)` glue
+produced, so every committed baseline (BENCH_*.json, example stdout)
+stays valid as entry points migrate to specs.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import DispatchPolicy, DynamicResourceProvisioner
+from repro.core.provisioner import AllocationPolicy
+from repro.core.runtime import DiffusionRuntime
+from repro.core.simulator import DiffusionSim, SimConfig
+from repro.core.testbeds import ANL_UC
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               ProvisionerSpec, RunReport, RuntimeEngine,
+                               SimEngine, Sweep, WorkloadSpec,
+                               build_workload, check_alias_map, load_results,
+                               run_experiment, with_overrides)
+from repro.workloads import (MetricsCollector, PoissonArrivals,
+                             SineWaveArrivals, ZipfPopularity, generate,
+                             record)
+
+MB = 10**6
+
+
+def small_spec(n_tasks=200, n_nodes=8, policy="max-compute-util",
+               **spec_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="t",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=n_nodes),
+        cache=CacheSpec(capacity_bytes=10**12),
+        policy=policy,
+        workload=WorkloadSpec(
+            name="t",
+            arrivals={"kind": "PoissonArrivals", "rate_per_s": 40.0},
+            popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 1,
+                        "corr": 1.0},
+            n_tasks=n_tasks, n_objects=32, object_bytes=10 * MB,
+            compute_seconds=0.05, seed=7),
+        seed=3,
+        **spec_kw)
+
+
+def elastic_spec(n_tasks=250) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="t-elastic",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=1),
+        cache=CacheSpec(capacity_bytes=10**12),
+        policy="max-compute-util",
+        provisioner=ProvisionerSpec(
+            policy="exponential", min_executors=1, max_executors=12,
+            queue_threshold=2, idle_timeout_s=4.0, trigger_cooldown_s=1.0),
+        workload=WorkloadSpec(
+            name="sine",
+            arrivals={"kind": "SineWaveArrivals", "mean_rate": 8.0,
+                      "amplitude": 7.0, "period_s": 40.0, "phase": 0.0},
+            popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 1,
+                        "corr": 1.0},
+            n_tasks=n_tasks, n_objects=32, object_bytes=10 * MB,
+            compute_seconds=0.3, seed=7),
+        seed=3)
+
+
+# ---------------------------------------------------------------------------
+# spec serialisation
+# ---------------------------------------------------------------------------
+
+class TestSpecRoundTrip:
+    @pytest.mark.parametrize("spec", [
+        small_spec(),
+        elastic_spec(),
+        ExperimentSpec(name="trace",
+                       workload=WorkloadSpec(trace_path="/tmp/x.jsonl")),
+    ], ids=["fixed", "elastic", "trace"])
+    def test_bit_equal_through_json(self, spec):
+        d1 = spec.to_dict()
+        spec2 = ExperimentSpec.from_dict(json.loads(json.dumps(d1)))
+        assert spec2 == spec
+        assert spec2.to_dict() == d1
+        assert spec2.fingerprint() == spec.fingerprint()
+
+    def test_unknown_field_errors_top_level(self):
+        d = small_spec().to_dict()
+        d["bogus"] = 1
+        with pytest.raises(ValueError, match="unknown field.*bogus"):
+            ExperimentSpec.from_dict(d)
+
+    @pytest.mark.parametrize("section", ["cluster", "cache", "workload",
+                                         "provisioner"])
+    def test_unknown_field_errors_nested(self, section):
+        d = elastic_spec().to_dict()
+        d[section]["bogus"] = 1
+        with pytest.raises(ValueError, match=f"spec.{section}.*bogus"):
+            ExperimentSpec.from_dict(d)
+
+    def test_invalid_values_hard_error(self):
+        with pytest.raises(ValueError):
+            small_spec(policy="warp-speed")
+        with pytest.raises(ValueError):
+            ClusterSpec(testbed="does-not-exist")
+        with pytest.raises(ValueError):
+            CacheSpec(eviction="mru")
+        with pytest.raises(ValueError):
+            ProvisionerSpec(policy="psychic")
+        with pytest.raises(ValueError, match="unknown arrivals kind"):
+            WorkloadSpec(arrivals={"kind": "Nope"},
+                         popularity={"kind": "ZipfPopularity"},
+                         n_tasks=1, n_objects=1)
+        # binding must be exactly one of trace_path / generator
+        with pytest.raises(ValueError, match="EITHER"):
+            WorkloadSpec(trace_path="x.jsonl",
+                         arrivals={"kind": "PoissonArrivals"},
+                         popularity={"kind": "ZipfPopularity"})
+        with pytest.raises(ValueError, match="generator binding"):
+            WorkloadSpec(n_tasks=10, n_objects=10)
+        # generator knobs on a trace binding would be silently dropped
+        with pytest.raises(ValueError, match="silently ignored"):
+            WorkloadSpec(trace_path="x.jsonl", compute_seconds=2.0)
+        with pytest.raises(ValueError, match="silently ignored"):
+            WorkloadSpec(trace_path="x.jsonl", seed=5)
+        # missing required fields get the strict ValueError, not TypeError
+        with pytest.raises(ValueError, match="missing required"):
+            ExperimentSpec.from_dict({"name": "x"})
+
+    def test_with_overrides(self):
+        spec = elastic_spec()
+        s2 = with_overrides(spec, {
+            "provisioner.policy": "additive",
+            "cache.capacity_bytes": 5,
+            "workload.arrivals": {"kind": "PoissonArrivals",
+                                  "rate_per_s": 1.0},
+        })
+        assert s2.provisioner.policy == "additive"
+        assert s2.cache.capacity_bytes == 5
+        assert s2.workload.arrivals["kind"] == "PoissonArrivals"
+        # the base spec is untouched (frozen tree)
+        assert spec.provisioner.policy == "exponential"
+        # dict-leaf override
+        s3 = with_overrides(spec, {"workload.arrivals.mean_rate": 2.0})
+        assert s3.workload.arrivals["mean_rate"] == 2.0
+        with pytest.raises(ValueError, match="no field"):
+            with_overrides(spec, {"cache.nope": 1})
+        # a typo'd dict key must hard-error, not be silently inserted
+        # (it would only blow up later, deep in generator construction)
+        with pytest.raises(ValueError, match="no key"):
+            with_overrides(spec, {"workload.arrivals.mean_rte": 2.0})
+        # a dict assigned to a sub-spec field parses strictly into the
+        # dataclass (a raw dict would skip validation, then crash in an
+        # engine long after the manifest was written)
+        s4 = with_overrides(spec, {"cache": {"capacity_bytes": 1,
+                                             "eviction": "fifo"}})
+        assert isinstance(s4.cache, CacheSpec)
+        assert s4.cache.eviction == "fifo" and s4.cache.enabled is True
+        with pytest.raises(ValueError, match="unknown field"):
+            with_overrides(spec, {"cache": {"capacity_bytes": 1,
+                                            "bogus": 2}})
+        with pytest.raises(ValueError, match="is None"):
+            with_overrides(small_spec(), {"provisioner.policy": "additive"})
+        with pytest.raises(ValueError):      # validation re-runs
+            with_overrides(spec, {"policy": "warp-speed"})
+
+    def test_alias_map_in_sync_with_engines(self):
+        check_alias_map()   # raises RuntimeError on drift
+
+
+# ---------------------------------------------------------------------------
+# engine adapters: unsupported-knob hard errors
+# ---------------------------------------------------------------------------
+
+class TestEngineKnobRejection:
+    def test_runtime_rejects_sim_only_knobs(self):
+        for overrides in ({"flow_solver": "naive"},
+                          {"release_policy": "rebalance"},
+                          {"write_outputs_to": "store"},
+                          {"index_update_interval_s": 0.5},
+                          {"speculation_factor": 1.5},
+                          {"cluster.cpus_per_node": 2}):
+            spec = with_overrides(small_spec(), overrides)
+            with pytest.raises(ValueError, match="does not support"):
+                RuntimeEngine().prepare(spec)
+
+    def test_sim_rejects_runtime_only_knobs(self):
+        spec = with_overrides(small_spec(), {"index_update_batch": 4})
+        with pytest.raises(ValueError, match="does not support"):
+            SimEngine().prepare(spec)
+        # ...but the runtime accepts it
+        RuntimeEngine().prepare(spec).shutdown()
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs. the legacy construction paths
+# ---------------------------------------------------------------------------
+
+def legacy_workload():
+    """Hand-written equivalent of small_spec()'s workload binding."""
+    return generate(
+        "t", PoissonArrivals(40.0), ZipfPopularity(alpha=1.1, k=1, corr=1.0),
+        n_tasks=200, n_objects=32, object_bytes=10 * MB,
+        compute_seconds=0.05, seed=7)
+
+
+class TestLegacyBitIdentity:
+    def test_sim_fixed_pool(self):
+        cfg = SimConfig(testbed=ANL_UC, n_nodes=8,
+                        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                        cache_capacity_bytes=10**12, seed=3)
+        sim = DiffusionSim(cfg)
+        sim.submit_workload(legacy_workload())
+        r = sim.run()
+        m_legacy = MetricsCollector(ANL_UC).collect(
+            r, n_submitted=sim.n_submitted)
+
+        rep = run_experiment(small_spec(), engine="sim")
+        assert rep.n_completed == m_legacy.n_completed
+        assert rep.makespan_s == m_legacy.makespan_s
+        assert rep.cache_hit_ratio == m_legacy.cache_hit_ratio
+        assert rep.avg_slowdown == m_legacy.avg_slowdown
+        assert rep.bytes_by_kind == dict(r.bytes_by_kind)
+        assert rep.t_last_complete == r.t_last_complete
+        # every shared metric field, not just the headline ones
+        for f in ("n_tasks", "n_failed", "busy_span_s", "tasks_per_second",
+                  "local_hits", "peer_hits", "store_reads",
+                  "local_hit_ratio", "mean_inputs_per_task",
+                  "full_hit_tasks", "partial_hit_tasks", "zero_hit_tasks",
+                  "read_bandwidth_bps", "moved_bandwidth_bps", "efficiency",
+                  "p95_slowdown", "performance_index", "peak_executors",
+                  "low_executors", "executor_seconds"):
+            assert getattr(rep, f) == getattr(m_legacy, f), f
+
+    def test_sim_elastic_pool(self):
+        spec = elastic_spec()
+        prov = DynamicResourceProvisioner(
+            min_executors=1, max_executors=12,
+            policy=AllocationPolicy.EXPONENTIAL, queue_threshold=2,
+            idle_timeout_s=4.0, trigger_cooldown_s=1.0)
+        cfg = SimConfig(testbed=ANL_UC, n_nodes=1,
+                        policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                        cache_capacity_bytes=10**12, provisioner=prov,
+                        seed=3)
+        sim = DiffusionSim(cfg)
+        sim.submit_workload(build_workload(spec.workload))
+        r = sim.run()
+        m_legacy = MetricsCollector(ANL_UC).collect(
+            r, n_submitted=sim.n_submitted)
+
+        rep = run_experiment(spec, engine="sim")
+        assert rep.n_allocated == prov.n_allocated
+        assert rep.n_released == prov.n_released
+        assert rep.makespan_s == m_legacy.makespan_s
+        assert rep.performance_index == m_legacy.performance_index
+        assert rep.pool_log == tuple(tuple(p) for p in r.pool_log)
+        assert rep.n_allocated > 0 and rep.n_released > 0
+
+    def test_runtime_single_worker(self):
+        """1-worker runs are deterministic (FIFO queue, one consumer), so
+        the spec path must reproduce the legacy ledger bit-for-bit."""
+        spec = small_spec(n_tasks=80, n_nodes=1)
+        wl = build_workload(spec.workload)
+
+        rt = DiffusionRuntime(n_executors=1,
+                              policy=DispatchPolicy.MAX_COMPUTE_UTIL,
+                              cache_capacity_bytes=10**12, seed=3)
+        th = rt.submit_workload(wl, payload_factory=lambda ob: b"x",
+                                time_scale=0.0)
+        th.join(60)
+        assert rt.wait(60)
+        legacy = rt.ledger
+        n_legacy = len(rt.dispatcher.completed)
+        rt.shutdown()
+
+        rep = run_experiment(spec, engine="runtime", time_scale=0.0,
+                             timeout=60.0)
+        assert rep.n_completed == n_legacy == 80
+        assert rep.local_hits == legacy.local_hits
+        assert rep.peer_hits == legacy.peer_hits
+        assert rep.store_reads == legacy.store_reads
+        assert rep.bytes_by_kind == {"local": float(legacy.bytes_local),
+                                     "c2c": float(legacy.bytes_c2c),
+                                     "store_read": float(legacy.bytes_store)}
+        assert rep.cache_hit_ratio == legacy.global_hit_ratio
+        assert rep.local_hit_ratio == legacy.local_hit_ratio
+
+    def test_runtime_honours_cache_spec(self):
+        """cache.enabled=False (the data-unaware baseline) must actually
+        disable runtime caching -- the DiffusionRuntime ctor historically
+        dropped its cache kwargs on the floor (only configure_caches took
+        effect), which made this translation a silent no-op."""
+        spec = with_overrides(small_spec(n_tasks=60, n_nodes=2),
+                              {"cache.enabled": False})
+        rep = run_experiment(spec, engine="runtime", timeout=60.0)
+        assert rep.cache_hit_ratio == 0.0
+        assert rep.local_hits == 0 and rep.peer_hits == 0
+        assert rep.store_reads == 60
+        # and the sim agrees on the data-unaware ledger shape
+        rep_sim = run_experiment(spec, engine="sim")
+        assert rep_sim.cache_hit_ratio == 0.0
+        assert rep_sim.store_reads == 60
+
+
+# ---------------------------------------------------------------------------
+# cross-engine schema parity + report plumbing
+# ---------------------------------------------------------------------------
+
+class TestRunReport:
+    def test_schema_parity_sim_vs_runtime(self):
+        spec = small_spec(n_tasks=60, n_nodes=4)
+        rep_sim = run_experiment(spec, engine="sim")
+        rep_rt = run_experiment(spec, engine="runtime", timeout=60.0)
+        assert rep_sim.schema() == rep_rt.schema() == RunReport.schema()
+        assert set(rep_sim.as_dict()) == set(rep_rt.as_dict())
+        assert rep_sim.engine == "sim" and rep_rt.engine == "runtime"
+        assert rep_sim.spec_sha == rep_rt.spec_sha == spec.fingerprint()
+        # both engines fill every field with a real value
+        for name, d in (("sim", rep_sim.as_dict()),
+                        ("runtime", rep_rt.as_dict())):
+            for k, v in d.items():
+                assert v is not None, (name, k)
+        # same spec, same counts on both engines (clocks differ, counts
+        # must not: both drained the identical 60 tasks)
+        assert rep_rt.n_completed == rep_sim.n_completed == 60
+        d = rep_sim.diff(rep_rt)
+        assert "n_completed" not in d and "n_tasks" not in d
+
+    def test_sim_runs_are_reproducible(self):
+        spec = small_spec(n_tasks=100)
+        a = run_experiment(spec, engine="sim")
+        b = run_experiment(spec, engine="sim")
+        assert a.diff(b) == {}
+
+    def test_report_dict_round_trip(self):
+        rep = run_experiment(small_spec(n_tasks=50), engine="sim")
+        back = RunReport.from_dict(json.loads(json.dumps(rep.as_dict())))
+        assert back == rep
+        with pytest.raises(ValueError, match="unknown"):
+            RunReport.from_dict({**rep.as_dict(), "bogus": 1})
+        with pytest.raises(ValueError, match="missing"):
+            d = rep.as_dict()
+            d.pop("cache_hit_ratio")
+            RunReport.from_dict(d)
+
+    def test_trace_binding_matches_generator(self, tmp_path):
+        gen_spec = small_spec(n_tasks=60)
+        record(build_workload(gen_spec.workload), tmp_path / "t.jsonl")
+        trace_spec = ExperimentSpec(
+            name="t", cluster=gen_spec.cluster, cache=gen_spec.cache,
+            policy=gen_spec.policy, seed=gen_spec.seed,
+            workload=WorkloadSpec(trace_path=str(tmp_path / "t.jsonl")))
+        a = run_experiment(gen_spec, engine="sim")
+        b = run_experiment(trace_spec, engine="sim")
+        assert a.diff(b) == {}
+
+
+# ---------------------------------------------------------------------------
+# sweep runner
+# ---------------------------------------------------------------------------
+
+class TestSweep:
+    def test_seed_pairing_and_outputs(self, tmp_path):
+        sw = Sweep(small_spec(n_tasks=60),
+                   {"policy": ["first-available", "max-compute-util"]},
+                   seeds=[0, 1])
+        cells = sw.cells()
+        assert len(cells) == 4
+        # within a replication every cell shares the workload seed; across
+        # replications the seed changes in lockstep (pairing)
+        assert [c.spec.workload.seed for c in cells] == [0, 0, 1, 1]
+        assert [c.spec.seed for c in cells] == [0, 0, 1, 1]
+
+        results = sw.run(out_dir=tmp_path)
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["n_cells"] == 4 and man["seed_paired"] is True
+        assert man["cells"][2]["overrides"]["policy"] == "first-available"
+        back = load_results(tmp_path)
+        assert len(back) == 4
+        assert back[3][1] == results[3][1]
+        # data-aware beats data-unaware on the identical (paired) workload
+        by_policy = {(c.overrides["policy"], c.spec.seed): r
+                     for c, r in results}
+        for seed in (0, 1):
+            assert (by_policy[("max-compute-util", seed)].cache_hit_ratio
+                    > by_policy[("first-available", seed)].cache_hit_ratio)
+
+    def test_sweeping_seed_is_rejected(self):
+        with pytest.raises(ValueError, match="seed-paired"):
+            Sweep(small_spec(), {"workload.seed": [0, 1]})
+        with pytest.raises(ValueError, match="seed-paired"):
+            Sweep(small_spec(), {"seed": [0, 1]})
+
+
+# ---------------------------------------------------------------------------
+# runtime provisioner driver (wall-clock DRP ticks)
+# ---------------------------------------------------------------------------
+
+class TestRuntimeProvisioner:
+    def test_allocates_under_queue_pressure(self):
+        spec = ExperimentSpec(
+            name="rt-elastic",
+            cluster=ClusterSpec(n_nodes=1),
+            cache=CacheSpec(capacity_bytes=10**9),
+            policy="max-compute-util",
+            provisioner=ProvisionerSpec(
+                policy="exponential", min_executors=1, max_executors=4,
+                queue_threshold=1, idle_timeout_s=60.0,
+                trigger_cooldown_s=0.0, period_s=0.02),
+            workload=WorkloadSpec(
+                name="burst",
+                arrivals={"kind": "BatchArrivals", "at_s": 0.0},
+                popularity={"kind": "UniformScan", "stride": 1, "k": 1},
+                n_tasks=60, n_objects=16, object_bytes=MB, seed=0),
+            seed=0)
+
+        def slow_task(inputs):
+            import time as _t
+            _t.sleep(0.01)
+            return 0
+
+        eng = RuntimeEngine().prepare(spec)
+        rep = eng.run(task_fn=slow_task, time_scale=0.0, timeout=60.0)
+        eng.shutdown()
+        assert rep.n_completed == 60
+        assert rep.n_allocated > 0           # the DRP grew the pool
+        assert rep.peak_executors > 1
+        assert rep.peak_executors <= 4       # ...but respected max

@@ -15,7 +15,11 @@ on more than ``--threshold`` regression (default 25%):
   joins      benchmarks/bench_joins.py vs BENCH_joins.json -- guards k-input
              partial-overlap dispatch, with canaries (data-aware beats
              first-available on cache-hit ratio, incremental scores bit-
-             match the brute-force reference, v1 traces replay identical).
+             match the brute-force reference, v1 traces replay identical);
+  policies   benchmarks/bench_policies.py vs BENCH_policies.json -- guards
+             the experiment-API sweep path, with canaries (exponential
+             allocation responds at least as well as one-at-a-time under
+             bursty arrivals, sim + runtime RunReport schemas identical).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -26,6 +30,8 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_workloads \
         --out BENCH_workloads.json
     PYTHONPATH=src python -m benchmarks.bench_joins --out BENCH_joins.json
+    PYTHONPATH=src python -m benchmarks.bench_policies \
+        --out BENCH_policies.json
 """
 from __future__ import annotations
 
@@ -91,11 +97,14 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_workloads.json"))
     ap.add_argument("--joins-baseline",
                     default=str(REPO_ROOT / "BENCH_joins.json"))
+    ap.add_argument("--policies-baseline",
+                    default=str(REPO_ROOT / "BENCH_policies.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
-    ap.add_argument("--only", choices=["engine", "workloads", "joins"],
+    ap.add_argument("--only", choices=["engine", "workloads", "joins",
+                                       "policies"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -105,7 +114,8 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import bench_engine, bench_joins, bench_workloads
+    from benchmarks import (bench_engine, bench_joins, bench_policies,
+                            bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -147,6 +157,22 @@ def main(argv=None) -> int:
                  lambda b, c: bool(c["scores_match_reference"])),
                 ("v1 trace replays to bit-identical RunMetrics",
                  lambda b, c: bool(c["v1_replay_identical"])),
+            ]))
+    if args.only in (None, "policies"):
+        rc = max(rc, _check_gate(
+            "policies", Path(args.policies_baseline),
+            lambda: bench_policies.gate_measure(repeats=args.repeats),
+            (bench_policies.GATE_NODES, bench_policies.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("exponential responds at least as well as one-at-a-time "
+                 "under bursty arrivals",
+                 lambda b, c: c["bursty_exp_avg_slowdown"]
+                 <= c["bursty_one_avg_slowdown"]),
+                ("sim + runtime RunReport schemas identical",
+                 lambda b, c: bool(c["schema_parity"])),
             ]))
     return rc
 

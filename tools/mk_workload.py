@@ -9,8 +9,10 @@ Generate a trace (versioned JSONL, bit-reproducible from the seed):
         --tasks 5000 --objects 250 --object-mb 10 --compute-s 0.5 \
         --seed 0 --out sine.jsonl
 
-Replay it through the discrete-event engine (optionally elastic) and print
-the run's headline metrics as JSON:
+Replay it through an engine (optionally elastic) and print the run's
+unified RunReport as JSON -- ``run`` is a thin wrapper that builds an
+``repro.experiments.ExperimentSpec`` from the flags and executes it
+(see tools/run_experiment.py for the full spec-file CLI):
 
     PYTHONPATH=src python tools/mk_workload.py run sine.jsonl \
         --nodes 64 --policy max-compute-util --provision
@@ -35,15 +37,14 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO_ROOT / "src"))
 
-from repro.core import DispatchPolicy, DynamicResourceProvisioner  # noqa: E402
 from repro.core.provisioner import AllocationPolicy                # noqa: E402
-from repro.core.simulator import DiffusionSim, SimConfig           # noqa: E402
-from repro.core.testbeds import ANL_UC, TPU_V5E_HOSTS              # noqa: E402
+from repro.core.testbeds import TESTBEDS                           # noqa: E402
+from repro.experiments import (CacheSpec, ClusterSpec,             # noqa: E402
+                               ExperimentSpec, ProvisionerSpec,
+                               WorkloadSpec, run_experiment)
 from repro import workloads as W                                   # noqa: E402
 
 MB = 10**6
-
-TESTBEDS = {"anl_uc": ANL_UC, "tpu_v5e": TPU_V5E_HOSTS}
 
 
 def _build_arrivals(args) -> W.ArrivalProcess:
@@ -139,33 +140,42 @@ def cmd_generate(args) -> int:
     return 0
 
 
-def cmd_run(args) -> int:
+def _experiment_spec(args) -> ExperimentSpec:
+    """The declarative equivalent of the flags: ``run`` is now a thin
+    wrapper over repro.experiments (the spec-driven engine construction is
+    bit-identical to the historical hand-built SimConfig path)."""
     if args.trace == "-":
-        wl = _generate(args)
+        wspec = WorkloadSpec(
+            name=args.name,
+            arrivals=_build_arrivals(args).spec(),
+            popularity=_build_popularity(args).spec(),
+            n_tasks=args.tasks, n_objects=args.objects,
+            object_bytes=int(args.object_mb * MB),
+            compute_seconds=args.compute_s,
+            store_metadata_ops=args.meta_ops, seed=args.seed)
     else:
-        wl = W.replay(args.trace)
+        wspec = WorkloadSpec(trace_path=args.trace)
     prov = None
     if args.provision:
-        prov = DynamicResourceProvisioner(
-            min_executors=1, max_executors=args.nodes,
-            policy=AllocationPolicy(args.alloc_policy),
-            queue_threshold=2, idle_timeout_s=args.idle_timeout,
-            trigger_cooldown_s=1.0)
-    tb = TESTBEDS[args.testbed]
-    cfg = SimConfig(
-        testbed=tb, n_nodes=1 if prov else args.nodes,
-        policy=DispatchPolicy(args.policy),
-        cache_capacity_bytes=int(args.cache_gb * 1e9),
-        provisioner=prov, seed=args.sim_seed)
-    sim = DiffusionSim(cfg)
-    sim.submit_workload(wl)
-    r = sim.run()
-    m = W.MetricsCollector(tb, cpus_per_node=cfg.cpus_per_node).collect(
-        r, n_submitted=sim.n_submitted)
-    out = m.as_dict()
-    if prov is not None:
-        out["n_allocated"] = prov.n_allocated
-        out["n_released"] = prov.n_released
+        prov = ProvisionerSpec(
+            policy=args.alloc_policy, min_executors=1,
+            max_executors=args.nodes, queue_threshold=2,
+            idle_timeout_s=args.idle_timeout, trigger_cooldown_s=1.0)
+    return ExperimentSpec(
+        name=args.name,
+        cluster=ClusterSpec(testbed=args.testbed,
+                            n_nodes=1 if prov else args.nodes),
+        cache=CacheSpec(capacity_bytes=int(args.cache_gb * 1e9)),
+        policy=args.policy,
+        provisioner=prov,
+        workload=wspec,
+        seed=args.sim_seed)
+
+
+def cmd_run(args) -> int:
+    rep = run_experiment(_experiment_spec(args), engine=args.engine)
+    out = rep.as_dict()
+    out.pop("pool_log")   # membership log can be long; spec+engine rerun it
     json.dump(out, sys.stdout, indent=2, sort_keys=True)
     print()
     return 0
@@ -181,11 +191,13 @@ def main(argv=None) -> int:
     g.set_defaults(fn=cmd_generate)
 
     r = sub.add_parser("run", help="run a trace (or '-' to generate inline) "
-                                   "through the simulator")
+                                   "through an engine (a thin wrapper over "
+                                   "tools/run_experiment.py's spec API)")
     r.add_argument("trace")
     _add_gen_flags(r)
     r.add_argument("--nodes", type=int, default=16)
     r.add_argument("--policy", default="max-compute-util")
+    r.add_argument("--engine", default="sim", choices=["sim", "runtime"])
     r.add_argument("--testbed", default="anl_uc", choices=sorted(TESTBEDS))
     r.add_argument("--cache-gb", type=float, default=100.0)
     r.add_argument("--provision", action="store_true",

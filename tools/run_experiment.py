@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Experiment CLI: describe / run / sweep a declarative ExperimentSpec JSON
+on either engine (DESIGN.md §7).
+
+Validate a spec and summarise what it would run:
+
+    PYTHONPATH=src python tools/run_experiment.py describe spec.json
+
+Execute it (the SAME spec file runs on both engines):
+
+    PYTHONPATH=src python tools/run_experiment.py run spec.json --engine sim
+    PYTHONPATH=src python tools/run_experiment.py run spec.json \
+        --engine runtime --time-scale 0
+
+Sweep a cartesian grid over spec fields (seed-paired; writes
+manifest.json + results.jsonl to --out-dir):
+
+    PYTHONPATH=src python tools/run_experiment.py sweep spec.json \
+        --set provisioner.policy=one-at-a-time,additive,exponential \
+        --set 'cache.capacity_bytes=[0,50000000000]' \
+        --seeds 0,1 --out-dir results/sweep
+
+``--set path=v1,v2,...`` values are JSON-parsed individually (falling back
+to strings); a value starting with ``[`` is parsed as one JSON list of cell
+values, so whole dicts (e.g. arrival bindings) can be swept too.
+
+An example spec document lives in the `repro.experiments` module docstring;
+``describe`` round-trips the file through the strict parser, so typos in
+field names hard-error instead of silently falling back to defaults.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.experiments import (ExperimentSpec, RunReport, Sweep,  # noqa: E402
+                               build_workload, run_experiment)
+
+
+def _load_spec(path: str) -> ExperimentSpec:
+    try:
+        return ExperimentSpec.load(path)
+    except (OSError, ValueError) as e:
+        raise SystemExit(f"run_experiment: bad spec {path!r}: {e}")
+
+
+def _report_out(rep: RunReport, out: str | None, *, quiet_pool: bool = True):
+    d = rep.as_dict()
+    if out:
+        Path(out).write_text(json.dumps(d, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {out}", file=sys.stderr)
+    if quiet_pool and len(d["pool_log"]) > 8:
+        # keep stdout readable; the full membership log lives in --out
+        d["pool_log"] = (d["pool_log"][:4]
+                         + [f"... {len(rep.pool_log) - 4} more samples"])
+    json.dump(d, sys.stdout, indent=2, sort_keys=True)
+    print()
+
+
+def cmd_describe(args) -> int:
+    spec = _load_spec(args.spec)
+    wl = build_workload(spec.workload)
+    print(json.dumps({
+        "spec": spec.to_dict(),
+        "fingerprint": spec.fingerprint(),
+        "workload": {
+            "n_tasks": len(wl),
+            "n_objects": len(wl.objects),
+            "arrival_span_s": wl.duration,
+            "offered_load_tps": wl.offered_load(),
+            "mean_inputs_per_task": wl.mean_inputs_per_task(),
+            "total_input_bytes": sum(ob.size_bytes for ob in wl.objects),
+        },
+    }, indent=2, sort_keys=True))
+    return 0
+
+
+def cmd_run(args) -> int:
+    spec = _load_spec(args.spec)
+    run_kw = {}
+    if args.engine == "runtime":
+        run_kw = {"time_scale": args.time_scale, "timeout": args.timeout}
+    rep = run_experiment(spec, engine=args.engine, **run_kw)
+    _report_out(rep, args.out)
+    return 0
+
+
+def _parse_set(items: list[str]) -> dict[str, list]:
+    grid: dict[str, list] = {}
+    for item in items:
+        if "=" not in item:
+            raise SystemExit(f"run_experiment: bad --set {item!r} "
+                             f"(want path=v1,v2,...)")
+        path, _, raw = item.partition("=")
+        if raw.lstrip().startswith("["):
+            try:
+                values = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"run_experiment: bad --set JSON list "
+                                 f"for {path!r}: {e}")
+        else:
+            values = []
+            for tok in raw.split(","):
+                try:
+                    values.append(json.loads(tok))
+                except json.JSONDecodeError:
+                    values.append(tok)
+        grid[path] = values
+    return grid
+
+
+def cmd_sweep(args) -> int:
+    spec = _load_spec(args.spec)
+    grid = _parse_set(args.set or [])
+    if not grid:
+        raise SystemExit("run_experiment: sweep needs at least one --set")
+    seeds = [int(s) for s in args.seeds.split(",")] if args.seeds else None
+    run_kw = {}
+    if args.engine == "runtime":
+        run_kw = {"time_scale": args.time_scale, "timeout": args.timeout}
+
+    def progress(cell, rep):
+        print(f"# cell {cell.index}: {cell.overrides} -> "
+              f"completed {rep.n_completed}, hit {rep.cache_hit_ratio:.3f}, "
+              f"slowdown {rep.avg_slowdown:.2f}x, "
+              f"alloc +{rep.n_allocated}/-{rep.n_released}", file=sys.stderr)
+
+    sw = Sweep(spec, grid, seeds=seeds, engine=args.engine)
+    results = sw.run(out_dir=args.out_dir, run_kw=run_kw, progress=progress)
+    print(json.dumps({
+        "sweep": sw.name,
+        "n_cells": len(results),
+        "out_dir": args.out_dir,
+        "cells": [{"index": c.index, "overrides": c.overrides,
+                   "n_completed": r.n_completed,
+                   "cache_hit_ratio": r.cache_hit_ratio,
+                   "avg_slowdown": r.avg_slowdown,
+                   "performance_index": r.performance_index}
+                  for c, r in results],
+    }, indent=2, sort_keys=True))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    d = sub.add_parser("describe", help="validate a spec + summarise it")
+    d.add_argument("spec")
+    d.set_defaults(fn=cmd_describe)
+
+    r = sub.add_parser("run", help="execute a spec on one engine")
+    r.add_argument("spec")
+    r.add_argument("--engine", default="sim", choices=["sim", "runtime"])
+    r.add_argument("--time-scale", type=float, default=0.0,
+                   help="runtime engine: wall s per workload s (0 = ASAP)")
+    r.add_argument("--timeout", type=float, default=600.0)
+    r.add_argument("--out", default=None, help="also write the report JSON")
+    r.set_defaults(fn=cmd_run)
+
+    s = sub.add_parser("sweep", help="cartesian grid over spec fields")
+    s.add_argument("spec")
+    s.add_argument("--engine", default="sim", choices=["sim", "runtime"])
+    s.add_argument("--set", action="append", metavar="PATH=V1,V2",
+                   help="grid axis (repeatable)")
+    s.add_argument("--seeds", default=None,
+                   help="comma-separated seed-paired replications")
+    s.add_argument("--time-scale", type=float, default=0.0)
+    s.add_argument("--timeout", type=float, default=600.0)
+    s.add_argument("--out-dir", default=None,
+                   help="write manifest.json + results.jsonl here")
+    s.set_defaults(fn=cmd_sweep)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
