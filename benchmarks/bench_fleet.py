@@ -1,0 +1,224 @@
+"""Fleet benchmark: aggregate cache bandwidth vs. data-cache node count.
+
+The paper's headline scaling claim is that aggregate I/O bandwidth grows
+with the number of data cache *nodes*.  This bench replays one fixed Zipf
+trace (recorded + replayed through the JSONL layer, so the wire between
+generator and engines is the committed trace format) on 1 / 2 / 4 host
+processes of ``GATE_TPH`` executors each and records, per host count:
+
+  cache_bw_bps   (local + cache-to-cache bytes) / drain wall  -- the
+                 aggregate bandwidth served from caches (Figure 3's axis);
+  peer_bw_bps    cache-to-cache bytes / wall (real socket transfers);
+  tasks_per_s    drained throughput.
+
+Tasks run `repro.fleet.runtime.io_dwell_task`: service time = input bytes
+at ``BENCH_DISK_BW`` per node, so delivered bandwidth is bounded by how
+many nodes serve concurrently -- the quantity under test -- while the
+fleet layer's own dispatch/wire/peer overhead is exactly what separates
+the measured curve from ideal.  The committed BENCH_fleet.json must show
+cache_bw_bps increasing monotonically 1 -> 2 -> 4 hosts.
+
+The gate also carries the *trace-replay parity canary*: the same recorded
+trace replayed batch-synchronously (``barrier_every``) on the in-process
+runtime and on a 2x2 fleet must produce IDENTICAL scheduling-determined
+RunReport fields (drained counts, hit/peer/store split, byte ledger --
+`repro.fleet.SCHEDULING_DETERMINED_FIELDS`).
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --out BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import sys
+import time
+
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               WorkloadSpec, run_experiment)
+from repro.fleet import FleetRuntime, reports_scheduling_equal
+from repro.workloads import PoissonArrivals, ZipfPopularity, generate, record, replay
+
+from .common import row
+
+KB = 1000
+
+#: fixed configuration tools/bench_gate.py replays against the baseline.
+#: GATE_NODES is the largest cell's executor count (hosts * GATE_TPH).
+GATE_HOSTS = (1, 2, 4)
+GATE_TPH = 4
+GATE_NODES = max(GATE_HOSTS) * GATE_TPH
+GATE_TASKS = 400
+OBJECT_BYTES = 768 * KB
+N_OBJECTS = 64
+#: per-executor cache: 4 caches hold ~half the catalog (eviction pressure
+#: at 1 host), 16 caches hold ~2x of it -- more nodes = more cache, the
+#: second axis of the paper's claim.
+CACHE_CAPACITY = 6_000 * KB
+
+
+def fleet_trace(n_tasks: int, seed: int = 0):
+    """The fixed Zipf trace, round-tripped through JSONL record/replay so
+    the bench drives the committed trace format, not just the generator."""
+    wl = generate("fleet", PoissonArrivals(rate_per_s=100_000.0),
+                  ZipfPopularity(1.1), n_tasks=n_tasks,
+                  n_objects=N_OBJECTS, object_bytes=OBJECT_BYTES, seed=seed)
+    buf = io.StringIO()
+    record(wl, buf)
+    buf.seek(0)
+    return replay(buf)
+
+
+def measure_scaling(hosts: int, wl, tph: int = GATE_TPH) -> dict:
+    """One fleet cell: spawn, replay the trace free-running, drain.
+    ``wall_s`` covers submit->drain only (spawn/teardown are setup)."""
+    rt = FleetRuntime(hosts=hosts, threads_per_host=tph,
+                      cache_capacity_bytes=CACHE_CAPACITY,
+                      task_fn_name="repro.fleet.runtime:io_dwell_task")
+    try:
+        for ob in wl.objects:
+            rt.put_object(ob, b"x" * ob.size_bytes)
+        t0 = time.perf_counter()
+        th = rt.submit_workload(wl, time_scale=0.0)
+        th.join(600)
+        drained = (not th.is_alive()) and rt.wait(600)
+        wall = time.perf_counter() - t0
+        lg = rt.ledger
+        n = len(rt.dispatcher.completed)
+        cache_bytes = lg.bytes_local + lg.bytes_c2c
+        return {
+            "hosts": hosts, "threads_per_host": tph,
+            "executors": hosts * tph,
+            "n_tasks": len(wl), "n_completed": n, "drained": drained,
+            "wall_s": round(wall, 4),
+            "cache_hit_ratio": round(lg.global_hit_ratio, 4),
+            "local_hits": lg.local_hits, "peer_hits": lg.peer_hits,
+            "store_reads": lg.store_reads,
+            "cache_bw_bps": round(cache_bytes / wall, 1),
+            "peer_bw_bps": round(lg.bytes_c2c / wall, 1),
+            "tasks_per_s": round(n / wall, 1),
+        }
+    finally:
+        rt.shutdown()
+
+
+def measure_parity(n_tasks: int = 150, seed: int = 7) -> dict:
+    """Trace-replay parity: one recorded trace, replayed batch-
+    synchronously on the in-process runtime (hosts=0) and a 2x2 fleet;
+    scheduling-determined RunReport fields must agree EXACTLY."""
+    def spec(hosts, tph, n_nodes):
+        return ExperimentSpec(
+            name="fleet-parity",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=n_nodes),
+            cache=CacheSpec(capacity_bytes=10**12),   # eviction-free
+            policy="max-compute-util",
+            workload=WorkloadSpec(
+                name="fp",
+                arrivals={"kind": "PoissonArrivals", "rate_per_s": 100.0},
+                popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 2,
+                            "corr": 0.8},
+                n_tasks=n_tasks, n_objects=32, object_bytes=50 * KB,
+                seed=seed),
+            seed=3, hosts=hosts, threads_per_host=tph)
+
+    wl = None   # each engine builds from the identical binding
+    r_single = run_experiment(spec(0, 1, 4), engine="runtime", workload=wl,
+                              barrier_every=4, timeout=300.0)
+    r_fleet = run_experiment(spec(2, 2, 4), engine="runtime", workload=wl,
+                             barrier_every=4, timeout=300.0)
+    diff = reports_scheduling_equal(r_single, r_fleet)
+    return {
+        "parity": not diff and r_single.n_completed == n_tasks,
+        "n_completed": r_single.n_completed,
+        "diff_fields": sorted(diff),
+        "hit_split": [r_fleet.local_hits, r_fleet.peer_hits,
+                      r_fleet.store_reads],
+    }
+
+
+def _monotonic(cells: list[dict], key: str) -> bool:
+    vals = [c[key] for c in sorted(cells, key=lambda c: c["hosts"])]
+    return all(b > a for a, b in zip(vals, vals[1:]))
+
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The fixed 1/2/4-host sweep bench_gate.py replays; best-of-N total
+    drain wall.  Parity is deterministic and measured once."""
+    par = measure_parity()
+    wl = fleet_trace(GATE_TASKS)
+    best = None
+    for _ in range(repeats):
+        cells = [measure_scaling(h, wl) for h in GATE_HOSTS]
+        by_hosts = {c["hosts"]: c for c in cells}
+        m = {
+            "n_nodes": GATE_NODES, "n_tasks": GATE_TASKS,
+            "wall_s": round(sum(c["wall_s"] for c in cells), 4),
+            "n_completed": sum(c["n_completed"] for c in cells),
+            "all_drained": all(c["drained"] for c in cells),
+            "cache_bw_1host": by_hosts[1]["cache_bw_bps"],
+            "cache_bw_4host": by_hosts[4]["cache_bw_bps"],
+            "bw_monotonic": _monotonic(cells, "cache_bw_bps"),
+            "parity": par["parity"],
+        }
+        if best is None or m["wall_s"] < best["wall_s"]:
+            best = m
+    return best
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: the scaling curve + parity as CSV rows."""
+    n_tasks = max(int(GATE_TASKS * scale), 100)
+    wl = fleet_trace(n_tasks)
+    cells = [measure_scaling(h, wl) for h in GATE_HOSTS]
+    rows = []
+    for c in cells:
+        rows.append(row(
+            "fleet", f"cache_bw_{c['hosts']}hosts_mbps",
+            round(c["cache_bw_bps"] / 1e6, 1), "MB/s",
+            paper="Fig 3",
+            note=f"{c['executors']} executors, hit {c['cache_hit_ratio']}, "
+                 f"peer {round(c['peer_bw_bps'] / 1e6, 2)} MB/s, "
+                 f"{c['tasks_per_s']} tasks/s"))
+    rows.append(row("fleet", "cache_bw_monotonic_1_2_4",
+                    1.0 if _monotonic(cells, "cache_bw_bps") else 0.0,
+                    "bool", note="aggregate cache bandwidth grows with "
+                                 "host count"))
+    par = measure_parity()
+    rows.append(row("fleet", "trace_replay_parity",
+                    1.0 if par["parity"] else 0.0, "bool",
+                    note="fleet == single-process on scheduling-determined "
+                         "RunReport fields"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=GATE_TASKS)
+    ap.add_argument("--tph", type=int, default=GATE_TPH)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    wl = fleet_trace(args.tasks, args.seed)
+    cells = [measure_scaling(h, wl, args.tph) for h in GATE_HOSTS]
+    for c in cells:
+        print(f"# {c['hosts']} host(s) x {c['threads_per_host']}: "
+              f"cache {c['cache_bw_bps'] / 1e6:7.1f} MB/s  "
+              f"peer {c['peer_bw_bps'] / 1e6:5.2f} MB/s  "
+              f"{c['tasks_per_s']:6.1f} tasks/s  "
+              f"hit {c['cache_hit_ratio']:.3f}", file=sys.stderr)
+    par = measure_parity()
+    print(f"# parity: {par['parity']} (split {par['hit_split']})",
+          file=sys.stderr)
+    out = {"cells": cells, "parity": par, "gate": gate_measure()}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

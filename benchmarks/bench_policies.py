@@ -15,7 +15,19 @@ tools/bench_gate.py replays with two correctness canaries:
                   for;
   schema parity   a small spec run on BOTH engines must yield RunReports
                   with the identical field schema (the experiment API's
-                  core contract).
+                  core contract);
+  rebalance       under aggressive idle release, ``release_policy=
+                  "rebalance"`` (migrate a released executor's cache to
+                  live peers) must hold a cache-hit ratio at least as high
+                  as ``"discard"`` on the identical workload -- the §6
+                  future-work claim the release-policy knob exists for.
+
+The rebalance study itself (the remaining ROADMAP policy axis) sweeps
+``provisioner.idle_timeout_s`` x cache-refill cost (``workload.
+object_bytes`` -- bytes the store must re-serve per object lost at
+release) x release policy under a two-day diurnal curve, so the pool
+shrinks at each trough and the second day's demand finds -- or does not
+find -- the first day's cached bytes still in the pool.
 
 CLI (writes the committed baseline consumed by tools/bench_gate.py):
 
@@ -157,6 +169,99 @@ def measure_schema_parity() -> bool:
     ))
 
 
+#: rebalance-study grid (kept small: 2 x 2 x 2 deterministic sim cells)
+REBALANCE_NODES = 16
+REBALANCE_TASKS = 1_000
+REBALANCE_IDLE_TIMEOUTS = (2.0, 10.0)
+REBALANCE_OBJECT_BYTES = (1 * MB, 50 * MB)
+
+
+def rebalance_base_spec(n_nodes: int = REBALANCE_NODES,
+                        n_tasks: int = REBALANCE_TASKS,
+                        seed: int = 0) -> ExperimentSpec:
+    """Two diurnal days over an elastic pool: each trough releases idle
+    executors, each new day re-reads yesterday's working set."""
+    return ExperimentSpec(
+        name="rebalance",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=1),
+        cache=CacheSpec(capacity_bytes=10**12),
+        policy="max-compute-util",
+        provisioner=ProvisionerSpec(
+            policy="exponential", min_executors=1, max_executors=n_nodes,
+            queue_threshold=2, idle_timeout_s=5.0, trigger_cooldown_s=1.0),
+        workload=WorkloadSpec(
+            name="rebalance",
+            arrivals={"kind": "DiurnalArrivals", "peak_rate": float(n_nodes),
+                      "trough_rate": 0.5, "day_s": 60.0},
+            popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 1,
+                        "corr": 1.0},
+            n_tasks=n_tasks, n_objects=100, object_bytes=10 * MB,
+            compute_seconds=1.0, seed=seed),
+        seed=seed)
+
+
+def measure_rebalance_sweep(n_nodes: int = REBALANCE_NODES,
+                            n_tasks: int = REBALANCE_TASKS,
+                            seed: int = 0,
+                            out_dir: str | None = None) -> list[dict]:
+    """The ROADMAP's remaining policy axis: idle_timeout x refill cost x
+    release policy, one seed-paired grid (deterministic on the sim)."""
+    sw = Sweep(rebalance_base_spec(n_nodes, n_tasks, seed), {
+        "release_policy": ["discard", "rebalance"],
+        "provisioner.idle_timeout_s": list(REBALANCE_IDLE_TIMEOUTS),
+        "workload.object_bytes": list(REBALANCE_OBJECT_BYTES),
+    }, name="release-rebalance")
+    cells = []
+    for cell, rep in sw.run(out_dir=out_dir):
+        cells.append({
+            "release_policy": cell.overrides["release_policy"],
+            "idle_timeout_s": cell.overrides["provisioner.idle_timeout_s"],
+            "object_bytes": cell.overrides["workload.object_bytes"],
+            "n_nodes": n_nodes, "n_tasks": n_tasks, "seed": seed,
+            "wall_s": round(rep.wall_s, 4),
+            "n_completed": rep.n_completed,
+            "n_released": rep.n_released,
+            "cache_hit_ratio": rep.cache_hit_ratio,
+            "store_reads": rep.store_reads,
+            "bytes_store": rep.bytes_by_kind.get("store_read", 0.0),
+            "avg_slowdown": rep.avg_slowdown,
+            "performance_index": rep.performance_index,
+        })
+    return cells
+
+
+def _rebalance_pair(cells: list[dict]) -> tuple[dict, dict]:
+    """The aggressive cell pair the canary compares: shortest idle timeout
+    (most cache lost to releases), smallest refill cost (fast store reads
+    keep the pool churning, so releases actually bite mid-run)."""
+    idle, ob = min(REBALANCE_IDLE_TIMEOUTS), min(REBALANCE_OBJECT_BYTES)
+    pick = lambda pol: next(  # noqa: E731
+        c for c in cells if c["release_policy"] == pol
+        and c["idle_timeout_s"] == idle and c["object_bytes"] == ob)
+    return pick("discard"), pick("rebalance")
+
+
+def measure_rebalance_canary() -> dict:
+    """Just the canary pair (2 sim runs, deterministic): rebalance must
+    not lose cache-hit ratio vs discard under aggressive idle release."""
+    base = rebalance_base_spec()
+    overrides = {"provisioner.idle_timeout_s": min(REBALANCE_IDLE_TIMEOUTS),
+                 "workload.object_bytes": min(REBALANCE_OBJECT_BYTES)}
+    from repro.experiments import with_overrides
+    reps = {}
+    for pol in ("discard", "rebalance"):
+        spec = with_overrides(base, dict(overrides, release_policy=pol))
+        reps[pol] = run_experiment(spec, engine="sim")
+    return {
+        "rebalance_hit_advantage": round(
+            reps["rebalance"].cache_hit_ratio
+            - reps["discard"].cache_hit_ratio, 6),
+        "store_bytes_saved": (reps["discard"].bytes_by_kind["store_read"]
+                              - reps["rebalance"].bytes_by_kind["store_read"]),
+        "n_released": reps["rebalance"].n_released,
+    }
+
+
 def _cell(cells: list[dict], curve: str, policy: str) -> dict:
     return next(c for c in cells
                 if c["curve"] == curve and c["allocation_policy"] == policy)
@@ -164,8 +269,10 @@ def _cell(cells: list[dict], curve: str, policy: str) -> dict:
 
 def gate_measure(repeats: int = 3) -> dict:
     """The small fixed sweep bench_gate.py replays; best-of-N wall clock.
-    Correctness canaries (policy ordering, schema parity) ride along."""
+    Correctness canaries (policy ordering, schema parity, rebalance
+    advantage) ride along -- the deterministic ones run once."""
     parity = measure_schema_parity()   # deterministic; once, not per repeat
+    reb = measure_rebalance_canary()   # deterministic sim pair; once
     best = None
     for _ in range(repeats):
         cells = measure_policy_sweep(GATE_NODES, GATE_TASKS)
@@ -178,6 +285,8 @@ def gate_measure(repeats: int = 3) -> dict:
             "bursty_exp_avg_slowdown": exp["avg_slowdown"],
             "bursty_one_avg_slowdown": one["avg_slowdown"],
             "schema_parity": parity,
+            "rebalance_hit_advantage": reb["rebalance_hit_advantage"],
+            "rebalance_store_bytes_saved": reb["store_bytes_saved"],
         }
         if best is None or m["wall_s"] < best["wall_s"]:
             best = m
@@ -207,6 +316,15 @@ def run(scale: float = 1.0) -> list[dict]:
     rows.append(row("policies", "schema_parity",
                     1.0 if measure_schema_parity() else 0.0, "bool",
                     note="sim + runtime RunReport field schemas identical"))
+    reb_cells = measure_rebalance_sweep(
+        REBALANCE_NODES, max(int(REBALANCE_TASKS * scale), 300))
+    d, r = _rebalance_pair(reb_cells)
+    rows.append(row("policies", "rebalance_hit_advantage",
+                    round(r["cache_hit_ratio"] - d["cache_hit_ratio"], 4),
+                    "ratio",
+                    note=f"aggressive idle release: rebalance "
+                         f"{r['cache_hit_ratio']:.3f} vs discard "
+                         f"{d['cache_hit_ratio']:.3f} hit"))
     return rows
 
 
@@ -236,7 +354,16 @@ def main(argv=None) -> int:
               f"PI {c['performance_index']:.3f}  "
               f"+{c['n_allocated']}/-{c['n_released']} executors  "
               f"peak {c['peak_executors']}", file=sys.stderr)
-    out = {"cells": cells, "seed_paired": True, "gate": gate_measure()}
+    reb_cells = measure_rebalance_sweep(seed=args.seed)
+    for c in reb_cells:
+        print(f"# release={c['release_policy']:9s} "
+              f"idle {c['idle_timeout_s']:4.1f}s  "
+              f"refill {c['object_bytes'] // MB:3d}MB  "
+              f"hit {c['cache_hit_ratio']:.4f}  "
+              f"store {c['store_reads']:4d}  -{c['n_released']} released",
+              file=sys.stderr)
+    out = {"cells": cells, "rebalance_cells": reb_cells,
+           "seed_paired": True, "gate": gate_measure()}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -25,14 +25,15 @@ def main(argv=None) -> int:
     ap.add_argument("--gate", action="store_true",
                     help="also run tools/bench_gate.py against the committed "
                          "BENCH_engine.json + BENCH_workloads.json + "
-                         "BENCH_joins.json + BENCH_policies.json baselines "
-                         "(fails on >25%% wall-clock regression or a "
-                         "correctness-canary miss)")
+                         "BENCH_joins.json + BENCH_policies.json + "
+                         "BENCH_fleet.json baselines (fails on >25%% "
+                         "wall-clock regression or a correctness-canary "
+                         "miss)")
     args = ap.parse_args(argv)
 
-    from . import (bench_engine, bench_index, bench_joins, bench_microbench,
-                   bench_policies, bench_roofline, bench_scheduler,
-                   bench_stacking, bench_workloads)
+    from . import (bench_engine, bench_fleet, bench_index, bench_joins,
+                   bench_microbench, bench_policies, bench_roofline,
+                   bench_scheduler, bench_stacking, bench_workloads)
 
     modules = [
         ("index", bench_index, 1.0 if args.full else 0.5),
@@ -43,6 +44,7 @@ def main(argv=None) -> int:
         ("workloads", bench_workloads, 1.0 if args.full else 0.25),
         ("joins", bench_joins, 1.0 if args.full else 0.25),
         ("policies", bench_policies, 1.0 if args.full else 0.25),
+        ("fleet", bench_fleet, 1.0 if args.full else 0.5),
         ("roofline", bench_roofline, 1.0),
     ]
     rows = []

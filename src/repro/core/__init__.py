@@ -3,11 +3,12 @@
 Public API re-exports; see DESIGN.md §3 for the inventory.
 """
 from .cache import EvictionPolicy, ExecutorCache
+from .channel import CallbackChannel, Channel, ChannelClosed, LocalChannel
 from .index import IndexUpdate, LocationIndex, ShardedIndex, prls_aggregate_throughput, prls_latency_model
 from .objects import DataObject, Task, TaskState, make_objects, uniform_tasks
 from .policies import Decision, DispatchPolicy, decide
 from .provisioner import AllocationPolicy, DynamicResourceProvisioner
-from .runtime import DiffusionRuntime, ObjectStore
+from .runtime import SHAPE_ONLY_PAYLOAD, DiffusionRuntime, ObjectStore
 from .scheduler import Dispatcher
 from .simulator import DiffusionSim, SimConfig, SimResult
 from .testbeds import ANL_UC, TPU_V5E_HOSTS, TestbedSpec
@@ -15,6 +16,9 @@ from .testbeds import ANL_UC, TPU_V5E_HOSTS, TestbedSpec
 __all__ = [
     "ANL_UC",
     "AllocationPolicy",
+    "CallbackChannel",
+    "Channel",
+    "ChannelClosed",
     "DataObject",
     "Decision",
     "DiffusionRuntime",
@@ -25,8 +29,10 @@ __all__ = [
     "EvictionPolicy",
     "ExecutorCache",
     "IndexUpdate",
+    "LocalChannel",
     "LocationIndex",
     "ObjectStore",
+    "SHAPE_ONLY_PAYLOAD",
     "ShardedIndex",
     "SimConfig",
     "SimResult",

@@ -46,7 +46,10 @@ class DynamicResourceProvisioner:
         queue_threshold: int = 1,
         idle_timeout_s: float = 60.0,
         trigger_cooldown_s: float = 1.0,
+        allocate_quantum: int = 1,
     ) -> None:
+        if allocate_quantum < 1:
+            raise ValueError("allocate_quantum must be >= 1")
         self.min_executors = min_executors
         self.max_executors = max_executors
         self.policy = policy
@@ -54,6 +57,10 @@ class DynamicResourceProvisioner:
         self.queue_threshold = queue_threshold
         self.idle_timeout_s = idle_timeout_s
         self.trigger_cooldown_s = trigger_cooldown_s
+        # executors are acquired/released in multiples of this (the fleet
+        # sets it to threads_per_host so grow/shrink moves whole hosts;
+        # 1 = the classic per-executor behaviour, bit-identical).
+        self.allocate_quantum = allocate_quantum
         self._exp_burst = 1
         self._last_trigger = -float("inf")
         self.n_allocated = 0
@@ -68,28 +75,37 @@ class DynamicResourceProvisioner:
         idle_executors: list[str],
     ) -> ProvisionerActions:
         acts = ProvisionerActions()
+        q = self.allocate_quantum
         total = live_executors + inflight_allocations
         # -- grow ---------------------------------------------------------
         if (queue_len >= self.queue_threshold and total < self.max_executors
                 and now - self._last_trigger >= self.trigger_cooldown_s):
-            room = self.max_executors - total
-            if self.policy is AllocationPolicy.ONE_AT_A_TIME:
-                want = 1
-            elif self.policy is AllocationPolicy.ADDITIVE:
-                want = self.additive_k
-            elif self.policy is AllocationPolicy.EXPONENTIAL:
-                want = self._exp_burst
-                self._exp_burst *= 2
-            else:  # ALL_AT_ONCE
-                want = room
-            acts.allocate = min(want, room)
-            self.n_allocated += acts.allocate
-            self._last_trigger = now
+            # room rounds DOWN to whole quanta (no partial hosts), the
+            # policy's request UP (a one-at-a-time trigger on a fleet still
+            # buys one whole host).  room == 0 (max not a quantum multiple,
+            # remainder too small for a whole host) is NOT a trigger: the
+            # policy state (exponential burst, cooldown clock) must not
+            # churn on an allocation that can never happen.
+            room = ((self.max_executors - total) // q) * q
+            if room > 0:
+                if self.policy is AllocationPolicy.ONE_AT_A_TIME:
+                    want = 1
+                elif self.policy is AllocationPolicy.ADDITIVE:
+                    want = self.additive_k
+                elif self.policy is AllocationPolicy.EXPONENTIAL:
+                    want = self._exp_burst
+                    self._exp_burst *= 2
+                else:  # ALL_AT_ONCE
+                    want = room
+                want = ((want + q - 1) // q) * q
+                acts.allocate = min(want, room)
+                self.n_allocated += acts.allocate
+                self._last_trigger = now
         elif queue_len < self.queue_threshold:
             self._exp_burst = 1
         # -- shrink --------------------------------------------------------
         if queue_len == 0 and live_executors > self.min_executors:
-            releasable = live_executors - self.min_executors
+            releasable = ((live_executors - self.min_executors) // q) * q
             acts.release = idle_executors[:releasable]
             self.n_released += len(acts.release)
         return acts

@@ -6,30 +6,42 @@ callables, and objects carry real payloads (numpy arrays / bytes) held in
 per-executor in-memory caches -- this is the engine behind the training data
 pipeline (repro.data.pipeline) and the serving router.
 
-On a real multi-host fleet each executor is a host process and ``fetch``
-crosses DCN; here executors are threads and a peer fetch is a memcpy plus a
-byte-ledger entry, so scheduling behaviour (placement, hit ratios, byte
-ledgers -- everything the paper evaluates) is identical while staying
-runnable in one process.  The Channel abstraction marks exactly the two
-seams (task dispatch, index updates) that become RPCs on a fleet.
+Here executors are threads and a peer fetch is a memcpy plus a byte-ledger
+entry, so scheduling behaviour (placement, hit ratios, byte ledgers --
+everything the paper evaluates) stays identical while runnable in one
+process.  The `repro.core.channel.Channel` abstraction marks exactly the
+two seams (task dispatch down to each worker, index updates / completions
+back up) that become RPCs on a real fleet: every dispatch goes through the
+worker's dispatch channel (`ExecutorWorker.dispatch`) and every cache
+admission through the runtime's ``update_channel``.  `repro.fleet` swaps
+these in-process channels for socket-backed ones and runs the same
+dispatcher over executors in other OS processes.
 
 Submission is closed-loop (``submit``) or open-loop (``submit_workload``: a
 paced submitter thread replays a ``repro.workloads`` arrival schedule on the
-wall clock, optionally time-scaled).
+wall clock, optionally time-scaled, or -- with ``barrier_every`` -- in
+deterministic batch-synchronous rounds).
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Optional
 
 from .cache import EvictionPolicy, ExecutorCache
+from .channel import CallbackChannel, Channel, ChannelClosed, LocalChannel
 from .index import IndexUpdate
 from .objects import DataObject, Task, TaskState
 from .policies import DispatchPolicy
 from .scheduler import Dispatcher, Dispatch
+
+#: store payload for shape-only runs (tasks with no ``fn``).  Must NOT be
+#: None -- the cache-hit test is ``payload is not None``, so a None payload
+#: would turn every cache lookup into a store read.  Lives here (not in the
+#: experiment layer) so the fleet wire protocol can give it a stable
+#: encoding: byte accounting uses DataObject sizes, never payload length.
+SHAPE_ONLY_PAYLOAD = object()
 
 
 class ObjectStore:
@@ -57,6 +69,12 @@ class ObjectStore:
 
     def meta(self, oid: str) -> DataObject:
         return self._meta[oid]
+
+    def items(self) -> list[tuple[DataObject, Any]]:
+        """Consistent snapshot of the catalog (fleet hosts replicate it --
+        the store stands in for a shared filesystem every node can read)."""
+        with self._lock:
+            return [(self._meta[oid], self._data[oid]) for oid in self._data]
 
     def __contains__(self, oid: str) -> bool:
         return oid in self._data
@@ -105,6 +123,18 @@ class RuntimeLedger:
                 self.bytes_store += n
                 self.store_reads += 1
 
+    def account_attempt(self, acc: "_InputLedger") -> None:
+        """Fold one *counted* attempt's per-input ledger in atomically.
+        Store-read occurrences are ``cache_misses - peer_hits`` (a miss is
+        served either cache-to-cache or from the store)."""
+        with self.lock:
+            self.bytes_local += acc.bytes_local
+            self.bytes_c2c += acc.bytes_cache_to_cache
+            self.bytes_store += acc.bytes_store
+            self.local_hits += acc.cache_hits
+            self.peer_hits += acc.peer_hits
+            self.store_reads += acc.cache_misses - acc.peer_hits
+
     @property
     def global_hit_ratio(self) -> float:
         n = self.local_hits + self.peer_hits + self.store_reads
@@ -116,27 +146,26 @@ class RuntimeLedger:
         return self.local_hits / n if n else 0.0
 
 
-class ExecutorWorker:
-    """A worker thread with a local payload cache."""
+class CacheExecutorBase:
+    """Executor-local payload cache + dispatch inbox Channel -- the parts
+    of an executor that are identical whether it lives in this process
+    (:class:`ExecutorWorker`) or inside a fleet host process
+    (``repro.fleet.host.HostExecutor``).  ONE implementation of
+    lookup/peek/admit semantics, so the two runtimes the fleet's
+    trace-replay parity canary compares cannot silently drift."""
 
-    def __init__(self, eid: str, rt: "DiffusionRuntime",
-                 cache_capacity: int, policy: EvictionPolicy, seed: int) -> None:
+    def __init__(self, eid: str, cache_capacity: int,
+                 policy: EvictionPolicy, seed: int) -> None:
         self.eid = eid
-        self.rt = rt
         self.cache = ExecutorCache(cache_capacity, policy, seed=seed)
         self.payloads: dict[str, Any] = {}
         self.lock = threading.Lock()
-        self.inbox: "queue.Queue[Optional[Dispatch]]" = queue.Queue()
-        self.thread = threading.Thread(target=self._run, daemon=True,
-                                       name=f"executor-{eid}")
+        self.inbox: Channel = LocalChannel()
         self.alive = True
-
-    def start(self) -> None:
-        self.thread.start()
 
     def stop(self) -> None:
         self.alive = False
-        self.inbox.put(None)
+        self.inbox.close()
 
     # -- cache ops (thread-safe) ---------------------------------------------
     def cache_lookup(self, oid: str) -> Optional[Any]:
@@ -153,20 +182,55 @@ class ExecutorWorker:
                 return self.payloads[oid]
         return None
 
-    def cache_admit(self, obj: DataObject, payload: Any) -> IndexUpdate:
+    def cache_admit(self, obj: DataObject,
+                    payload: Any) -> tuple[tuple[str, ...], tuple[str, ...]]:
+        """Admit one object; returns ``(added, removed)`` oid tuples (the
+        payload of an IndexUpdate, transport-agnostic)."""
         with self.lock:
             evicted = self.cache.put(obj)
             if obj.oid in self.cache:
                 self.payloads[obj.oid] = payload
             for oid in evicted:
                 self.payloads.pop(oid, None)
-            return IndexUpdate(self.eid, added=(obj.oid,), removed=tuple(evicted))
+            return (obj.oid,), tuple(evicted)
+
+
+class ExecutorWorker(CacheExecutorBase):
+    """A worker thread with a local payload cache.
+
+    Receives work exclusively through its dispatch :class:`Channel`
+    (``dispatch()`` is the only way the runtime hands it a task), so the
+    executor side of the dispatch seam is already message-shaped -- the
+    fleet's remote executors implement the same ``dispatch``/``stop``
+    surface over a socket."""
+
+    def __init__(self, eid: str, rt: "DiffusionRuntime",
+                 cache_capacity: int, policy: EvictionPolicy, seed: int) -> None:
+        super().__init__(eid, cache_capacity, policy, seed)
+        self.rt = rt
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name=f"executor-{eid}")
+
+    def start(self) -> None:
+        self.thread.start()
+
+    def dispatch(self, disp: Dispatch) -> None:
+        """Dispatch-seam entry point (dispatcher -> this executor)."""
+        try:
+            self.inbox.send(disp)
+        except ChannelClosed:
+            pass   # racing a stop(); the membership guard already dropped us
+
+    def admit_update(self, obj: DataObject, payload: Any) -> IndexUpdate:
+        added, removed = self.cache_admit(obj, payload)
+        return IndexUpdate(self.eid, added=added, removed=removed)
 
     # -- task loop --------------------------------------------------------------
     def _run(self) -> None:
         while self.alive:
-            disp = self.inbox.get()
-            if disp is None:
+            try:
+                disp = self.inbox.recv()
+            except ChannelClosed:
                 return
             self.rt._execute(self, disp)
 
@@ -188,6 +252,10 @@ class DiffusionRuntime:
         self.dispatcher = Dispatcher(policy)
         self.ledger = RuntimeLedger()
         self.workers: dict[str, ExecutorWorker] = {}
+        # the update seam: executors send IndexUpdates here; in process the
+        # channel is a synchronous callback into the (locked) batcher.  The
+        # fleet's hosts send the same records over a socket instead.
+        self.update_channel: Channel = CallbackChannel(self._on_update)
         self._lock = threading.Lock()
         self._done = threading.Condition(self._lock)
         self._outstanding = 0
@@ -259,25 +327,48 @@ class DiffusionRuntime:
                 return
             self.pool_log.append((time.monotonic() - self._t0,
                                   len(self.workers)))
-            st = self.dispatcher.executors.get(eid)
-            running = set(st.running) if st is not None else set()
-            self.dispatcher.executor_left(eid, time.monotonic(),
-                                          failed=failed)
-            # in-flight completions from the dead worker are dropped by the
-            # membership guard in _execute.  Re-queued retries keep their
-            # outstanding count, but a task whose attempts were exhausted by
-            # executor_left is terminally FAILED and will never complete --
-            # account it here or wait() leaks forever.
-            terminal = sum(
-                1 for tid in running
-                if (t := self.dispatcher.tasks.get(tid)) is not None
-                and t.state is TaskState.FAILED)
-            if terminal:
-                self._outstanding -= terminal
-                if self._outstanding == 0:
-                    self._done.notify_all()
+            self._deregister_locked(eid, failed)
         w.stop()
         self._pump()
+
+    def _deregister_locked(self, eid: str, failed: bool) -> None:
+        """Hand a (popped) executor back to the dispatcher, under the lock.
+        Shared by thread removal and fleet host death -- both must account
+        terminally-failed in-flight tasks or ``wait()`` leaks."""
+        st = self.dispatcher.executors.get(eid)
+        running = set(st.running) if st is not None else set()
+        self.dispatcher.executor_left(eid, time.monotonic(), failed=failed)
+        # in-flight completions from the dead executor are dropped by the
+        # membership guard in _finish_attempt.  Re-queued retries keep their
+        # outstanding count, but a task whose attempts were exhausted by
+        # executor_left is terminally FAILED and will never complete --
+        # account it here or wait() leaks forever.
+        terminal = sum(
+            1 for tid in running
+            if (t := self.dispatcher.tasks.get(tid)) is not None
+            and t.state is TaskState.FAILED)
+        if terminal:
+            self._outstanding -= terminal
+            if self._outstanding == 0:
+                self._done.notify_all()
+
+    # -- provisioning hooks ------------------------------------------------------
+    # The wall-clock DRP driver (repro.experiments._ProvisionerDriver) talks
+    # to the pool only through these three methods, in executor units.  The
+    # fleet overrides them with whole-host granularity (a "node" there is an
+    # OS process running threads_per_host executors).
+
+    def provision_grow(self, n: int) -> None:
+        for _ in range(n):
+            self.add_executor()
+
+    def provision_release(self, eids: Iterable[str]) -> None:
+        for eid in eids:
+            self.remove_executor(eid)
+
+    def provision_idle(self, now: float, idle_for_s: float) -> list[str]:
+        """Executors eligible for release (called under ``self._lock``)."""
+        return self.dispatcher.idle_executors(now, idle_for_s)
 
     # -- data -------------------------------------------------------------------------
     def put_object(self, obj: DataObject, payload: Any) -> None:
@@ -296,7 +387,8 @@ class DiffusionRuntime:
     def submit_workload(self, wl, *, task_fn: Optional[Callable[..., Any]] = None,
                         payload_factory: Optional[Callable[[DataObject], Any]] = None,
                         time_scale: float = 1.0,
-                        block: bool = False) -> threading.Thread:
+                        block: bool = False,
+                        barrier_every: Optional[int] = None) -> threading.Thread:
         """Open-loop submission: a paced submitter thread sleeps each task's
         ``repro.workloads`` arrival gap (wall-clock, scaled by ``time_scale``;
         0 collapses to as-fast-as-possible) and submits it, so demand arrives
@@ -308,22 +400,41 @@ class DiffusionRuntime:
         tasks only after they arrive, so to drain a paced run: join the
         returned thread, then ``wait()``.  ``shutdown()`` aborts any
         in-flight paced schedule (the thread exits at its next arrival).
+
+        ``barrier_every=B`` replaces pacing with *batch-synchronous replay*:
+        events are submitted in chunks of B (one ``submit`` call per chunk,
+        so all of a chunk's placement decisions happen against a quiescent
+        pool) and the run drains fully between chunks.  With eviction-free
+        caches, a fixed pool, and ``B <= pool size`` (a whole chunk
+        dispatches in ONE pump against the all-idle pool; a larger B leaves
+        a tail whose placement follows racy completion order) this makes
+        the scheduling outcome (placement sequence, per-input
+        hit/peer/store split, byte ledger) a pure function of the workload
+        -- identical across thread interleavings AND across the
+        in-process/fleet runtimes, which is what the fleet trace-replay
+        parity canary runs on.
         """
         if time_scale < 0:
             raise ValueError("time_scale must be >= 0")
+        if barrier_every is not None and barrier_every < 1:
+            raise ValueError("barrier_every must be >= 1")
         if payload_factory is not None:
             for ob in wl.objects:
                 if ob.oid not in self.store:
                     self.put_object(ob, payload_factory(ob))
         events = wl.tasks()
 
+        def _prep(task) -> Task:
+            if task.fn is None:
+                task.fn = task_fn
+            return task
+
         def _pace() -> None:
             t0 = time.monotonic()
             for t_arr, task in events:
                 if self._stop_pacing.is_set():
                     return
-                if task.fn is None:
-                    task.fn = task_fn
+                _prep(task)
                 if time_scale > 0:
                     delay = t_arr * time_scale - (time.monotonic() - t0)
                     # interruptible sleep: shutdown() aborts the schedule
@@ -331,8 +442,18 @@ class DiffusionRuntime:
                         return
                 self.submit((task,))
 
-        th = threading.Thread(target=_pace, daemon=True,
-                              name="workload-submitter")
+        def _pace_barriers() -> None:
+            for i in range(0, len(events), barrier_every):
+                if self._stop_pacing.is_set():
+                    return
+                self.submit(_prep(task) for _, task in
+                            events[i:i + barrier_every])
+                if not self.wait(timeout=600.0):
+                    return   # wedged; the caller's drain check reports it
+
+        th = threading.Thread(
+            target=_pace_barriers if barrier_every is not None else _pace,
+            daemon=True, name="workload-submitter")
         th.start()
         if block:
             th.join()
@@ -347,23 +468,24 @@ class DiffusionRuntime:
                 with self._lock:
                     self.dispatcher.task_finished(d.task, time.monotonic(), ok=False)
                 continue
-            w.inbox.put(d)
+            w.dispatch(d)
 
     def _resolve(self, acc: "_InputLedger", w: ExecutorWorker, oid: str,
                  hints: dict[str, tuple[str, ...]]) -> Any:
-        """Stage one input, accounting the run ledger and a per-attempt
-        accumulator (joins need the per-task split: a k-input task may hit
-        locally on some inputs, peer-fetch others, miss the rest).  The
-        accumulator -- NOT the task -- is written here because this runs
-        lock-free on the worker thread: if the worker is removed mid-
+        """Stage one input, accounting a per-attempt accumulator (joins
+        need the per-task split: a k-input task may hit locally on some
+        inputs, peer-fetch others, miss the rest).  Only the accumulator --
+        never the task or the global ledger -- is written here because this
+        runs lock-free on the worker thread: if the worker is removed mid-
         execution, executor_left resets and re-queues the task, and a
         zombie attempt must not race its counters against the retry's.
-        _execute merges the accumulator under the lock, after the
-        membership guard drops de-registered workers."""
+        _finish_attempt merges the accumulator into the task AND the global
+        ledger under the lock, after the membership guard drops
+        de-registered workers -- so ledger totals always equal the sum of
+        counted attempts (fleet hosts report through the same path)."""
         size = self.dispatcher.sizes.get(oid, 0)
         payload = w.cache_lookup(oid)
         if payload is not None:
-            self.ledger.account("local", size)
             acc.cache_hits += 1
             acc.bytes_local += size
             return payload
@@ -376,19 +498,22 @@ class DiffusionRuntime:
                 continue
             payload = peer.cache_peek(oid)
             if payload is not None:
-                self.ledger.account("c2c", size)
                 acc.peer_hits += 1
                 acc.bytes_cache_to_cache += size
                 obj = self.store.meta(oid) if oid in self.store else DataObject(oid, size)
-                self._emit(w.cache_admit(obj, payload))
+                self._emit(w.admit_update(obj, payload))
                 return payload
         obj, payload = self.store.get(oid)
-        self.ledger.account("store", obj.size_bytes)
         acc.bytes_store += obj.size_bytes
-        self._emit(w.cache_admit(obj, payload))
+        self._emit(w.admit_update(obj, payload))
         return payload
 
     def _emit(self, upd: IndexUpdate) -> None:
+        self.update_channel.send(upd)
+
+    def _on_update(self, upd: IndexUpdate) -> None:
+        """Consumer side of the update seam (same code path for in-process
+        sends and for updates arriving from fleet hosts)."""
         with self._lock:
             self._update_buf.append(upd)
             if len(self._update_buf) >= self._update_batch:
@@ -407,11 +532,19 @@ class DiffusionRuntime:
                 t.result = t.fn(**inputs) if _wants_kwargs(t.fn) else t.fn(inputs)
             for ob in t.outputs:
                 payload = t.result if len(t.outputs) == 1 else t.result[ob.oid]
-                self._emit(w.cache_admit(ob, payload))
+                self._emit(w.admit_update(ob, payload))
                 self.dispatcher.sizes[ob.oid] = ob.size_bytes
         except Exception as e:  # noqa: BLE001 - task failure is data, not a crash
             ok = False
             t.result = e
+        self._finish_attempt(w, t, acc, ok)
+        self._pump()
+
+    def _finish_attempt(self, w, t: Task, acc: _InputLedger, ok: bool) -> None:
+        """Complete one execution attempt under the lock.  ``w`` is
+        whatever object ``self.workers`` maps the executor id to -- a
+        thread worker here, a remote-executor proxy on a fleet -- and the
+        identity check is the membership guard for both."""
         with self._lock:
             if self.workers.get(w.eid) is not w:
                 # this worker was removed mid-execution: executor_left already
@@ -422,12 +555,12 @@ class DiffusionRuntime:
                 # not pollute the retry's counters (acc is dropped here)
                 return
             acc.merge_into(t)
+            self.ledger.account_attempt(acc)
             self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
             if ok or t.state is TaskState.FAILED:
                 self._outstanding -= 1
                 if self._outstanding == 0:
                     self._done.notify_all()
-        self._pump()
 
     def wait(self, timeout: float = 60.0) -> bool:
         deadline = time.monotonic() + timeout

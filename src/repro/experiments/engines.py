@@ -1,7 +1,10 @@
 """Engine adapters: one `ExperimentSpec` -> either engine -> one `RunReport`.
 
   SimEngine      discrete-event `DiffusionSim` (simulated clock)
-  RuntimeEngine  threaded `DiffusionRuntime` (wall clock, real payloads)
+  RuntimeEngine  threaded `DiffusionRuntime` (wall clock, real payloads);
+                 with ``spec.hosts > 0`` it drives `repro.fleet.
+                 FleetRuntime` instead -- same executors-and-dispatcher
+                 model, spread over OS processes
 
 Both follow the same protocol -- ``prepare(spec)`` builds the engine and
 binds the workload, ``run()`` executes and returns a :class:`RunReport` --
@@ -28,6 +31,7 @@ simulator's definition of "no caches".
 from __future__ import annotations
 
 import dataclasses
+import sys
 import threading
 import time
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
@@ -36,7 +40,7 @@ from repro.core.cache import EvictionPolicy
 from repro.core.objects import DataObject
 from repro.core.policies import DispatchPolicy
 from repro.core.provisioner import DynamicResourceProvisioner, AllocationPolicy
-from repro.core.runtime import DiffusionRuntime
+from repro.core.runtime import DiffusionRuntime, SHAPE_ONLY_PAYLOAD
 from repro.core.simulator import DiffusionSim, SimConfig, SimResult
 from repro.core.testbeds import TESTBEDS
 from repro.workloads import (ARRIVALS, POPULARITY, MetricsCollector, Workload,
@@ -74,7 +78,10 @@ def build_workload(wspec: WorkloadSpec) -> Workload:
         seed=wspec.seed)
 
 
-def build_provisioner(pspec: ProvisionerSpec) -> DynamicResourceProvisioner:
+def build_provisioner(pspec: ProvisionerSpec,
+                      allocate_quantum: int = 1) -> DynamicResourceProvisioner:
+    """``allocate_quantum`` stays an engine-placement detail (fleet runs
+    pass threads_per_host so DRP grow/shrink moves whole hosts)."""
     return DynamicResourceProvisioner(
         min_executors=pspec.min_executors,
         max_executors=pspec.max_executors,
@@ -82,7 +89,8 @@ def build_provisioner(pspec: ProvisionerSpec) -> DynamicResourceProvisioner:
         additive_k=pspec.additive_k,
         queue_threshold=pspec.queue_threshold,
         idle_timeout_s=pspec.idle_timeout_s,
-        trigger_cooldown_s=pspec.trigger_cooldown_s)
+        trigger_cooldown_s=pspec.trigger_cooldown_s,
+        allocate_quantum=allocate_quantum)
 
 
 def build_sim_config(spec: ExperimentSpec,
@@ -110,10 +118,9 @@ def build_sim_config(spec: ExperimentSpec,
         seed=spec.seed)
 
 
-#: store payload for shape-only runs (no task_fn).  Must NOT be None --
-#: the runtime's cache-hit test is ``payload is not None``, so a None
-#: payload would turn every cache lookup into a store read.
-_SHAPE_ONLY_PAYLOAD = object()
+#: store payload for shape-only runs (no task_fn); lives in core.runtime
+#: since the fleet wire protocol gives it a stable encoding.
+_SHAPE_ONLY_PAYLOAD = SHAPE_ONLY_PAYLOAD
 
 
 def _reject(engine: str, knob: str, value, supported) -> None:
@@ -164,6 +171,10 @@ class SimEngine:
             _reject("sim", "index_update_batch", spec.index_update_batch,
                     "the runtime's loose-coherence knob "
                     "(sim uses index_update_interval_s)")
+        if spec.hosts != 0:
+            _reject("sim", "hosts", spec.hosts,
+                    "0 (process layout is a threaded-runtime concern; the "
+                    "simulator has no OS processes to spread over)")
         self.spec = spec
         self.provisioner = (build_provisioner(spec.provisioner)
                             if spec.provisioner else None)
@@ -217,13 +228,21 @@ class _ProvisionerDriver(threading.Thread):
             with self.rt._lock:
                 queue_len = self.rt.dispatcher.queue_len
                 live = len(self.rt.workers)
-                idle = self.rt.dispatcher.idle_executors(
-                    now, self.prov.idle_timeout_s)
+                idle = self.rt.provision_idle(now, self.prov.idle_timeout_s)
             acts = self.prov.step(now, queue_len, live, 0, idle)
-            for _ in range(acts.allocate):
-                self.rt.add_executor()
-            for eid in acts.release:
-                self.rt.remove_executor(eid)
+            # granularity is the runtime's business: thread executors in
+            # process, whole hosts (threads_per_host executors each) on a
+            # fleet -- same driver either way.  A failed grow (e.g. a fleet
+            # host that never connects) must not unwind this daemon thread:
+            # provisioning silently stopping for the rest of the run is
+            # strictly worse than one missed allocation.
+            try:
+                self.rt.provision_grow(acts.allocate)
+                self.rt.provision_release(acts.release)
+            except Exception as e:  # noqa: BLE001
+                print(f"runtime-provisioner: provisioning action failed "
+                      f"({type(e).__name__}: {e}); continuing",
+                      file=sys.stderr)
 
     def stop(self) -> None:
         self.stop_evt.set()
@@ -233,15 +252,24 @@ class RuntimeEngine:
     """Threaded-runtime adapter.  ``run()`` paces the workload in (see
     `DiffusionRuntime.submit_workload`), drains it, and reports in wall
     seconds.  ``self.runtime`` stays alive afterwards for payload/result
-    inspection; call :meth:`shutdown` when done."""
+    inspection; call :meth:`shutdown` when done.
+
+    ``spec.hosts > 0`` selects fleet mode: the SAME adapter drives a
+    `repro.fleet.FleetRuntime` (executors spread over OS processes) --
+    placement, accounting and the report pipeline are identical, only the
+    pool's process layout changes.  Task callables cannot cross process
+    boundaries, so fleet runs take ``task_fn_name`` (resolved host-side
+    against ``repro.fleet.TASK_FNS`` or as ``module:attr``) instead of
+    ``run(task_fn=...)``."""
 
     name = "runtime"
 
-    def __init__(self) -> None:
+    def __init__(self, task_fn_name: Optional[str] = None) -> None:
         self.spec: Optional[ExperimentSpec] = None
         self.runtime: Optional[DiffusionRuntime] = None
         self.workload: Optional[Workload] = None
         self.provisioner: Optional[DynamicResourceProvisioner] = None
+        self.task_fn_name = task_fn_name
         self._driver: Optional[_ProvisionerDriver] = None
         self.result = None
         self.metrics = None
@@ -269,14 +297,28 @@ class RuntimeEngine:
             _reject("runtime", "speculation_factor", spec.speculation_factor,
                     "0.0 (no speculative twins in the threaded runtime)")
         self.spec = spec
-        self.runtime = DiffusionRuntime(
-            n_executors=spec.cluster.n_nodes,
-            policy=DispatchPolicy(spec.policy),
-            cache_policy=EvictionPolicy(spec.cache.eviction),
-            cache_capacity_bytes=(spec.cache.capacity_bytes
-                                  if spec.cache.enabled else 0),
-            seed=spec.seed,
-            index_update_batch=spec.index_update_batch)
+        if spec.hosts > 0:
+            from repro.fleet import FleetRuntime
+
+            self.runtime = FleetRuntime(
+                hosts=spec.hosts,
+                threads_per_host=spec.threads_per_host,
+                policy=DispatchPolicy(spec.policy),
+                cache_policy=EvictionPolicy(spec.cache.eviction),
+                cache_capacity_bytes=(spec.cache.capacity_bytes
+                                      if spec.cache.enabled else 0),
+                seed=spec.seed,
+                index_update_batch=spec.index_update_batch,
+                task_fn_name=self.task_fn_name)
+        else:
+            self.runtime = DiffusionRuntime(
+                n_executors=spec.cluster.n_nodes,
+                policy=DispatchPolicy(spec.policy),
+                cache_policy=EvictionPolicy(spec.cache.eviction),
+                cache_capacity_bytes=(spec.cache.capacity_bytes
+                                      if spec.cache.enabled else 0),
+                seed=spec.seed,
+                index_update_batch=spec.index_update_batch)
         self.workload = workload if workload is not None \
             else build_workload(spec.workload)
         return self
@@ -285,10 +327,23 @@ class RuntimeEngine:
             task_fn: Optional[Callable[..., Any]] = None,
             payload_factory: Optional[Callable[[DataObject], Any]] = None,
             time_scale: float = 0.0,
-            timeout: float = 600.0) -> RunReport:
+            timeout: float = 600.0,
+            barrier_every: Optional[int] = None) -> RunReport:
         rt = self.runtime
         if rt is None:
             raise RuntimeError("call prepare(spec) before run()")
+        if task_fn is not None and self.spec.hosts > 0:
+            raise ValueError(
+                "fleet runs cannot ship a task callable over the wire; "
+                "construct RuntimeEngine(task_fn_name=...) so each host "
+                "resolves it from repro.fleet.TASK_FNS / module:attr")
+        if task_fn is None and self.task_fn_name and self.spec.hosts == 0:
+            # the named-callable surface works identically on the thread
+            # pool (resolved here) and the fleet (resolved host-side) --
+            # silently dropping the name would run every task shape-only
+            from repro.fleet.host import resolve_task_fn
+
+            task_fn = resolve_task_fn(self.task_fn_name)
         if payload_factory is None:
             # shape-only runs (no task_fn) still need store payloads to
             # resolve; byte accounting uses DataObject sizes, not payloads
@@ -301,16 +356,20 @@ class RuntimeEngine:
             # silently diverge between engines.
             ps = self.spec.provisioner
             ts = time_scale if time_scale > 0 else 1.0
-            self.provisioner = build_provisioner(dataclasses.replace(
-                ps, idle_timeout_s=ps.idle_timeout_s * ts,
-                trigger_cooldown_s=ps.trigger_cooldown_s * ts))
+            self.provisioner = build_provisioner(
+                dataclasses.replace(
+                    ps, idle_timeout_s=ps.idle_timeout_s * ts,
+                    trigger_cooldown_s=ps.trigger_cooldown_s * ts),
+                allocate_quantum=(self.spec.threads_per_host
+                                  if self.spec.hosts > 0 else 1))
             self._driver = _ProvisionerDriver(rt, self.provisioner,
                                               ps.period_s * ts)
             self._driver.start()
         t0 = time.monotonic()
         submitter = rt.submit_workload(
             self.workload, task_fn=task_fn,
-            payload_factory=payload_factory, time_scale=time_scale)
+            payload_factory=payload_factory, time_scale=time_scale,
+            barrier_every=barrier_every)
         submitter.join(timeout)
         drained = (not submitter.is_alive()
                    and rt.wait(max(timeout - (time.monotonic() - t0), 0.01)))

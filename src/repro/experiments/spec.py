@@ -185,6 +185,13 @@ class ExperimentSpec:
     release_policy: str = "discard"         # sim: discard | rebalance
     flow_solver: str = "incremental"        # sim: incremental | naive
     speculation_factor: float = 0.0         # sim: straggler twins
+    # runtime only, fleet mode (repro.fleet): hosts > 0 runs the executors
+    # across `hosts` OS processes of `threads_per_host` executor threads
+    # each.  cluster.n_nodes must then equal hosts * threads_per_host --
+    # the pool SIZE stays the cluster's business, its process layout is an
+    # engine knob.  hosts = 0 is the classic in-process thread pool.
+    hosts: int = 0
+    threads_per_host: int = 1
 
     def __post_init__(self) -> None:
         DispatchPolicy(self.policy)         # raises on unknown value
@@ -196,6 +203,20 @@ class ExperimentSpec:
             raise ValueError("flow_solver must be incremental|naive")
         if self.index_update_batch < 1:
             raise ValueError("index_update_batch must be >= 1")
+        if self.hosts < 0:
+            raise ValueError("hosts must be >= 0 (0 = in-process threads)")
+        if self.threads_per_host < 1:
+            raise ValueError("threads_per_host must be >= 1")
+        if self.hosts == 0 and self.threads_per_host != 1:
+            raise ValueError("threads_per_host only applies to fleet runs; "
+                             "set hosts > 0 (or leave threads_per_host at 1)")
+        if self.hosts > 0 and self.cluster.n_nodes != \
+                self.hosts * self.threads_per_host:
+            raise ValueError(
+                f"fleet layout mismatch: cluster.n_nodes="
+                f"{self.cluster.n_nodes} but hosts*threads_per_host="
+                f"{self.hosts * self.threads_per_host} (the pool size and "
+                f"its process layout must agree)")
 
     # -- serialisation ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -341,7 +362,22 @@ ALIASES: dict[str, tuple[Optional[str], Optional[str]]] = {
     "release_policy":          ("release_policy", None),
     "flow_solver":             ("flow_solver", None),
     "speculation_factor":      ("speculation_factor", None),
+    # fleet mode: the runtime-side names resolve against FleetRuntime (the
+    # spec paths in FLEET_PATHS), not DiffusionRuntime -- hosts=0 never
+    # reaches a FleetRuntime, and hosts>0 hard-errors on the simulator.
+    "hosts":                   (None, "hosts"),
+    "threads_per_host":        (None, "threads_per_host"),
 }
+
+#: spec paths whose runtime-side alias is a FleetRuntime ctor kwarg
+FLEET_PATHS = frozenset({"hosts", "threads_per_host"})
+
+#: FleetRuntime ctor kwargs that deliberately have no spec field: the task
+#: callable registry name and transport/liveness tuning are operational
+#: knobs of a concrete deployment, not part of the experiment's identity.
+FLEET_OPERATIONAL_KWARGS = frozenset({
+    "task_fn_name", "codec", "heartbeat_interval_s", "heartbeat_timeout_s",
+    "spawn_timeout_s"})
 
 #: raw engine-side default disagreements the spec layer papers over by
 #: always passing explicit values.  check_alias_map() verifies these are
@@ -369,14 +405,23 @@ def _sim_defaults() -> dict[str, object]:
     return out
 
 
-def _runtime_defaults() -> dict[str, object]:
+def _ctor_defaults(cls) -> dict[str, object]:
     import inspect
 
-    from repro.core.runtime import DiffusionRuntime
-    sig = inspect.signature(DiffusionRuntime.__init__)
+    sig = inspect.signature(cls.__init__)
     return {n: (p.default if p.default is not inspect.Parameter.empty
                 else _MISSING)
             for n, p in sig.parameters.items() if n != "self"}
+
+
+def _runtime_defaults() -> dict[str, object]:
+    from repro.core.runtime import DiffusionRuntime
+    return _ctor_defaults(DiffusionRuntime)
+
+
+def _fleet_defaults() -> dict[str, object]:
+    from repro.fleet.runtime import FleetRuntime
+    return _ctor_defaults(FleetRuntime)
 
 
 _alias_map_checked = False
@@ -389,10 +434,16 @@ def check_alias_map() -> None:
     if _alias_map_checked:
         return
     sim, rt = _sim_defaults(), _runtime_defaults()
+    fleet = _fleet_defaults()
     problems: list[str] = []
     for path, (sim_name, rt_name) in ALIASES.items():
         if sim_name is not None and sim_name not in sim:
             problems.append(f"{path}: SimConfig has no field {sim_name!r}")
+        if path in FLEET_PATHS:
+            if rt_name is not None and rt_name not in fleet:
+                problems.append(f"{path}: FleetRuntime has no kwarg "
+                                f"{rt_name!r}")
+            continue
         if rt_name is not None and rt_name not in rt:
             problems.append(f"{path}: DiffusionRuntime has no kwarg "
                             f"{rt_name!r}")
@@ -427,6 +478,27 @@ def check_alias_map() -> None:
     if missing_rt:
         problems.append(f"DiffusionRuntime kwargs not covered by ALIASES: "
                         f"{sorted(missing_rt)}")
+    # fleet drift: FleetRuntime must accept every DiffusionRuntime knob
+    # (except the executor count it derives from hosts*threads_per_host)
+    # with an IDENTICAL default -- a new runtime knob that never reaches
+    # the fleet ctor, or a silently different fleet default, fails here.
+    for name, r_def in rt.items():
+        if name in ("n_executors", "store"):
+            continue
+        if name not in fleet:
+            problems.append(f"FleetRuntime is missing DiffusionRuntime "
+                            f"kwarg {name!r}")
+        elif fleet[name] != r_def:
+            problems.append(f"FleetRuntime default for {name!r} "
+                            f"({fleet[name]!r}) silently diverges from "
+                            f"DiffusionRuntime's ({r_def!r})")
+    fleet_covered = ({r for p, (_, r) in ALIASES.items()
+                      if p in FLEET_PATHS and r is not None}
+                     | (set(rt) - {"n_executors"}))
+    missing_fleet = set(fleet) - fleet_covered - FLEET_OPERATIONAL_KWARGS
+    if missing_fleet:
+        problems.append(f"FleetRuntime kwargs not covered by ALIASES or "
+                        f"FLEET_OPERATIONAL_KWARGS: {sorted(missing_fleet)}")
     if problems:
         raise RuntimeError(
             "experiment spec layer out of sync with engine signatures:\n  "

@@ -1,0 +1,49 @@
+"""repro.fleet: the multi-process distribution layer over the Channel seams.
+
+`DiffusionRuntime` keeps all scheduling in one process and talks to its
+executors only through two Channels (task dispatch, index updates) --
+`repro.core.channel`.  This package swaps those channels for a
+length-prefixed socket wire protocol (`wire`), runs executors as threads
+inside spawned host processes (`host`, managed by `manager.HostManager`),
+and exposes the result as `FleetRuntime`: same Dispatcher, same policies,
+same byte ledger -- N GILs, real sockets between peer caches.
+
+    rt = FleetRuntime(hosts=4, threads_per_host=2)
+    rt.put_object(obj, payload)            # replicated to every host
+    rt.submit(tasks); rt.wait()            # identical surface
+    rt.manager.kill_host("h0")             # SIGKILL failure injection
+    rt.shutdown()
+
+The experiment layer binds it through ``ExperimentSpec(hosts=...,
+threads_per_host=...)`` on the runtime engine; benchmarks/bench_fleet.py
+measures aggregate cache bandwidth across host counts and holds the
+trace-replay parity canary (fleet == single-process on every
+scheduling-determined RunReport field).
+"""
+from .host import TASK_FNS, register_task_fn, resolve_task_fn
+from .manager import HostHandle, HostManager
+from .runtime import (SCHEDULING_DETERMINED_FIELDS, FleetRuntime, fleet_task,
+                      reports_scheduling_equal)
+from .wire import (HAVE_MSGPACK, MAX_FRAME, PeerGone, SocketChannel,
+                   WireError, decode, encode, recv_msg, send_msg)
+
+__all__ = [
+    "FleetRuntime",
+    "HAVE_MSGPACK",
+    "HostHandle",
+    "HostManager",
+    "MAX_FRAME",
+    "PeerGone",
+    "SCHEDULING_DETERMINED_FIELDS",
+    "SocketChannel",
+    "TASK_FNS",
+    "WireError",
+    "decode",
+    "encode",
+    "fleet_task",
+    "recv_msg",
+    "register_task_fn",
+    "reports_scheduling_equal",
+    "resolve_task_fn",
+    "send_msg",
+]

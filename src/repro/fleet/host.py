@@ -1,0 +1,369 @@
+"""Fleet host process: N executor threads + a peer-fetch server.
+
+One host = one OS process (its own GIL -- the whole point) running:
+
+  * a dispatch loop: framed messages from the central process, in order
+    (``put`` store replicas, ``spawn``/``stop`` executors, ``task``
+    dispatches routed to the executor's local channel, ``shutdown``);
+  * ``threads_per_host`` executor threads, each an exact structural twin
+    of `repro.core.runtime.ExecutorWorker`: ExecutorCache + payload dict +
+    dispatch Channel, resolving inputs local-cache -> hinted peers (in hint
+    order; peers on this host are an in-process peek, peers on other hosts
+    a socket fetch) -> store replica, then running the task fn and caching
+    outputs.  Index updates stream upstream *before* the attempt's ``done``
+    (the Channel seam ordering contract);
+  * a peer server: other hosts fetch cached payloads from a specific
+    executor here (the paper's GridFTP-analogue cache-to-cache path);
+  * a heartbeat thread.
+
+The host holds NO scheduling state: placement, hints, retries, membership
+and all metrics stay in the central Dispatcher/LocationIndex stack.  Task
+callables cannot cross the wire; hosts resolve ``task_fn_name`` against the
+:data:`TASK_FNS` registry at startup (shape-only tasks need none).
+
+The store "replica" stands in for the paper's shared filesystem (GPFS):
+equally reachable from every node, so each host holds a local copy seeded
+by ``put`` broadcasts and store reads never touch the central process.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Any, Callable, Optional
+
+from repro.core.cache import EvictionPolicy
+from repro.core.channel import ChannelClosed
+from repro.core.objects import DataObject
+from repro.core.runtime import CacheExecutorBase, _wants_kwargs
+
+from .wire import SocketChannel, recv_msg, send_msg
+
+#: named task callables a host may run (callables don't serialise; a fleet
+#: run names one and every host resolves it here).  Keyed registration so
+#: tests and benchmarks can install fns before spawning hosts -- the
+#: registry is module-level, so under the "spawn" start method the child
+#: re-imports this module and the fn must be registered at import time of
+#: whatever module ``register_task_fn`` was called from... which a fresh
+#: interpreter will NOT replay.  Hosts therefore resolve names via
+#: :func:`resolve_task_fn`, which also accepts dotted ``module:attr`` paths
+#: importable in the child.
+TASK_FNS: dict[str, Callable[..., Any]] = {}
+
+
+def register_task_fn(name: str, fn: Callable[..., Any]) -> None:
+    TASK_FNS[name] = fn
+
+
+def resolve_task_fn(name: Optional[str]) -> Optional[Callable[..., Any]]:
+    """None -> shape-only; registry name -> that fn; ``module:attr`` ->
+    imported (works across process boundaries, unlike the registry)."""
+    if name is None:
+        return None
+    if name in TASK_FNS:
+        return TASK_FNS[name]
+    if ":" in name:
+        import importlib
+
+        mod, _, attr = name.partition(":")
+        fn = getattr(importlib.import_module(mod), attr)
+        register_task_fn(name, fn)
+        return fn
+    raise KeyError(f"task fn {name!r} not registered on this host "
+                   f"(register_task_fn at import time, or use module:attr)")
+
+
+# --------------------------------------------------------------------------
+# peer fetch (host <-> host data plane)
+# --------------------------------------------------------------------------
+
+class PeerClient:
+    """Pooled framed connections to other hosts' peer servers."""
+
+    def __init__(self, codec: str) -> None:
+        self.codec = codec
+        self._conns: dict[tuple[str, int], tuple[socket.socket, threading.Lock]] = {}
+        self._lock = threading.Lock()
+        self.bytes_fetched = 0
+
+    def _conn(self, addr: tuple[str, int]) -> tuple[socket.socket, threading.Lock]:
+        with self._lock:
+            ent = self._conns.get(addr)
+            if ent is None:
+                s = socket.create_connection(addr, timeout=10.0)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                ent = (s, threading.Lock())
+                self._conns[addr] = ent
+            return ent
+
+    def fetch(self, addr: tuple[str, int], eid: str, oid: str) -> Optional[Any]:
+        """One fetch round-trip; any failure is a miss (hint staleness and
+        dead peers cost performance, never correctness)."""
+        try:
+            sock, lock = self._conn(addr)
+            with lock:
+                send_msg(sock, {"t": "fetch", "eid": eid, "oid": oid},
+                         self.codec)
+                resp = recv_msg(sock, self.codec, timeout=30.0)
+        except Exception:  # noqa: BLE001 - degrade to a store read
+            with self._lock:
+                ent = self._conns.pop(addr, None)
+            if ent is not None:   # close, don't leak, the broken socket
+                try:
+                    ent[0].close()
+                except OSError:
+                    pass
+            return None
+        if not resp.get("ok"):
+            return None
+        return resp["payload"]
+
+    def close(self) -> None:
+        with self._lock:
+            for s, _ in self._conns.values():
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            self._conns.clear()
+
+
+class PeerServer(threading.Thread):
+    """Serves this host's executor caches to other hosts."""
+
+    def __init__(self, host: "FleetHost", codec: str) -> None:
+        super().__init__(daemon=True, name="peer-server")
+        self.host = host
+        self.codec = codec
+        self.sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(16)
+        self.port = self.sock.getsockname()[1]
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve, args=(conn,), daemon=True,
+                             name="peer-conn").start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                req = recv_msg(conn, self.codec)
+                ex = self.host.executors.get(req["eid"])
+                payload = ex.cache_peek(req["oid"]) if ex is not None else None
+                send_msg(conn, {"ok": payload is not None,
+                                "payload": payload}, self.codec)
+        except Exception:  # noqa: BLE001 - client went away
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# --------------------------------------------------------------------------
+# executor threads (structural twins of ExecutorWorker)
+# --------------------------------------------------------------------------
+
+class HostExecutor(CacheExecutorBase):
+    """One executor thread on a host: the shared cache/inbox surface from
+    `repro.core.runtime.CacheExecutorBase` (one implementation, so host
+    and in-process cache semantics cannot drift apart) plus the host-side
+    execute/resolve loop."""
+
+    def __init__(self, eid: str, host: "FleetHost", cache_capacity: int,
+                 policy: EvictionPolicy, seed: int) -> None:
+        super().__init__(eid, cache_capacity, policy, seed)
+        self.host = host
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name=f"executor-{eid}")
+
+    def start(self) -> None:
+        self.thread.start()
+
+    # -- task loop ----------------------------------------------------------
+    def _run(self) -> None:
+        while self.alive:
+            try:
+                msg = self.inbox.recv()
+            except ChannelClosed:
+                return
+            self._execute(msg)
+
+    def _admit(self, obj: DataObject, payload: Any) -> None:
+        added, removed = self.cache_admit(obj, payload)
+        self.host.send_update(self.eid, added, removed)
+
+    def _resolve(self, oid: str, size: int, hints: dict[str, list],
+                 routes: dict[str, list], led: dict[str, int]) -> Any:
+        """Mirror of DiffusionRuntime._resolve: local cache -> hinted peers
+        in hint order (local peek for same-host executors, socket fetch for
+        remote ones) -> store replica.  Accounting fields match
+        core.runtime._InputLedger one-for-one."""
+        payload = self.cache_lookup(oid)
+        if payload is not None:
+            led["cache_hits"] += 1
+            led["bytes_local"] += size
+            return payload
+        led["cache_misses"] += 1
+        for peer_id in hints.get(oid, ()):
+            if peer_id == self.eid:
+                continue
+            local = self.host.executors.get(peer_id)
+            if local is not None:
+                payload = local.cache_peek(oid)
+            elif peer_id in routes:
+                h, p = routes[peer_id]
+                payload = self.host.peers.fetch((h, int(p)), peer_id, oid)
+            else:
+                continue
+            if payload is not None:
+                led["peer_hits"] += 1
+                led["bytes_cache_to_cache"] += size
+                self._admit(DataObject(oid, size), payload)
+                return payload
+        ent = self.host.store.get(oid)
+        if ent is None:
+            raise KeyError(oid)   # matches the central store's KeyError
+        obj, payload = ent
+        led["bytes_store"] += obj.size_bytes
+        self._admit(obj, payload)
+        return payload
+
+    def _execute(self, msg: dict) -> None:
+        led = {"bytes_local": 0, "bytes_cache_to_cache": 0, "bytes_store": 0,
+               "cache_hits": 0, "peer_hits": 0, "cache_misses": 0}
+        hints = msg.get("hints") or {}
+        routes = msg.get("routes") or {}
+        ok, err, result = True, None, None
+        try:
+            inputs = {oid: self._resolve(oid, size, hints, routes, led)
+                      for oid, size in msg["inputs"]}
+            fn = self.host.task_fn
+            if fn is not None:
+                result = fn(**inputs) if _wants_kwargs(fn) else fn(inputs)
+            for oid, osize in msg["outputs"]:
+                payload = result if len(msg["outputs"]) == 1 else result[oid]
+                self._admit(DataObject(oid, int(osize)), payload)
+        except Exception as e:  # noqa: BLE001 - task failure is data
+            ok, err = False, f"{type(e).__name__}: {e}"
+        self.host.send_done(self.eid, msg["tid"], ok, led, err)
+
+
+# --------------------------------------------------------------------------
+# the host process
+# --------------------------------------------------------------------------
+
+class FleetHost:
+    def __init__(self, central: tuple[str, int], host_id: str, codec: str,
+                 task_fn_name: Optional[str], hb_interval_s: float) -> None:
+        self.host_id = host_id
+        self.codec = codec
+        self.task_fn = resolve_task_fn(task_fn_name)
+        self.hb_interval_s = hb_interval_s
+        self.store: dict[str, tuple[DataObject, Any]] = {}
+        self.executors: dict[str, HostExecutor] = {}
+        self.peers = PeerClient(codec)
+        self.peer_server = PeerServer(self, codec)
+        sock = socket.create_connection(central, timeout=30.0)
+        # drop the connect timeout: it would otherwise persist on the
+        # socket and turn any 30s dispatch lull into a phantom
+        # central-death (blocking recv is the correct idle behaviour here)
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.up = SocketChannel(sock, codec)   # both directions of the pair
+        self._stop = threading.Event()
+
+    # -- upstream (the update channel of the pair) --------------------------
+    def send_update(self, eid: str, added, removed) -> None:
+        try:
+            self.up.send({"t": "updates", "eid": eid,
+                          "added": list(added), "removed": list(removed)})
+        except ChannelClosed:
+            self._stop.set()
+
+    def send_done(self, eid: str, tid: str, ok: bool, led: dict,
+                  err: Optional[str]) -> None:
+        try:
+            self.up.send({"t": "done", "eid": eid, "tid": tid, "ok": ok,
+                          "ledger": led, "error": err})
+        except ChannelClosed:
+            self._stop.set()
+
+    def _heartbeat(self) -> None:
+        while not self._stop.wait(self.hb_interval_s):
+            try:
+                self.up.send({"t": "hb", "host_id": self.host_id})
+            except ChannelClosed:
+                return
+
+    # -- dispatch loop ------------------------------------------------------
+    def run(self) -> None:
+        import os
+
+        self.peer_server.start()
+        self.up.send({"t": "hello", "host_id": self.host_id,
+                      "pid": os.getpid(),
+                      "peer_port": self.peer_server.port})
+        threading.Thread(target=self._heartbeat, daemon=True,
+                         name="heartbeat").start()
+        try:
+            while not self._stop.is_set():
+                try:
+                    msg = self.up.recv()
+                except ChannelClosed:
+                    break   # central went away: the fleet is over
+                if not self._handle(msg):
+                    break
+        finally:
+            self._stop.set()
+            for ex in self.executors.values():
+                ex.stop()
+            self.peer_server.stop()
+            self.peers.close()
+            self.up.close()
+
+    def _handle(self, msg: dict) -> bool:
+        kind = msg["t"]
+        if kind == "task":
+            ex = self.executors.get(msg["eid"])
+            if ex is not None:
+                try:
+                    ex.inbox.send(msg)
+                except ChannelClosed:
+                    pass
+        elif kind == "put":
+            obj = DataObject(msg["oid"], int(msg["size"]))
+            self.store[obj.oid] = (obj, msg["payload"])
+        elif kind == "spawn":
+            ex = HostExecutor(msg["eid"], self, int(msg["cap"]),
+                              EvictionPolicy(msg["policy"]), int(msg["seed"]))
+            self.executors[msg["eid"]] = ex
+            ex.start()
+        elif kind == "stop":
+            ex = self.executors.pop(msg["eid"], None)
+            if ex is not None:
+                ex.stop()
+        elif kind == "shutdown":
+            return False
+        return True
+
+
+def host_main(central_host: str, central_port: int, host_id: str,
+              codec: str, task_fn_name: Optional[str],
+              hb_interval_s: float) -> None:
+    """Entry point for the spawned host process (see manager.py)."""
+    FleetHost((central_host, central_port), host_id, codec,
+              task_fn_name, hb_interval_s).run()

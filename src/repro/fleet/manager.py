@@ -1,0 +1,235 @@
+"""HostManager: spawn / monitor / reap fleet host processes.
+
+The central process owns a listening socket; each spawned host (a
+``multiprocessing`` *spawn*-context process -- fork would duplicate the
+central's live threads and locks) connects back, sends ``hello`` with its
+peer-server port, and from then on the connection carries the fleet's
+channel pair: central->host is the dispatch channel, host->central the
+update channel (see wire.SocketChannel).
+
+Liveness: one receiver thread per host drains the update channel (updates,
+completions, heartbeats); a SIGKILLed host's socket EOFs, which the
+receiver turns into ``runtime._on_host_dead`` immediately.  A monitor
+thread additionally sweeps for stale heartbeats and dead PIDs (a wedged
+host whose socket stays open).  Both paths are idempotent -- the runtime
+marks the handle dead under its own lock before requeueing, so the
+receiver/monitor race resolves to exactly one ``executor_left`` pass.
+
+Lock order: runtime._lock may be held when manager state is read
+(`live_handles` inside the DRP driver's snapshot), so the manager NEVER
+calls back into the runtime while holding its own lock.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import signal
+import socket
+import threading
+import time
+from typing import Any, Optional
+
+from .host import host_main
+from .wire import SocketChannel, _resolve_codec, recv_msg
+
+
+class HostHandle:
+    """Central-side view of one host process."""
+
+    def __init__(self, host_id: str, proc, chan: SocketChannel,
+                 peer_host: str, peer_port: int) -> None:
+        self.host_id = host_id
+        self.proc = proc
+        self.chan = chan
+        self.peer_host = peer_host
+        self.peer_port = peer_port
+        self.eids: list[str] = []        # executors spawned on this host
+        self.last_hb = time.monotonic()
+        self.dead = False                # set under runtime._lock
+
+    def send(self, msg: Any) -> None:
+        """Dispatch-channel send; a broken pipe is not an error here -- the
+        receiver thread will surface the death through _on_host_dead."""
+        from repro.core.channel import ChannelClosed
+
+        try:
+            self.chan.send(msg)
+        except ChannelClosed:
+            pass
+
+
+class HostManager:
+    def __init__(self, rt, *, codec: str = "auto",
+                 task_fn_name: Optional[str] = None,
+                 hb_interval_s: float = 0.25,
+                 hb_timeout_s: float = 3.0,
+                 spawn_timeout_s: float = 60.0) -> None:
+        self.rt = rt
+        self.codec = _resolve_codec(codec)
+        self.task_fn_name = task_fn_name
+        self.hb_interval_s = hb_interval_s
+        self.hb_timeout_s = hb_timeout_s
+        self.spawn_timeout_s = spawn_timeout_s
+        self._ctx = multiprocessing.get_context("spawn")
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self.handles: dict[str, HostHandle] = {}
+        self._pending: dict[str, dict] = {}   # host_id -> handshake slot
+        self._next_host = 0
+        self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.listener.bind(("127.0.0.1", 0))
+        self.listener.listen(64)
+        self.addr = self.listener.getsockname()
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name="fleet-accept").start()
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         daemon=True, name="fleet-monitor")
+        self._monitor.start()
+
+    # ------------------------------------------------------------------
+    def spawn_host(self) -> HostHandle:
+        """Start one host process; blocks until its hello arrives."""
+        if self._stop.is_set():
+            raise RuntimeError("HostManager is shut down")
+        with self._lock:
+            host_id = f"h{self._next_host}"
+            self._next_host += 1
+            slot = {"event": threading.Event(), "sock": None, "hello": None}
+            self._pending[host_id] = slot
+        proc = self._ctx.Process(
+            target=host_main,
+            args=(self.addr[0], self.addr[1], host_id, self.codec,
+                  self.task_fn_name, self.hb_interval_s),
+            daemon=True, name=f"fleet-{host_id}")
+        proc.start()
+        if not slot["event"].wait(self.spawn_timeout_s):
+            with self._lock:
+                self._pending.pop(host_id, None)
+            proc.terminate()
+            raise RuntimeError(f"host {host_id} did not connect within "
+                               f"{self.spawn_timeout_s}s")
+        hello = slot["hello"]
+        handle = HostHandle(host_id, proc,
+                            SocketChannel(slot["sock"], self.codec),
+                            peer_host="127.0.0.1",
+                            peer_port=int(hello["peer_port"]))
+        with self._lock:
+            self.handles[host_id] = handle
+        threading.Thread(target=self._receive, args=(handle,), daemon=True,
+                         name=f"fleet-recv-{host_id}").start()
+        return handle
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self.listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._handshake, args=(conn,),
+                             daemon=True, name="fleet-handshake").start()
+
+    def _handshake(self, conn: socket.socket) -> None:
+        try:
+            hello = recv_msg(conn, self.codec, timeout=self.spawn_timeout_s)
+            conn.settimeout(None)
+            if hello.get("t") != "hello":
+                raise ValueError(f"expected hello, got {hello!r}")
+            with self._lock:
+                slot = self._pending.pop(hello["host_id"], None)
+        except Exception:  # noqa: BLE001 - stray/late connection
+            conn.close()
+            return
+        if slot is None:   # unknown host id: refuse
+            conn.close()
+            return
+        slot["sock"], slot["hello"] = conn, hello
+        slot["event"].set()
+
+    # ------------------------------------------------------------------
+    def _receive(self, handle: HostHandle) -> None:
+        """Per-host update-channel consumer (the recv side of the pair).
+        Processes messages in wire order, which is what guarantees a
+        task's index updates are applied before its completion."""
+        from repro.core.channel import ChannelClosed
+
+        while True:
+            try:
+                msg = handle.chan.recv()
+            except ChannelClosed:
+                if not self._stop.is_set():
+                    self.rt._on_host_dead(handle)
+                return
+            kind = msg["t"]
+            if kind == "hb":
+                handle.last_hb = time.monotonic()
+            elif kind == "updates":
+                handle.last_hb = time.monotonic()
+                self.rt._on_remote_updates(handle, msg)
+            elif kind == "done":
+                handle.last_hb = time.monotonic()
+                self.rt._on_remote_done(handle, msg)
+
+    def _monitor_loop(self) -> None:
+        period = max(self.hb_interval_s / 2, 0.05)
+        while not self._stop.wait(period):
+            now = time.monotonic()
+            for handle in self.live_handles():
+                if (not handle.proc.is_alive()
+                        or now - handle.last_hb > self.hb_timeout_s):
+                    self.rt._on_host_dead(handle)
+
+    # ------------------------------------------------------------------
+    def live_handles(self) -> list[HostHandle]:
+        with self._lock:
+            return [h for h in self.handles.values() if not h.dead]
+
+    def broadcast(self, msg: Any) -> None:
+        for h in self.live_handles():
+            h.send(msg)
+
+    def kill_host(self, host_id: str) -> int:
+        """SIGKILL a host process (failure-injection surface for tests /
+        benchmarks).  Returns the killed pid."""
+        with self._lock:
+            handle = self.handles[host_id]
+        pid = handle.proc.pid
+        os.kill(pid, signal.SIGKILL)
+        return pid
+
+    def reap(self, handle: HostHandle, graceful: bool = False) -> None:
+        """Tear one host down.  Callers mark ``handle.dead`` (under the
+        runtime lock) first; this only releases OS resources."""
+        if graceful:
+            handle.send({"t": "shutdown"})
+        handle.chan.close()
+        if handle.proc.is_alive():
+            handle.proc.join(2.0 if graceful else 0.5)
+            if handle.proc.is_alive():
+                handle.proc.terminate()
+                handle.proc.join(1.0)
+        with self._lock:
+            self.handles.pop(handle.host_id, None)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        try:
+            self.listener.close()
+        except OSError:
+            pass
+        for handle in self.live_handles():
+            # the dead flag's one-flip invariant lives under the RUNTIME
+            # lock (see _on_host_dead): flipping it unlocked here would
+            # let a mid-sweep monitor run a full requeue pass against the
+            # tearing-down fleet
+            with self.rt._lock:
+                if handle.dead:
+                    continue
+                handle.dead = True
+            self.reap(handle, graceful=True)
+        # anything already marked dead but not yet reaped
+        with self._lock:
+            leftovers = list(self.handles.values())
+        for handle in leftovers:
+            self.reap(handle)

@@ -1,0 +1,340 @@
+"""FleetRuntime: the threaded diffusion runtime across OS processes.
+
+Same authoritative scheduling stack as `DiffusionRuntime` -- ONE
+`Dispatcher`/`LocationIndex`/policy instance, in this process -- but the
+executors live in ``hosts`` separate host processes of
+``threads_per_host`` executor threads each (repro.fleet.host), talking
+through the two Channel seams:
+
+  dispatch   `_RemoteExecutor.dispatch` serialises each `Dispatch` (task
+             shape + input sizes + location hints + peer routes) onto the
+             host's socket instead of a thread inbox;
+  updates    hosts stream `IndexUpdate`s and attempt completions back; the
+             per-host receiver applies them through the SAME `_on_update` /
+             `_finish_attempt` code paths the in-process workers use, so
+             membership guards, retry accounting and the byte ledger are
+             one implementation.
+
+Because placement, hints, retries and accounting never leave this process,
+the scheduling behaviour is identical to single-process mode by
+construction; `benchmarks/bench_fleet.py` verifies it by replaying a
+recorded trace batch-synchronously on both and comparing RunReports
+field-for-field on the scheduling-determined numbers.
+
+Failure semantics: a host that SIGKILLs/EOFs/stops heartbeating is
+declared dead once; every executor on it goes through the PR 2
+``executor_left`` path (in-flight tasks re-queued front-of-line, attempts
+bumped, terminally-failed ones accounted so ``wait()`` cannot leak), and
+its cached bytes vanish from the index, exactly like a failed thread
+worker -- the rest of the fleet re-fetches from peers or the store.
+
+Provisioning is whole-host: the DRP's executor-unit requests are rounded
+to ``threads_per_host`` quanta (`DynamicResourceProvisioner.
+allocate_quantum`), ``provision_grow`` spawns hosts, and only hosts whose
+executors are ALL idle are offered for release.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Iterable, Optional
+
+from repro.core.cache import EvictionPolicy
+from repro.core.objects import DataObject
+from repro.core.policies import DispatchPolicy
+from repro.core.runtime import DiffusionRuntime, ObjectStore, _InputLedger
+from repro.core.scheduler import Dispatch
+
+from .manager import HostHandle, HostManager
+
+
+class _RemoteExecutor:
+    """Central-side proxy for one executor thread on a host.  Lives in
+    ``runtime.workers`` exactly where an `ExecutorWorker` would, so every
+    inherited code path (pump, membership guard, removal) works unchanged
+    -- identity of this object IS the attempt-validity token."""
+
+    __slots__ = ("eid", "host", "rt")
+
+    def __init__(self, eid: str, host: HostHandle, rt: "FleetRuntime") -> None:
+        self.eid = eid
+        self.host = host
+        self.rt = rt
+
+    def dispatch(self, disp: Dispatch) -> None:
+        t = disp.task
+        routes: dict[str, list] = {}
+        for locs in disp.hints.values():
+            for peer in locs:
+                if peer in routes:
+                    continue
+                w = self.rt.workers.get(peer)
+                if isinstance(w, _RemoteExecutor) and w.host is not self.host:
+                    routes[peer] = [w.host.peer_host, w.host.peer_port]
+        sizes = self.rt.dispatcher.sizes
+        self.host.send({
+            "t": "task",
+            "eid": self.eid,
+            "tid": t.tid,
+            "inputs": [[oid, sizes.get(oid, 0)] for oid in t.inputs],
+            "outputs": [[ob.oid, ob.size_bytes] for ob in t.outputs],
+            "hints": {oid: list(locs) for oid, locs in disp.hints.items()},
+            "routes": routes,
+        })
+
+    def stop(self) -> None:
+        """Nothing to join centrally; host teardown stops the thread."""
+
+
+class FleetRuntime(DiffusionRuntime):
+    def __init__(
+        self,
+        hosts: int,
+        threads_per_host: int = 1,
+        policy: DispatchPolicy = DispatchPolicy.MAX_COMPUTE_UTIL,
+        cache_policy: EvictionPolicy = EvictionPolicy.LRU,
+        cache_capacity_bytes: int = 1 << 30,
+        store: Optional[ObjectStore] = None,
+        seed: int = 0,
+        index_update_batch: int = 1,
+        task_fn_name: Optional[str] = None,
+        codec: str = "auto",
+        heartbeat_interval_s: float = 0.25,
+        heartbeat_timeout_s: float = 3.0,
+        spawn_timeout_s: float = 60.0,
+    ) -> None:
+        if hosts < 1:
+            raise ValueError("need hosts >= 1")
+        if threads_per_host < 1:
+            raise ValueError("need threads_per_host >= 1")
+        self.threads_per_host = threads_per_host
+        super().__init__(n_executors=0, policy=policy,
+                         cache_policy=cache_policy,
+                         cache_capacity_bytes=cache_capacity_bytes,
+                         store=store, seed=seed,
+                         index_update_batch=index_update_batch)
+        self.manager = HostManager(
+            self, codec=codec, task_fn_name=task_fn_name,
+            hb_interval_s=heartbeat_interval_s,
+            hb_timeout_s=heartbeat_timeout_s,
+            spawn_timeout_s=spawn_timeout_s)
+        try:
+            for _ in range(hosts):
+                self.add_host()
+        except Exception:
+            self.manager.shutdown()
+            raise
+        # collapse the construction ramp into one t=0 sample, like the
+        # in-process ctor (RunReport pool integrals start at full strength)
+        self.pool_log = [(0.0, len(self.workers))]
+
+    # -- membership (whole hosts) ------------------------------------------
+    def add_host(self) -> str:
+        """Spawn one host process, replicate the store to it, register its
+        ``threads_per_host`` executors.  Spawn messages go on the wire
+        BEFORE the dispatcher learns each eid, so a racing pump can never
+        dispatch to an executor the host hasn't spawned yet (per-host
+        streams are ordered)."""
+        handle = self.manager.spawn_host()
+        for obj, payload in self.store.items():
+            handle.send({"t": "put", "oid": obj.oid, "size": obj.size_bytes,
+                         "payload": payload})
+        for _ in range(self.threads_per_host):
+            with self._lock:
+                wid = self._next_worker_id
+                self._next_worker_id += 1
+            eid = f"w{wid}"
+            handle.send({"t": "spawn", "eid": eid,
+                         "cap": self._cache_capacity(),
+                         "policy": self._cache_policy().value,
+                         "seed": self._seed + wid})
+            with self._lock:
+                self.workers[eid] = _RemoteExecutor(eid, handle, self)
+                handle.eids.append(eid)
+                self.dispatcher.executor_joined(eid, time.monotonic())
+                self.pool_log.append((time.monotonic() - self._t0,
+                                      len(self.workers)))
+        self._pump()
+        return handle.host_id
+
+    def remove_host(self, host_id: str) -> None:
+        """Graceful release (DRP shrink): deregister every executor, then
+        shut the process down.  In-flight work (there should be none for a
+        released-idle host, but the path is shared with tests) re-queues
+        through executor_left like any removal."""
+        with self._lock:
+            handle = self.manager.handles.get(host_id)
+            if handle is None or handle.dead:
+                return
+            handle.dead = True
+            self._drop_host_locked(handle, failed=False)
+        self.manager.reap(handle, graceful=True)
+        self._pump()
+
+    def _drop_host_locked(self, handle: HostHandle, failed: bool) -> None:
+        for eid in handle.eids:
+            if self.workers.pop(eid, None) is None:
+                continue
+            self.pool_log.append((time.monotonic() - self._t0,
+                                  len(self.workers)))
+            self._deregister_locked(eid, failed)
+
+    def _on_host_dead(self, handle: HostHandle) -> None:
+        """Receiver-EOF / monitor callback: requeue the dead host's
+        in-flight tasks and drop its index entries.  Idempotent -- the
+        ``dead`` flag flips under the runtime lock exactly once."""
+        with self._lock:
+            if handle.dead:
+                return
+            handle.dead = True
+            self._drop_host_locked(handle, failed=True)
+        self.manager.reap(handle)
+        self._pump()
+
+    def add_executor(self) -> str:
+        raise RuntimeError("a fleet grows by whole hosts; use add_host()")
+
+    def remove_executor(self, eid: str, failed: bool = False) -> None:
+        raise RuntimeError("a fleet shrinks by whole hosts; use "
+                           "remove_host() or manager.kill_host()")
+
+    def configure_caches(self, capacity_bytes: int,
+                         policy: EvictionPolicy) -> None:
+        raise RuntimeError("fleet executor caches are fixed at host spawn")
+
+    # -- provisioning hooks (whole-host granularity) ------------------------
+    def provision_grow(self, n: int) -> None:
+        for _ in range(n // self.threads_per_host):
+            self.add_host()
+
+    def provision_release(self, eids: Iterable[str]) -> None:
+        by_host: dict[str, set[str]] = {}
+        for eid in eids:
+            w = self.workers.get(eid)
+            if isinstance(w, _RemoteExecutor):
+                by_host.setdefault(w.host.host_id, set()).add(eid)
+        for host_id, group in by_host.items():
+            handle = self.manager.handles.get(host_id)
+            if handle is not None and set(handle.eids) <= group:
+                self.remove_host(host_id)
+
+    def provision_idle(self, now: float, idle_for_s: float) -> list[str]:
+        """Only whole-idle hosts are offered (grouped host-by-host, so a
+        quantum-truncated prefix still maps to whole hosts)."""
+        idle = set(self.dispatcher.idle_executors(now, idle_for_s))
+        out: list[str] = []
+        for handle in self.manager.live_handles():
+            if handle.eids and set(handle.eids) <= idle:
+                out.extend(handle.eids)
+        return out
+
+    # -- data ---------------------------------------------------------------
+    def put_object(self, obj: DataObject, payload: Any) -> None:
+        super().put_object(obj, payload)
+        self.manager.broadcast({"t": "put", "oid": obj.oid,
+                                "size": obj.size_bytes, "payload": payload})
+
+    # -- update-channel consumers (called by the per-host receivers) --------
+    def _on_remote_updates(self, handle: HostHandle, msg: dict) -> None:
+        from repro.core.index import IndexUpdate
+
+        w = self.workers.get(msg["eid"])
+        if not isinstance(w, _RemoteExecutor) or w.host is not handle:
+            # the host was declared dead (or the executor deregistered)
+            # while frames were still in flight: its index entries were
+            # dropped with it, and a late update must not resurrect
+            # locations for an executor that can never rejoin
+            return
+        self._emit(IndexUpdate(msg["eid"], added=tuple(msg["added"]),
+                               removed=tuple(msg["removed"])))
+
+    def _on_remote_done(self, handle: HostHandle, msg: dict) -> None:
+        t = self.dispatcher.tasks.get(msg["tid"])
+        w = self.workers.get(msg["eid"])
+        if t is None or w is None:
+            return   # executor already deregistered; executor_left ruled
+        led = msg["ledger"]
+        acc = _InputLedger(
+            bytes_local=led["bytes_local"],
+            bytes_cache_to_cache=led["bytes_cache_to_cache"],
+            bytes_store=led["bytes_store"],
+            cache_hits=led["cache_hits"],
+            peer_hits=led["peer_hits"],
+            cache_misses=led["cache_misses"])
+        if not msg["ok"]:
+            t.result = RuntimeError(msg.get("error") or "remote failure")
+        if t.start_time == 0.0:
+            # results/payloads stay host-side; the central clock brackets
+            # the attempt at dispatch..completion for the report's makespan
+            t.start_time = t.dispatch_time
+        self._finish_attempt(w, t, acc, msg["ok"])
+        self._pump()
+
+    # -- lifecycle ----------------------------------------------------------
+    def shutdown(self) -> None:
+        self._stop_pacing.set()
+        self.manager.shutdown()
+
+
+#: single-process vs fleet: the RunReport fields that must agree exactly
+#: when the same trace is replayed batch-synchronously on both (wall-clock
+#: fields are excluded by construction; identity fields by definition).
+SCHEDULING_DETERMINED_FIELDS = (
+    "n_tasks", "n_completed", "n_failed",
+    "local_hits", "peer_hits", "store_reads",
+    "local_hit_ratio", "cache_hit_ratio",
+    "mean_inputs_per_task", "full_hit_tasks", "partial_hit_tasks",
+    "zero_hit_tasks", "bytes_by_kind",
+    "peak_executors", "low_executors",
+)
+
+
+def reports_scheduling_equal(a, b) -> dict:
+    """Diff two RunReports on the scheduling-determined fields only;
+    empty dict == exact agreement (the fleet parity contract)."""
+    out = {}
+    for f in SCHEDULING_DETERMINED_FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        if va != vb:
+            out[f] = (va, vb)
+    return out
+
+
+def fleet_task(payloads: dict) -> int:
+    """A tiny, importable default task fn (``repro.fleet.runtime:
+    fleet_task``): touches every payload byte-lengthwise so payload-bearing
+    runs do real (GIL-releasing where numpy) work on the host."""
+    total = 0
+    for v in payloads.values():
+        total += getattr(v, "nbytes", None) or (len(v) if hasattr(v, "__len__") else 0)
+    return total
+
+
+def slow_task(payloads: dict) -> int:
+    """`fleet_task` plus a few ms of dwell -- keeps attempts in flight long
+    enough for failure-injection tests to catch them mid-execution."""
+    import time as _time
+
+    _time.sleep(0.005)
+    return fleet_task(payloads)
+
+
+#: simulated per-node local-I/O bandwidth for `io_dwell_task` (bytes/s);
+#: the paper testbed's single-node disk read rate, halved -- a slower
+#: simulated disk makes bench runs sleep-dominated, so the measured
+#: scaling curve survives this container's CPU-share throttling.
+BENCH_DISK_BW = 16 * 10**6
+
+
+def io_dwell_task(payloads: dict) -> int:
+    """Service time = input bytes / BENCH_DISK_BW, slept on the executor
+    thread.  This reproduces the paper's execution model -- a task's cost
+    is dominated by its node-local I/O -- so a bench's aggregate delivered
+    bandwidth is bounded by how many *nodes* serve concurrently (the claim
+    under test), not by this container's core count; what the fleet layer
+    adds or loses on top (dispatch RPCs, wire codec, peer sockets) is
+    exactly the overhead the wall clock then exposes."""
+    import time as _time
+
+    n = fleet_task(payloads)
+    _time.sleep(n / BENCH_DISK_BW)
+    return n

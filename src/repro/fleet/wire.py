@@ -1,0 +1,239 @@
+"""Fleet wire protocol: length-prefixed frames of msgpack-or-JSON messages.
+
+Framing
+-------
+Every message is one frame: a 4-byte big-endian unsigned length followed by
+that many payload bytes.  Frames on one TCP stream are totally ordered,
+which the fleet relies on (a host sends a task's index updates *before* its
+completion; the central receiver applies them in arrival order -- the
+Channel seam contract, DESIGN.md §8).
+
+Codec
+-----
+Messages are plain dict/list/str/int/float/bool/None trees plus three
+payload-bearing leaf types that need tagging:
+
+  numpy arrays   {"__wire__": "ndarray", dtype, shape, data: <bytes>}
+                 (C-contiguous copy; round-trips dtype and shape exactly)
+  bytes          native in msgpack; {"__wire__": "bytes", b64} under JSON
+  SHAPE_ONLY_PAYLOAD
+                 {"__wire__": "shape_only"} -- the runtime's shape-only
+                 store sentinel (PR 4): it must cross the wire as itself,
+                 NOT as None, because a None payload reads as a cache miss.
+
+Tuples are encoded as lists (consumers re-tuple where the runtime cares).
+``msgpack`` is used when importable, JSON (with base64 bytes) otherwise;
+the tests exercise both by forcing ``codec="json"``.  Both ends of a
+connection must agree, so the codec is fixed per fleet: the central
+process picks it and passes it to every host at spawn time.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import socket
+import struct
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.runtime import SHAPE_ONLY_PAYLOAD
+
+try:  # the container has msgpack; JSON is the no-dependency fallback
+    import msgpack  # type: ignore
+    HAVE_MSGPACK = True
+except ImportError:  # pragma: no cover - exercised by forcing codec="json"
+    msgpack = None
+    HAVE_MSGPACK = False
+
+#: frames larger than this are a protocol error, not a payload (guards a
+#: desynchronised stream from allocating garbage-length buffers)
+MAX_FRAME = 1 << 30
+
+_TAG = "__wire__"
+
+
+class WireError(Exception):
+    """Framing/codec violation (desync, oversized frame, unknown tag)."""
+
+
+class PeerGone(Exception):
+    """The other end of the stream closed (EOF mid-frame or on a read)."""
+
+
+# --------------------------------------------------------------------------
+# structure transform: tag payload leaves the codecs can't carry natively
+# --------------------------------------------------------------------------
+
+def _pack(obj: Any, *, binary: bool) -> Any:
+    if obj is SHAPE_ONLY_PAYLOAD:
+        return {_TAG: "shape_only"}
+    if isinstance(obj, np.ndarray):
+        return {_TAG: "ndarray", "dtype": obj.dtype.str,
+                "shape": list(obj.shape),
+                "data": _pack(np.ascontiguousarray(obj).tobytes(),
+                              binary=binary)}
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        b = bytes(obj)
+        if binary:
+            return b
+        return {_TAG: "bytes", "b64": base64.b64encode(b).decode("ascii")}
+    if isinstance(obj, (list, tuple)):
+        return [_pack(v, binary=binary) for v in obj]
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise WireError(f"wire dict keys must be str, got {k!r}")
+            if k == _TAG:
+                raise WireError(f"reserved key {_TAG!r} in message")
+            out[k] = _pack(v, binary=binary)
+        return out
+    if obj is None or isinstance(obj, (str, int, float, bool)):
+        return obj
+    raise WireError(f"unserialisable wire value of type {type(obj).__name__}")
+
+
+def _unpack(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        tag = obj.get(_TAG)
+        if tag == "shape_only":
+            return SHAPE_ONLY_PAYLOAD
+        if tag == "ndarray":
+            data = _unpack(obj["data"])
+            arr = np.frombuffer(data, dtype=np.dtype(obj["dtype"]))
+            return arr.reshape(tuple(obj["shape"])).copy()
+        if tag == "bytes":
+            return base64.b64decode(obj["b64"])
+        if tag is not None:
+            raise WireError(f"unknown wire tag {tag!r}")
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def encode(obj: Any, codec: str = "auto") -> bytes:
+    codec = _resolve_codec(codec)
+    if codec == "msgpack":
+        return msgpack.packb(_pack(obj, binary=True), use_bin_type=True)
+    return json.dumps(_pack(obj, binary=False),
+                      separators=(",", ":")).encode("utf-8")
+
+
+def decode(data: bytes, codec: str = "auto") -> Any:
+    codec = _resolve_codec(codec)
+    if codec == "msgpack":
+        return _unpack(msgpack.unpackb(data, raw=False))
+    return _unpack(json.loads(data.decode("utf-8")))
+
+
+def _resolve_codec(codec: str) -> str:
+    if codec == "auto":
+        return "msgpack" if HAVE_MSGPACK else "json"
+    if codec == "msgpack" and not HAVE_MSGPACK:
+        raise WireError("msgpack codec requested but msgpack is missing")
+    if codec not in ("msgpack", "json"):
+        raise WireError(f"unknown codec {codec!r}")
+    return codec
+
+
+# --------------------------------------------------------------------------
+# framed socket I/O
+# --------------------------------------------------------------------------
+
+def send_msg(sock: socket.socket, obj: Any, codec: str = "auto") -> int:
+    """Frame + send one message; returns bytes put on the wire (header
+    included -- the bench's bandwidth ledger counts real socket bytes)."""
+    payload = encode(obj, codec)
+    if len(payload) > MAX_FRAME:
+        raise WireError(f"frame of {len(payload)} bytes exceeds MAX_FRAME")
+    frame = struct.pack(">I", len(payload)) + payload
+    sock.sendall(frame)
+    return len(frame)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout:
+            # socket.timeout IS an OSError (TimeoutError) on 3.10+:
+            # re-raise before the peer-death translation below, or a
+            # quiet interval on a healthy connection reads as the peer
+            # dying (recv_msg documents timeouts pass through untouched)
+            raise
+        except (ConnectionError, OSError) as e:
+            raise PeerGone(str(e)) from None
+        if not chunk:
+            raise PeerGone("EOF")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket, codec: str = "auto",
+             timeout: Optional[float] = None) -> Any:
+    """Read one framed message (blocking; ``timeout`` uses the socket
+    timeout and raises ``socket.timeout`` untouched so pollers can spin)."""
+    if timeout is not None:
+        sock.settimeout(timeout)
+    header = _recv_exact(sock, 4)
+    (length,) = struct.unpack(">I", header)
+    if length > MAX_FRAME:
+        raise WireError(f"incoming frame of {length} bytes exceeds MAX_FRAME "
+                        f"(stream desync?)")
+    return decode(_recv_exact(sock, length), codec)
+
+
+class SocketChannel:
+    """`repro.core.Channel` over one direction of a framed TCP stream.
+
+    The fleet's channel *pair* is the two directions of one connection:
+    central->host carries dispatches (central holds the send side), and
+    host->central carries updates/completions/heartbeats (central holds
+    the recv side).  ``send`` is locked (many executor threads share the
+    host's upstream); ``recv`` assumes a single consumer thread, which is
+    exactly the receiver-thread-per-host structure in manager.py.
+    """
+
+    def __init__(self, sock: socket.socket, codec: str = "auto") -> None:
+        import threading
+
+        self.sock = sock
+        self.codec = _resolve_codec(codec)
+        self._send_lock = threading.Lock()
+        self._closed = False
+        self.bytes_sent = 0
+
+    def send(self, msg: Any) -> None:
+        from repro.core.channel import ChannelClosed
+
+        if self._closed:
+            raise ChannelClosed("send on closed SocketChannel")
+        try:
+            with self._send_lock:
+                self.bytes_sent += send_msg(self.sock, msg, self.codec)
+        except (PeerGone, ConnectionError, OSError) as e:
+            raise ChannelClosed(str(e)) from None
+
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        from repro.core.channel import ChannelClosed
+
+        if self._closed:
+            raise ChannelClosed("recv on closed SocketChannel")
+        try:
+            return recv_msg(self.sock, self.codec, timeout)
+        except socket.timeout:
+            raise TimeoutError("SocketChannel.recv timed out") from None
+        except PeerGone as e:
+            raise ChannelClosed(str(e)) from None
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                self.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            self.sock.close()

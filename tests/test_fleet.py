@@ -1,0 +1,365 @@
+"""Fleet tests: Channel seams, multi-process execution, failure semantics,
+and the single-process-parity contract (DESIGN.md §8).
+
+The heavyweight facts verified here:
+
+  * a FleetRuntime runs the unchanged Dispatcher stack over real OS
+    processes and drains workloads end-to-end (msgpack AND forced-JSON
+    codecs);
+  * SIGKILLing a host mid-workload re-queues its in-flight tasks through
+    the PR 2 ``executor_left`` path, the run drains with every task
+    accounted (``wait()`` cannot leak), and the global byte ledger equals
+    the sum of completed tasks' per-task ledgers exactly (the ledger merge
+    is race-free: zombie attempts are dropped with their counters);
+  * a recorded JSONL trace replayed batch-synchronously yields IDENTICAL
+    scheduling-determined RunReport fields on the in-process runtime and a
+    multi-host fleet;
+  * DRP integration moves whole hosts (allocate_quantum rounding +
+    whole-idle-host release).
+"""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import (AllocationPolicy, DataObject, DiffusionRuntime,
+                        DynamicResourceProvisioner, Task)
+from repro.core.channel import CallbackChannel, ChannelClosed, LocalChannel
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               RuntimeEngine, WorkloadSpec, run_experiment)
+from repro.fleet import FleetRuntime, reports_scheduling_equal
+from repro.workloads import ARRIVALS, POPULARITY, generate, record, replay
+
+
+# --------------------------------------------------------------------------
+# channel units (the in-process seam implementations)
+# --------------------------------------------------------------------------
+
+class TestChannels:
+    def test_local_channel_orders_and_closes(self):
+        ch = LocalChannel()
+        for i in range(5):
+            ch.send(i)
+        assert [ch.recv() for _ in range(5)] == list(range(5))
+        ch.close()
+        with pytest.raises(ChannelClosed):
+            ch.recv()
+        with pytest.raises(ChannelClosed):
+            ch.send(99)
+
+    def test_local_channel_drains_before_close_signal(self):
+        ch = LocalChannel()
+        ch.send("pending")
+        ch.close()
+        assert ch.recv() == "pending"   # queued work survives the close
+        with pytest.raises(ChannelClosed):
+            ch.recv()
+
+    def test_local_channel_recv_timeout(self):
+        ch = LocalChannel()
+        with pytest.raises(TimeoutError):
+            ch.recv(timeout=0.01)
+
+    def test_callback_channel_is_synchronous(self):
+        seen = []
+        ch = CallbackChannel(seen.append)
+        ch.send(1)
+        assert seen == [1]              # delivered before send returns
+        with pytest.raises(ChannelClosed):
+            ch.recv()
+        ch.close()
+        with pytest.raises(ChannelClosed):
+            ch.send(2)
+
+    def test_runtime_routes_both_seams_through_channels(self):
+        """The docstring's Channel abstraction is real: the dispatch inbox
+        and the update path are Channel objects the fleet can substitute."""
+        from repro.core.channel import Channel
+
+        rt = DiffusionRuntime(n_executors=1)
+        try:
+            assert isinstance(rt.update_channel, Channel)
+            assert isinstance(next(iter(rt.workers.values())).inbox, Channel)
+        finally:
+            rt.shutdown()
+
+
+# --------------------------------------------------------------------------
+# fleet end-to-end
+# --------------------------------------------------------------------------
+
+def _put_all(rt, n_objects=12, size=1000):
+    objs = [DataObject(f"o{i}", size) for i in range(n_objects)]
+    for ob in objs:
+        rt.put_object(ob, b"x" * size)
+    return objs
+
+
+def _conservation(rt):
+    """Global ledger must equal the sum over completed tasks -- exactly."""
+    lg, d = rt.ledger, rt.dispatcher
+    sums = [0] * 6
+    for t in d.completed:
+        sums[0] += t.bytes_local
+        sums[1] += t.bytes_cache_to_cache
+        sums[2] += t.bytes_store
+        sums[3] += t.cache_hits
+        sums[4] += t.peer_hits
+        sums[5] += t.cache_misses - t.peer_hits
+    assert sums == [lg.bytes_local, lg.bytes_c2c, lg.bytes_store,
+                    lg.local_hits, lg.peer_hits, lg.store_reads]
+
+
+@pytest.mark.parametrize("codec", ["auto", "json"])
+def test_fleet_end_to_end(codec):
+    rt = FleetRuntime(hosts=2, threads_per_host=2, codec=codec,
+                      task_fn_name="repro.fleet.runtime:fleet_task")
+    try:
+        _put_all(rt)
+        rt.submit(Task(inputs=(f"o{i % 12}",)) for i in range(60))
+        assert rt.wait(60)
+        d = rt.dispatcher
+        assert len(d.completed) == 60 and not d.failed
+        # one ledger access per input, every task ran host-side
+        lg = rt.ledger
+        assert lg.local_hits + lg.peer_hits + lg.store_reads == 60
+        assert all(t.cache_hits + t.cache_misses == 1 for t in d.completed)
+        _conservation(rt)
+    finally:
+        rt.shutdown()
+
+
+def test_sigkill_host_mid_workload_drains_and_conserves():
+    """The headline failure-semantics contract: SIGKILL a host while its
+    executors hold in-flight tasks -> those tasks re-queue and run
+    elsewhere, the run drains (no wait() leak), membership shrinks by
+    exactly one whole host, and the ledger merge stays race-free."""
+    rt = FleetRuntime(hosts=3, threads_per_host=2,
+                      task_fn_name="repro.fleet.runtime:slow_task",
+                      heartbeat_timeout_s=2.0)
+    try:
+        _put_all(rt, n_objects=16)
+        n = 240
+        rt.submit(Task(inputs=(f"o{i % 16}",)) for i in range(n))
+        time.sleep(0.15)          # let work spread across all hosts
+        victim_eids = set(rt.manager.handles["h1"].eids)
+        rt.manager.kill_host("h1")
+        assert rt.wait(60), "wait() leaked after host SIGKILL"
+        d = rt.dispatcher
+        assert len(d.completed) + len(d.failed) == n
+        assert not d.failed       # default max_attempts=3 absorbs one kill
+        assert victim_eids.isdisjoint(rt.workers)
+        assert len(rt.workers) == 4
+        # the retried tail ran on survivors (pre-kill completions keep
+        # their victim eids -- they finished before the host died)
+        retried = [t for t in d.completed if t.attempts > 0]
+        assert all(t.executor in rt.workers for t in retried)
+        _conservation(rt)
+        # the pool log recorded the host's executors leaving
+        assert [n for _, n in rt.pool_log][-1] == 4
+    finally:
+        rt.shutdown()
+
+
+def test_sigkill_with_single_attempt_accounts_terminal_failures():
+    """max_attempts=1 turns every in-flight task on the killed host into a
+    terminal failure at executor_left time; wait() must still drain (the
+    removal path accounts them) and completed+failed must cover every
+    submitted task."""
+    rt = FleetRuntime(hosts=2, threads_per_host=2,
+                      task_fn_name="repro.fleet.runtime:slow_task")
+    try:
+        _put_all(rt)
+        n = 160
+        tasks = [Task(inputs=(f"o{i % 12}",)) for i in range(n)]
+        for t in tasks:
+            t.max_attempts = 1
+        rt.submit(tasks)
+        time.sleep(0.1)
+        rt.manager.kill_host("h0")
+        assert rt.wait(60), "wait() leaked terminal failures"
+        d = rt.dispatcher
+        assert len(d.completed) + len(d.failed) == n
+        _conservation(rt)
+    finally:
+        rt.shutdown()
+
+
+def test_trace_replay_parity_single_process_vs_fleet(tmp_path):
+    """Record a k-input Zipf trace to JSONL, replay it batch-synchronously
+    on the in-process runtime and on a 2-host fleet: every scheduling-
+    determined quantity (placement included) must agree exactly."""
+    wl = generate("par",
+                  ARRIVALS["PoissonArrivals"](rate_per_s=100.0),
+                  POPULARITY["ZipfPopularity"](alpha=1.1, k=2, corr=0.8),
+                  n_tasks=150, n_objects=32, object_bytes=50_000, seed=7)
+    trace = tmp_path / "trace.jsonl"
+    record(wl, trace)
+    replayed = replay(trace)
+
+    def run(rt):
+        th = rt.submit_workload(replayed,
+                                payload_factory=lambda ob: b"p",
+                                barrier_every=4)
+        th.join(120)
+        assert not th.is_alive() and rt.wait(60)
+        d, lg = rt.dispatcher, rt.ledger
+        per_task = sorted((t.tid, t.executor, t.cache_hits, t.peer_hits,
+                           t.cache_misses) for t in d.completed)
+        agg = (len(d.completed), lg.local_hits, lg.peer_hits,
+               lg.store_reads, lg.bytes_local, lg.bytes_c2c, lg.bytes_store)
+        rt.shutdown()
+        return agg, per_task
+
+    agg1, per1 = run(DiffusionRuntime(n_executors=4,
+                                      cache_capacity_bytes=10**12, seed=3))
+    agg2, per2 = run(FleetRuntime(hosts=2, threads_per_host=2,
+                                  cache_capacity_bytes=10**12, seed=3))
+    assert agg1 == agg2
+    assert per1 == per2   # identical placement, task by task
+
+
+def test_engine_fleet_report_parity_and_rejections():
+    def spec(hosts, tph, n_nodes):
+        return ExperimentSpec(
+            name="fleet-spec",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=n_nodes),
+            cache=CacheSpec(capacity_bytes=10**11),
+            policy="max-compute-util",
+            workload=WorkloadSpec(
+                name="fs",
+                arrivals={"kind": "PoissonArrivals", "rate_per_s": 100.0},
+                popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 1,
+                            "corr": 1.0},
+                n_tasks=80, n_objects=24, object_bytes=10**5, seed=5),
+            seed=2, hosts=hosts, threads_per_host=tph)
+
+    r1 = run_experiment(spec(0, 1, 4), engine="runtime",
+                        barrier_every=4, timeout=120.0)
+    r2 = run_experiment(spec(2, 2, 4), engine="runtime",
+                        barrier_every=4, timeout=180.0)
+    assert reports_scheduling_equal(r1, r2) == {}
+    assert r2.n_completed == 80
+
+    with pytest.raises(ValueError, match="sim engine does not support"):
+        run_experiment(spec(2, 2, 4), engine="sim")
+    with pytest.raises(ValueError, match="layout mismatch"):
+        spec(2, 2, 5)
+    with pytest.raises(ValueError, match="threads_per_host"):
+        spec(0, 2, 4)
+    eng = RuntimeEngine().prepare(spec(2, 2, 4))
+    try:
+        with pytest.raises(ValueError, match="task callable"):
+            eng.run(task_fn=lambda payloads: None)
+    finally:
+        eng.shutdown()
+
+
+# --------------------------------------------------------------------------
+# whole-host provisioning
+# --------------------------------------------------------------------------
+
+class TestWholeHostProvisioning:
+    def test_allocate_quantum_rounds_requests(self):
+        prov = DynamicResourceProvisioner(
+            min_executors=0, max_executors=8,
+            policy=AllocationPolicy.ONE_AT_A_TIME,
+            trigger_cooldown_s=0.0, allocate_quantum=2)
+        acts = prov.step(1.0, queue_len=5, live_executors=0,
+                         inflight_allocations=0, idle_executors=[])
+        assert acts.allocate == 2      # +1 request buys one whole host
+        acts = prov.step(2.0, queue_len=5, live_executors=7,
+                         inflight_allocations=0, idle_executors=[])
+        assert acts.allocate == 0      # no room for a whole host below max
+
+    def test_zero_room_is_not_a_trigger(self):
+        """max not a quantum multiple: the sub-host remainder must not
+        churn policy state (exponential burst, cooldown clock) on ticks
+        that can never allocate."""
+        prov = DynamicResourceProvisioner(
+            min_executors=0, max_executors=10,
+            policy=AllocationPolicy.EXPONENTIAL,
+            trigger_cooldown_s=0.0, allocate_quantum=4)
+        acts = prov.step(1.0, 5, 0, 0, [])
+        assert acts.allocate == 4      # burst 1 rounded up to one host
+        for t in range(2, 50):
+            # pool somehow at 8 (say, a second driver): remainder 2 < 4
+            acts = prov.step(float(t), 5, 8, 0, [])
+            assert acts.allocate == 0
+        assert prov._exp_burst <= 4    # no unbounded doubling at room==0
+        assert prov.n_allocated == 4
+
+    def test_release_truncates_to_whole_quanta(self):
+        prov = DynamicResourceProvisioner(
+            min_executors=1, max_executors=8, allocate_quantum=2)
+        acts = prov.step(100.0, queue_len=0, live_executors=6,
+                         inflight_allocations=0,
+                         idle_executors=["a", "b", "c", "d", "e"])
+        # releasable = 6-1 = 5 -> truncated to 4 (two whole hosts)
+        assert acts.release == ["a", "b", "c", "d"]
+
+    def test_quantum_one_is_bit_identical_legacy(self):
+        old = DynamicResourceProvisioner(max_executors=8,
+                                         policy=AllocationPolicy.ADDITIVE,
+                                         additive_k=3, trigger_cooldown_s=0.0)
+        acts = old.step(1.0, 5, 4, 0, [])
+        assert acts.allocate == 3 and old.n_allocated == 3
+
+    def test_fleet_grows_and_releases_whole_hosts(self):
+        rt = FleetRuntime(hosts=1, threads_per_host=2)
+        try:
+            _put_all(rt)
+            assert len(rt.workers) == 2
+            # grow via the provisioning hook: 4 executors = 2 hosts
+            rt.provision_grow(4)
+            assert len(rt.workers) == 6
+            assert len(rt.manager.live_handles()) == 3
+            rt.submit(Task(inputs=(f"o{i % 12}",)) for i in range(30))
+            assert rt.wait(30)
+            # release: only whole-idle hosts are offered, and releasing
+            # them removes every executor of those hosts
+            idle = rt.provision_idle(time.monotonic(), idle_for_s=0.0)
+            assert idle and len(idle) % 2 == 0
+            keep_host = rt.manager.live_handles()[0].host_id
+            victims = [e for e in idle
+                       if rt.workers[e].host.host_id != keep_host]
+            rt.provision_release(victims[:2])
+            assert len(rt.manager.live_handles()) == 2
+            assert len(rt.workers) == 4
+            # pool stays serviceable after the release
+            rt.submit(Task(inputs=("o0",)) for _ in range(10))
+            assert rt.wait(30)
+            assert len(rt.dispatcher.completed) == 40
+        finally:
+            rt.shutdown()
+
+    def test_fleet_engine_drp_allocates_host_multiples(self):
+        spec = ExperimentSpec(
+            name="fleet-drp",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=2),
+            cache=CacheSpec(capacity_bytes=10**9),
+            policy="max-compute-util",
+            provisioner={"policy": "additive", "additive_k": 2,
+                         "min_executors": 2, "max_executors": 8,
+                         "queue_threshold": 2, "idle_timeout_s": 30.0,
+                         "trigger_cooldown_s": 0.0, "period_s": 0.05},
+            workload=WorkloadSpec(
+                name="drp",
+                arrivals={"kind": "PoissonArrivals", "rate_per_s": 400.0},
+                popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 1,
+                            "corr": 1.0},
+                n_tasks=300, n_objects=32, object_bytes=10**5, seed=9),
+            seed=1, hosts=1, threads_per_host=2)
+        spec = ExperimentSpec.from_dict(spec.to_dict())   # exercise strict IO
+        eng = RuntimeEngine()
+        try:
+            eng.prepare(spec)
+            rep = eng.run(time_scale=0.02, timeout=180.0)
+        finally:
+            eng.shutdown()
+        assert rep.n_completed == 300
+        assert rep.n_allocated > 0
+        assert rep.n_allocated % 2 == 0        # whole hosts only
+        assert rep.peak_executors % 2 == 0
+        assert rep.peak_executors > 2

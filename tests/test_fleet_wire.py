@@ -1,0 +1,192 @@
+"""Wire-protocol tests: framing + codec round-trips (DESIGN.md §8).
+
+Every payload class the fleet ships is round-tripped under BOTH codecs
+(msgpack when present, and the forced-JSON fallback): numpy arrays,
+raw bytes, k-input task dispatch messages, empty payloads, and the
+runtime's shape-only store sentinel (PR 4) -- which must decode to the
+sentinel *object*, because a None payload reads as a cache miss.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelClosed
+from repro.core.runtime import SHAPE_ONLY_PAYLOAD
+from repro.fleet import wire
+from repro.fleet.wire import (MAX_FRAME, PeerGone, SocketChannel, WireError,
+                              decode, encode, recv_msg, send_msg)
+
+CODECS = ["msgpack", "json"] if wire.HAVE_MSGPACK else ["json"]
+
+
+@pytest.fixture(params=CODECS)
+def codec(request):
+    return request.param
+
+
+def rt(obj, codec):
+    return decode(encode(obj, codec), codec)
+
+
+# --------------------------------------------------------------------------
+# codec round-trips
+# --------------------------------------------------------------------------
+
+def test_scalars_and_structures(codec):
+    msg = {"t": "task", "n": 3, "f": 1.5, "flag": True, "none": None,
+           "nested": {"deep": [1, "two", 3.0, False, None]}}
+    assert rt(msg, codec) == msg
+
+
+def test_tuples_become_lists(codec):
+    assert rt({"inputs": ("a", "b")}, codec) == {"inputs": ["a", "b"]}
+
+
+def test_bytes_round_trip(codec):
+    for b in (b"", b"\x00\xff" * 100, bytes(range(256))):
+        assert rt({"payload": b}, codec) == {"payload": b}
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "int32", "uint8",
+                                   "complex64", "bool"])
+def test_ndarray_round_trip(codec, dtype):
+    arr = (np.arange(24).reshape(2, 3, 4) % 2).astype(dtype)
+    out = rt(arr, codec)
+    assert isinstance(out, np.ndarray)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert np.array_equal(out, arr)
+
+
+def test_ndarray_empty_and_noncontiguous(codec):
+    empty = np.zeros((0, 5), dtype=np.float32)
+    out = rt(empty, codec)
+    assert out.shape == (0, 5) and out.dtype == np.float32
+    base = np.arange(36, dtype=np.int64).reshape(6, 6)
+    sliced = base[::2, ::3]          # non-contiguous view
+    assert not sliced.flags["C_CONTIGUOUS"]
+    assert np.array_equal(rt(sliced, codec), sliced)
+
+
+def test_shape_only_sentinel_is_identity(codec):
+    """The PR 4 sentinel must cross the wire as ITSELF: the runtime's
+    cache-hit test is `payload is not None`, and the hosts' store replicas
+    hold whatever decode() returns."""
+    out = rt({"payload": SHAPE_ONLY_PAYLOAD}, codec)
+    assert out["payload"] is SHAPE_ONLY_PAYLOAD
+
+
+def test_k_input_task_message(codec):
+    """A realistic 3-input dispatch with hints + routes survives."""
+    msg = {"t": "task", "eid": "w3", "tid": "wl-17",
+           "inputs": [["a", 100], ["b", 200], ["a", 100]],   # dup oids stay
+           "outputs": [["wl-17.out", 64]],
+           "hints": {"a": ["w0", "w3"], "b": ["w1"]},
+           "routes": {"w0": ["127.0.0.1", 4242], "w1": ["127.0.0.1", 4243]}}
+    out = rt(msg, codec)
+    assert out["inputs"] == msg["inputs"]
+    assert out["hints"] == msg["hints"]
+    assert out["routes"]["w0"] == ["127.0.0.1", 4242]
+
+
+def test_empty_payloads(codec):
+    assert rt({}, codec) == {}
+    assert rt([], codec) == []
+    assert rt({"payload": b""}, codec) == {"payload": b""}
+
+
+def test_reserved_and_bad_keys_hard_error(codec):
+    with pytest.raises(WireError):
+        encode({"__wire__": "nope"}, codec)
+    with pytest.raises(WireError):
+        encode({1: "int key"}, codec)
+    with pytest.raises(WireError):
+        encode({"fn": object()}, codec)
+
+
+def test_unknown_tag_hard_errors(codec):
+    data = encode({"x": 1}, codec)
+    # hand-craft an unknown tag through the raw codec
+    import json as _json
+    bad = _json.dumps({"__wire__": "martian"}).encode()
+    with pytest.raises(WireError):
+        decode(bad, "json")
+    assert decode(data, codec) == {"x": 1}
+
+
+# --------------------------------------------------------------------------
+# framing over real sockets
+# --------------------------------------------------------------------------
+
+def _pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def test_framed_messages_preserve_order(codec):
+    a, b = _pair()
+    msgs = [{"i": i, "data": b"x" * i} for i in range(50)]
+    def send():
+        for m in msgs:
+            send_msg(a, m, codec)
+    th = threading.Thread(target=send)
+    th.start()
+    got = [recv_msg(b, codec) for _ in range(50)]
+    th.join()
+    assert got == [decode(encode(m, codec), codec) for m in msgs]
+    a.close(); b.close()
+
+
+def test_large_frame(codec):
+    a, b = _pair()
+    arr = np.random.default_rng(0).random(200_000)   # ~1.6 MB payload
+    th = threading.Thread(target=send_msg, args=(a, {"arr": arr}, codec))
+    th.start()
+    out = recv_msg(b, codec)
+    th.join()
+    assert np.array_equal(out["arr"], arr)
+    a.close(); b.close()
+
+
+def test_oversized_frame_header_rejected():
+    a, b = _pair()
+    a.sendall(struct.pack(">I", MAX_FRAME + 1))
+    with pytest.raises(WireError):
+        recv_msg(b)
+    a.close(); b.close()
+
+
+def test_eof_raises_peer_gone(codec):
+    a, b = _pair()
+    a.close()
+    with pytest.raises(PeerGone):
+        recv_msg(b, codec)
+    b.close()
+
+
+def test_eof_mid_frame_raises_peer_gone(codec):
+    a, b = _pair()
+    payload = encode({"x": 1}, codec)
+    a.sendall(struct.pack(">I", len(payload)) + payload[:1])
+    a.close()
+    with pytest.raises(PeerGone):
+        recv_msg(b, codec)
+    b.close()
+
+
+def test_socket_channel_pair(codec):
+    a, b = _pair()
+    ca, cb = SocketChannel(a, codec), SocketChannel(b, codec)
+    ca.send({"hello": 1})
+    assert cb.recv() == {"hello": 1}
+    assert ca.bytes_sent > 4
+    ca.close()
+    with pytest.raises(ChannelClosed):
+        cb.recv()
+    with pytest.raises(ChannelClosed):
+        ca.send({"x": 1})
+    cb.close()

@@ -19,7 +19,14 @@ on more than ``--threshold`` regression (default 25%):
   policies   benchmarks/bench_policies.py vs BENCH_policies.json -- guards
              the experiment-API sweep path, with canaries (exponential
              allocation responds at least as well as one-at-a-time under
-             bursty arrivals, sim + runtime RunReport schemas identical).
+             bursty arrivals, sim + runtime RunReport schemas identical,
+             rebalance release beats discard on post-shrink hit ratio);
+  fleet      benchmarks/bench_fleet.py vs BENCH_fleet.json -- guards the
+             multi-process fleet (repro.fleet), with canaries (every cell
+             drains, aggregate cache bandwidth rises monotonically
+             1 -> 2 -> 4 hosts, and a recorded trace replayed batch-
+             synchronously matches the single-process runtime EXACTLY on
+             scheduling-determined RunReport fields).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -32,6 +39,7 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_joins --out BENCH_joins.json
     PYTHONPATH=src python -m benchmarks.bench_policies \
         --out BENCH_policies.json
+    PYTHONPATH=src python -m benchmarks.bench_fleet --out BENCH_fleet.json
 """
 from __future__ import annotations
 
@@ -99,12 +107,14 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_joins.json"))
     ap.add_argument("--policies-baseline",
                     default=str(REPO_ROOT / "BENCH_policies.json"))
+    ap.add_argument("--fleet-baseline",
+                    default=str(REPO_ROOT / "BENCH_fleet.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
-                                       "policies"],
+                                       "policies", "fleet"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -114,8 +124,8 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import (bench_engine, bench_joins, bench_policies,
-                            bench_workloads)
+    from benchmarks import (bench_engine, bench_fleet, bench_joins,
+                            bench_policies, bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -173,6 +183,24 @@ def main(argv=None) -> int:
                  <= c["bursty_one_avg_slowdown"]),
                 ("sim + runtime RunReport schemas identical",
                  lambda b, c: bool(c["schema_parity"])),
+                ("rebalance release beats discard on post-shrink hit ratio",
+                 lambda b, c: c["rebalance_hit_advantage"] >= 0),
+            ]))
+    if args.only in (None, "fleet"):
+        rc = max(rc, _check_gate(
+            "fleet", Path(args.fleet_baseline),
+            lambda: bench_fleet.gate_measure(repeats=args.repeats),
+            (bench_fleet.GATE_NODES, bench_fleet.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("every host-count cell drained",
+                 lambda b, c: bool(c["all_drained"])),
+                ("aggregate cache bandwidth monotonic 1 -> 2 -> 4 hosts",
+                 lambda b, c: bool(c["bw_monotonic"])),
+                ("fleet trace replay matches single-process exactly",
+                 lambda b, c: bool(c["parity"])),
             ]))
     return rc
 

@@ -83,9 +83,19 @@ def cmd_describe(args) -> int:
 def cmd_run(args) -> int:
     spec = _load_spec(args.spec)
     run_kw = {}
+    engine = args.engine
     if args.engine == "runtime":
-        run_kw = {"time_scale": args.time_scale, "timeout": args.timeout}
-    rep = run_experiment(spec, engine=args.engine, **run_kw)
+        run_kw = {"time_scale": args.time_scale, "timeout": args.timeout,
+                  "barrier_every": args.barrier_every}
+        if args.task_fn is not None:
+            # fleet runs name their callable; hosts resolve module:attr
+            from repro.experiments import RuntimeEngine
+            engine = RuntimeEngine(task_fn_name=args.task_fn)
+    try:
+        rep = run_experiment(spec, engine=engine, **run_kw)
+    finally:
+        if not isinstance(engine, str):
+            engine.shutdown()
     _report_out(rep, args.out)
     return 0
 
@@ -160,6 +170,13 @@ def main(argv=None) -> int:
     r.add_argument("--time-scale", type=float, default=0.0,
                    help="runtime engine: wall s per workload s (0 = ASAP)")
     r.add_argument("--timeout", type=float, default=600.0)
+    r.add_argument("--barrier-every", type=int, default=None,
+                   help="runtime engine: batch-synchronous replay in "
+                        "chunks of N (deterministic; the fleet-parity "
+                        "submission mode) instead of arrival pacing")
+    r.add_argument("--task-fn", default=None, metavar="MODULE:ATTR",
+                   help="runtime engine, fleet specs (hosts>0): named task "
+                        "callable each host resolves locally")
     r.add_argument("--out", default=None, help="also write the report JSON")
     r.set_defaults(fn=cmd_run)
 
