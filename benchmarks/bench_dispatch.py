@@ -1,0 +1,500 @@
+"""Dispatch benchmark: central-loop throughput, wire batching, hierarchy.
+
+The paper's dispatcher tops out near ~1k tasks/s because every task costs
+the central process a fixed slice of lock + decision + wire work (§3.1);
+PR 6 attacks that wall two ways -- bounded batch frames on the wire and
+hierarchical per-host dispatch -- and this bench is the measurement side:
+
+  dispatcher  a pure `Dispatcher` loop (submit / next_dispatches /
+              apply_index_updates / task_finished, no threads, no wire):
+              the ceiling any transport can reach;
+  storm       a synthetic completion storm at 4 hosts x GATE_TPH driven
+              through the REAL wire: framed socket frames into the real
+              per-host receiver threads (`manager._receive` ->
+              `FleetRuntime._on_remote_batch`), but with *scripted* host
+              threads instead of processes -- every completion is instant,
+              so the wall clock is the central loop plus the wire, the
+              two things batching changes.  Run at ``wire_batch=1``
+              (exactly the unbatched one-frame-per-message wire) and
+              ``wire_batch=64``; the committed baseline must show
+              ``batched_speedup >= 3``;
+  curve       a real fleet (1 / 2 / 4 host processes x GATE_TPH) in
+              hierarchical mode (``local_dispatch=True``) running
+              `io_dwell_task`; drained tasks/s must rise strictly
+              monotonically with host count;
+  parity      the recorded-trace replay canary of bench_fleet, but with
+              hierarchical dispatch + batching ON for the fleet side:
+              batch-synchronous replay must still match the single-process
+              runtime EXACTLY on scheduling-determined RunReport fields
+              (leases never engage when the pool drains each chunk --
+              DESIGN.md §9).
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_dispatch --out BENCH_dispatch.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import socket
+import sys
+import threading
+import time
+
+from repro.core.objects import Task
+from repro.core.policies import DispatchPolicy
+from repro.core.scheduler import Dispatcher
+from repro.core.index import IndexUpdate
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               WorkloadSpec, run_experiment)
+from repro.fleet import FleetRuntime, reports_scheduling_equal
+from repro.fleet.manager import HostHandle
+from repro.fleet.runtime import _RemoteExecutor
+from repro.fleet.wire import (PeerGone, SocketChannel, _resolve_codec,
+                              recv_msg, send_msg)
+from repro.workloads import PoissonArrivals, ZipfPopularity, generate
+
+from .common import row
+
+KB = 1000
+
+#: fixed configuration tools/bench_gate.py replays against the baseline.
+GATE_HOSTS = (1, 2, 4)
+GATE_TPH = 4
+STORM_TPH = 48            # storm pool: 4 hosts x 48 threads (deep pool =>
+                          # the per-completion pump pass dominates)
+GATE_NODES = max(GATE_HOSTS) * STORM_TPH
+GATE_TASKS = 1200         # storm tasks (the gated wall)
+CURVE_TASKS = 240         # real-fleet curve tasks
+K_INPUTS = 3              # storm join width
+N_OBJECTS = 64            # curve catalogue (objects carry real payloads)
+STORM_OBJECTS = 1024      # storm catalogue (ids only; wide key space)
+OBJECT_BYTES = 128 * KB   # storm object size (ids + sizes only)
+CURVE_OBJECT_BYTES = 96 * KB    # curve payloads: small enough to ship
+CURVE_DISK_BW = 2 * 10**6       # ...but dwell = 48 ms at the overridden
+                          # disk bandwidth, so cells stay sleep-bound (not
+                          # codec/CPU-bound) on a 1-core CI box and
+                          # tasks/s scales with serving executors
+SIM_CACHE_OBJS = 8        # scripted per-executor cache: constant eviction
+                          # churn => an update frame per completion
+
+
+# --------------------------------------------------------------------------
+# pure dispatcher loop
+# --------------------------------------------------------------------------
+
+def measure_dispatcher_loop(n_tasks: int, seed: int = 0) -> dict:
+    """Central decision loop with zero transport: submit once, then
+    dispatch / complete / apply-updates until drained.  ops/s here is the
+    ceiling; the storm below shows how much of it each wire keeps."""
+    rng = random.Random(seed)
+    d = Dispatcher(DispatchPolicy.MAX_COMPUTE_UTIL)
+    now = 0.0
+    for i in range(GATE_NODES):
+        d.executor_joined(f"w{i}", now)
+    oids = [f"o{i}" for i in range(STORM_OBJECTS)]
+    for oid in oids:
+        d.sizes[oid] = OBJECT_BYTES
+    tasks = [Task(inputs=tuple(rng.sample(oids, K_INPUTS)))
+             for _ in range(n_tasks)]
+    t0 = time.perf_counter()
+    d.submit(tasks, now)
+    while len(d.completed) < n_tasks:
+        now += 1.0
+        dispatches = d.next_dispatches(now)
+        if not dispatches:
+            break
+        for disp in dispatches:
+            d.apply_index_updates(
+                [IndexUpdate(disp.executor, added=disp.task.inputs)])
+            d.task_finished(disp.task, now + 0.5, ok=True)
+    wall = time.perf_counter() - t0
+    return {"n_completed": len(d.completed), "wall_s": round(wall, 4),
+            "tasks_per_s": round(n_tasks / wall, 1),
+            "decisions": d.n_decisions}
+
+
+# --------------------------------------------------------------------------
+# synthetic completion storm over the real central receive path
+# --------------------------------------------------------------------------
+
+class _ScriptProc:
+    """Process stand-in for a scripted (in-process) storm host, so the
+    real HostManager monitor/reap paths work unchanged."""
+
+    pid = 0
+
+    def __init__(self) -> None:
+        self.alive = True
+
+    def is_alive(self) -> bool:
+        return self.alive
+
+    def terminate(self) -> None:
+        self.alive = False
+
+    def join(self, timeout=None) -> None:
+        self.alive = False
+
+
+def _storm_host_main(sock: socket.socket, codec: str,
+                     wire_batch: int) -> None:
+    """Scripted host: answer every task frame instantly with cache-churn
+    update frames + a done frame, batched at ``wire_batch`` -- the same
+    traffic shape a real host emits, minus the execution time."""
+    caches: dict[str, list[str]] = {}
+    try:
+        while True:
+            msg = recv_msg(sock, codec)
+            msgs = msg["msgs"] if msg.get("t") == "batch" else [msg]
+            replies: list[dict] = []
+            for m in msgs:
+                kind = m["t"]
+                if kind == "task":
+                    replies.extend(_scripted_attempt(m, caches))
+                elif kind == "shutdown":
+                    return
+                # put/spawn/index/peers/lease frames need no reply
+            for i in range(0, len(replies), wire_batch):
+                chunk = replies[i:i + wire_batch]
+                send_msg(sock, chunk[0] if len(chunk) == 1
+                         else {"t": "batch", "msgs": chunk}, codec)
+    except (PeerGone, OSError):
+        return
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+def measure_storm(wire_batch: int, n_tasks: int, seed: int = 0,
+                  codec: str = "auto") -> dict:
+    """One storm run at 4 scripted hosts: real framed sockets, the real
+    per-host receiver threads and the real batched pump, but completions
+    are instant.  ``wire_batch=1`` is bit-for-bit the unbatched
+    one-frame-per-message wire.
+
+    The gated metric is **central-loop CPU**: ``time.thread_time()``
+    accumulated inside the per-host receiver threads, i.e. the seconds the
+    central process's serialized loop (recv syscalls + codec decode + lock
+    + dispatch decisions + pump + ledger accounting) is busy per storm.
+    On a single-core CI box the wall clock is dominated by the scripted
+    hosts sharing the CPU with the central loop, so wall understates the
+    batching win badly; central-loop occupancy is the resource batching
+    actually relieves and is what bounds tasks/s at scale-out."""
+    codec = _resolve_codec(codec)
+    rng = random.Random(seed)
+    rt = FleetRuntime(hosts=0, threads_per_host=STORM_TPH,
+                      wire_batch=wire_batch, heartbeat_timeout_s=60.0)
+    central_cpu: list[float] = []
+    recv_threads: list[threading.Thread] = []
+
+    def _timed_receive(handle: HostHandle) -> None:
+        t0 = time.thread_time()
+        try:
+            rt.manager._receive(handle)
+        finally:
+            central_cpu.append(time.thread_time() - t0)
+
+    try:
+        for h in range(max(GATE_HOSTS)):
+            c_sock, h_sock = socket.socketpair()
+            handle = HostHandle(f"h{h}", _ScriptProc(),
+                                SocketChannel(c_sock, codec),
+                                peer_host="127.0.0.1", peer_port=0)
+            with rt._lock:
+                for _ in range(rt.threads_per_host):
+                    eid = f"w{rt._next_worker_id}"
+                    rt._next_worker_id += 1
+                    rt.workers[eid] = _RemoteExecutor(eid, handle, rt)
+                    handle.eids.append(eid)
+                    rt.dispatcher.executor_joined(eid, time.monotonic())
+            rt.manager.handles[handle.host_id] = handle
+            threading.Thread(target=_storm_host_main,
+                             args=(h_sock, codec, wire_batch),
+                             daemon=True, name=f"storm-host-{h}").start()
+            rthr = threading.Thread(target=_timed_receive, args=(handle,),
+                                    daemon=True, name=f"storm-recv-{h}")
+            rthr.start()
+            recv_threads.append(rthr)
+        with rt._lock:
+            for i in range(STORM_OBJECTS):
+                rt.dispatcher.sizes[f"o{i}"] = OBJECT_BYTES
+        oids = [f"o{i}" for i in range(STORM_OBJECTS)]
+        tasks = [Task(inputs=tuple(rng.sample(oids, K_INPUTS)))
+                 for _ in range(n_tasks)]
+        t0 = time.perf_counter()
+        rt.submit(tasks)
+        drained = rt.wait(timeout=300.0)
+        wall = time.perf_counter() - t0
+        st = rt.dispatch_stats()
+        n = len(rt.dispatcher.completed)
+        # Shut the fleet down NOW so the receiver threads exit and report
+        # their accumulated thread CPU (the central-loop occupancy).
+        rt.shutdown()
+        for thr in recv_threads:
+            thr.join(timeout=30.0)
+        cpu = sum(central_cpu)
+        return {"wire_batch": wire_batch, "n_tasks": n_tasks,
+                "n_completed": n, "drained": drained,
+                "wall_s": round(wall, 4),
+                "tasks_per_s": round(n / wall, 1),
+                "central_cpu_s": round(cpu, 4),
+                "central_tasks_per_cpu_s": round(n / max(cpu, 1e-9), 1),
+                "pump_calls": st["pump_calls"],
+                "max_dispatch_batch": st["max_dispatch_batch"],
+                "lock_hold_ms": round(st["lock_hold_s"] * 1e3, 2),
+                "frames_recv": st["frames_recv"],
+                "msgs_recv": st["msgs_recv"],
+                "frames_sent": st["frames_sent"],
+                "msgs_sent": st["msgs_sent"]}
+    finally:
+        rt.shutdown()
+
+
+def _scripted_attempt(m: dict, caches: dict[str, list[str]]) -> list[dict]:
+    """Host-side behaviour for one task msg: admit each input into a tiny
+    LRU (churn), then one coalesced updates frame for the whole attempt's
+    cache delta and the done frame -- updates strictly before done, the
+    §8 ordering contract."""
+    eid = m["eid"]
+    cache = caches.setdefault(eid, [])
+    before = set(cache)
+    led = {"bytes_local": 0, "bytes_cache_to_cache": 0, "bytes_store": 0,
+           "cache_hits": 0, "peer_hits": 0, "cache_misses": 0}
+    for oid, size in m["inputs"]:
+        if oid in cache:
+            cache.remove(oid)
+            cache.append(oid)
+            led["cache_hits"] += 1
+            led["bytes_local"] += size
+            continue
+        led["cache_misses"] += 1
+        led["bytes_store"] += size
+        cache.append(oid)
+        while len(cache) > SIM_CACHE_OBJS:
+            cache.pop(0)
+    # one coalesced NET cache delta per attempt (an oid evicted then
+    # re-admitted within the attempt appears in neither list)
+    added = [o for o in cache if o not in before]
+    removed = sorted(before - set(cache))
+    replies: list[dict] = []
+    if added or removed:
+        replies.append({"t": "updates", "eid": eid,
+                        "added": added, "removed": removed})
+    replies.append({"t": "done", "eid": eid, "tid": m["tid"],
+                    "ok": True, "ledger": led})
+    return replies
+
+
+# --------------------------------------------------------------------------
+# real-fleet hierarchical curve + replay parity
+# --------------------------------------------------------------------------
+
+def curve_trace(n_tasks: int, seed: int = 0):
+    return generate("dispatch", PoissonArrivals(rate_per_s=100_000.0),
+                    ZipfPopularity(1.1), n_tasks=n_tasks,
+                    n_objects=N_OBJECTS, object_bytes=CURVE_OBJECT_BYTES,
+                    seed=seed)
+
+
+def measure_curve_cell(hosts: int, wl, tph: int = GATE_TPH) -> dict:
+    """One hierarchical cell: free-running replay keeps a backlog, so
+    leases engage and hosts claim locally; drained tasks/s is the axis.
+
+    The spawned hosts inherit ``REPRO_BENCH_DISK_BW`` (a slow simulated
+    disk): dwell per input is deep (48 ms) while payloads stay small, so
+    the cells are sleep-bound, not codec/CPU-bound, and tasks/s scales
+    with serving executors even on a 1-core CI box."""
+    os.environ["REPRO_BENCH_DISK_BW"] = str(CURVE_DISK_BW)
+    rt = FleetRuntime(hosts=hosts, threads_per_host=tph,
+                      local_dispatch=True,
+                      task_fn_name="repro.fleet.runtime:io_dwell_task")
+    try:
+        for ob in wl.objects:
+            rt.put_object(ob, b"x" * ob.size_bytes)
+        t0 = time.perf_counter()
+        th = rt.submit_workload(wl, time_scale=0.0)
+        th.join(600)
+        drained = (not th.is_alive()) and rt.wait(600)
+        wall = time.perf_counter() - t0
+        st = rt.dispatch_stats()
+        n = len(rt.dispatcher.completed)
+        return {"hosts": hosts, "executors": hosts * tph,
+                "n_tasks": len(wl), "n_completed": n, "drained": drained,
+                "wall_s": round(wall, 4),
+                "tasks_per_s": round(n / wall, 1),
+                "leases": st["leases"], "claims": st["claims"],
+                "claim_conflicts": st["claim_conflicts"]}
+    finally:
+        rt.shutdown()
+        os.environ.pop("REPRO_BENCH_DISK_BW", None)
+
+
+def measure_parity(n_tasks: int = 150, seed: int = 7) -> dict:
+    """Hierarchical replay parity: batch-synchronous replay (B <= pool) on
+    a 2x2 fleet with local_dispatch + batching ON must match the single-
+    process runtime exactly -- leases only engage on backlog, and barrier
+    replay never has one (DESIGN.md §9)."""
+    def spec(hosts, tph, n_nodes, local):
+        return ExperimentSpec(
+            name="dispatch-parity",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=n_nodes),
+            cache=CacheSpec(capacity_bytes=10**12),   # eviction-free
+            policy="max-compute-util",
+            workload=WorkloadSpec(
+                name="dp",
+                arrivals={"kind": "PoissonArrivals", "rate_per_s": 100.0},
+                popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 2,
+                            "corr": 0.8},
+                n_tasks=n_tasks, n_objects=32, object_bytes=50 * KB,
+                seed=seed),
+            seed=3, hosts=hosts, threads_per_host=tph,
+            local_dispatch=local)
+
+    r_single = run_experiment(spec(0, 1, 4, False), engine="runtime",
+                              barrier_every=4, timeout=300.0)
+    r_fleet = run_experiment(spec(2, 2, 4, True), engine="runtime",
+                             barrier_every=4, timeout=300.0)
+    diff = reports_scheduling_equal(r_single, r_fleet)
+    return {
+        "parity": not diff and r_single.n_completed == n_tasks,
+        "n_completed": r_single.n_completed,
+        "diff_fields": sorted(diff),
+        "fleet_leases": r_fleet.dispatch_stats.get("leases", -1),
+        "fleet_claims": r_fleet.dispatch_stats.get("claims", -1),
+    }
+
+
+def _monotonic(cells: list[dict], key: str) -> bool:
+    vals = [c[key] for c in sorted(cells, key=lambda c: c["hosts"])]
+    return all(b > a for a, b in zip(vals, vals[1:]))
+
+
+# --------------------------------------------------------------------------
+# gate / CSV entry points
+# --------------------------------------------------------------------------
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The fixed shape bench_gate.py replays.  The gated wall is the
+    batched storm (best-of-N); the speedup compares best-of-N
+    **central-loop CPU** of the two wire modes on identical scripted
+    traffic (wall clock on a 1-core CI box mostly measures the scripted
+    hosts, not the central loop -- see :func:`measure_storm`).  Curve +
+    parity are run once (process spawns dominate; canaries are boolean)."""
+    best1 = best64 = None
+    for _ in range(repeats):
+        s1 = measure_storm(1, GATE_TASKS)
+        s64 = measure_storm(64, GATE_TASKS)
+        if best1 is None or s1["central_cpu_s"] < best1["central_cpu_s"]:
+            best1 = s1
+        if best64 is None or s64["central_cpu_s"] < best64["central_cpu_s"]:
+            best64 = s64
+    wl = curve_trace(CURVE_TASKS)
+    cells = [measure_curve_cell(h, wl) for h in GATE_HOSTS]
+    par = measure_parity()
+    loop = measure_dispatcher_loop(GATE_TASKS)
+    return {
+        "n_nodes": GATE_NODES, "n_tasks": GATE_TASKS,
+        "wall_s": best64["wall_s"],
+        "n_completed": best64["n_completed"],
+        "unbatched_wall_s": best1["wall_s"],
+        "central_cpu_s": best64["central_cpu_s"],
+        "unbatched_central_cpu_s": best1["central_cpu_s"],
+        "batched_speedup": round(best1["central_cpu_s"]
+                                 / max(best64["central_cpu_s"], 1e-9), 2),
+        "dispatcher_tasks_per_s": loop["tasks_per_s"],
+        "curve_tasks_per_s": {str(c["hosts"]): c["tasks_per_s"]
+                              for c in cells},
+        "curve_drained": all(c["drained"] for c in cells),
+        "curve_monotonic": _monotonic(cells, "tasks_per_s"),
+        "curve_claims": sum(c["claims"] for c in cells),
+        "parity": par["parity"],
+        "parity_leases": par["fleet_leases"],
+    }
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: storm + curve + parity as CSV rows."""
+    n_tasks = max(int(GATE_TASKS * scale), 100)
+    loop = measure_dispatcher_loop(n_tasks)
+    rows = [row("dispatch", "dispatcher_loop_ktasks_per_s",
+                loop["tasks_per_s"] / 1e3, "k/s",
+                note=f"pure Dispatcher loop, {GATE_NODES} executors, "
+                     f"k={K_INPUTS} inputs")]
+    s1 = measure_storm(1, n_tasks)
+    s64 = measure_storm(64, n_tasks)
+    rows.append(row("dispatch", "storm_tasks_per_s_unbatched",
+                    s1["tasks_per_s"], "tasks/s", paper=1000,
+                    note=f"{s1['frames_recv']} frames up, pump x"
+                         f"{s1['pump_calls']}"))
+    rows.append(row("dispatch", "storm_tasks_per_s_batched",
+                    s64["tasks_per_s"], "tasks/s", paper=1000,
+                    note=f"{s64['frames_recv']} frames up, pump x"
+                         f"{s64['pump_calls']}"))
+    rows.append(row("dispatch", "wire_batching_speedup",
+                    s1["central_cpu_s"] / max(s64["central_cpu_s"], 1e-9),
+                    "x", note="central-loop CPU, same storm, "
+                              "wire_batch 1 vs 64"))
+    wl = curve_trace(max(int(CURVE_TASKS * scale), 96))
+    cells = [measure_curve_cell(h, wl) for h in GATE_HOSTS]
+    for c in cells:
+        rows.append(row("dispatch", f"hier_tasks_per_s_{c['hosts']}hosts",
+                        c["tasks_per_s"], "tasks/s",
+                        note=f"{c['executors']} executors, local claims "
+                             f"{c['claims']}, conflicts "
+                             f"{c['claim_conflicts']}"))
+    rows.append(row("dispatch", "hier_tasks_per_s_monotonic_1_2_4",
+                    1.0 if _monotonic(cells, "tasks_per_s") else 0.0,
+                    "bool", note="hierarchical throughput grows with "
+                                 "host count"))
+    par = measure_parity()
+    rows.append(row("dispatch", "hier_replay_parity",
+                    1.0 if par["parity"] else 0.0, "bool",
+                    note="hierarchical+batched replay == single-process "
+                         "on scheduling-determined fields"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=GATE_TASKS)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    args = ap.parse_args(argv)
+
+    loop = measure_dispatcher_loop(args.tasks)
+    print(f"# dispatcher loop: {loop['tasks_per_s']:.0f} tasks/s",
+          file=sys.stderr)
+    storms = {wb: measure_storm(wb, args.tasks) for wb in (1, 8, 64)}
+    for wb, s in storms.items():
+        print(f"# storm wire_batch={wb:3d}: {s['tasks_per_s']:8.1f} tasks/s  "
+              f"central cpu {s['central_cpu_s'] * 1e3:7.1f} ms  "
+              f"{s['frames_recv']:6d} frames  pump x{s['pump_calls']}",
+              file=sys.stderr)
+    wl = curve_trace(CURVE_TASKS)
+    cells = [measure_curve_cell(h, wl) for h in GATE_HOSTS]
+    for c in cells:
+        print(f"# hier {c['hosts']} host(s): {c['tasks_per_s']:7.1f} tasks/s  "
+              f"claims {c['claims']}  conflicts {c['claim_conflicts']}",
+              file=sys.stderr)
+    par = measure_parity()
+    print(f"# parity: {par['parity']} (leases {par['fleet_leases']})",
+          file=sys.stderr)
+    out = {"dispatcher_loop": loop,
+           "storms": {str(k): v for k, v in storms.items()},
+           "curve": cells, "parity": par,
+           "gate": gate_measure(repeats=args.repeats)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

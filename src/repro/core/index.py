@@ -71,6 +71,16 @@ class LocationIndex:
         for u in updates:
             self.apply(u)
 
+    def apply_wire(self, triples: Iterable[Iterable]) -> None:
+        """Apply ``[executor, added, removed]`` triples as they cross the
+        fleet wire (host index replicas decode straight into this -- no
+        IndexUpdate re-tupling on the hot path)."""
+        for eid, added, removed in triples:
+            for oid in added:
+                self.insert(oid, eid)
+            for oid in removed:
+                self.remove(oid, eid)
+
     def drop_executor(self, executor: str) -> int:
         """Invalidate every entry for a released/failed executor."""
         oids = self._by_executor.pop(executor, set())
@@ -129,6 +139,13 @@ class ShardedIndex:
     def apply_batch(self, updates: Iterable[IndexUpdate]) -> None:
         for u in updates:
             self.apply(u)
+
+    def apply_wire(self, triples: Iterable[Iterable]) -> None:
+        for eid, added, removed in triples:
+            for oid in added:
+                self.insert(oid, eid)
+            for oid in removed:
+                self.remove(oid, eid)
 
     def drop_executor(self, executor: str) -> int:
         return sum(s.drop_executor(executor) for s in self._shards)

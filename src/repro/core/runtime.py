@@ -102,6 +102,49 @@ class _InputLedger:
 
 
 @dataclass
+class DispatchStats:
+    """Lightweight counters/timers on the central dispatch loop.
+
+    Mutated only under the runtime lock (or folded in from per-connection
+    wire counters at read time on the fleet), surfaced through
+    ``RunReport.dispatch_stats`` and the dispatch benchmark.  ``lock_hold_s``
+    accumulates time spent inside the runtime lock on the pump path -- the
+    quantity the central-dispatcher bottleneck (Falkon's ~1k tasks/s wall)
+    is made of."""
+
+    pump_calls: int = 0
+    dispatch_batches: int = 0      # pumps that produced >= 1 dispatch
+    dispatches: int = 0
+    max_dispatch_batch: int = 0
+    updates_applied: int = 0
+    lock_hold_s: float = 0.0
+    frames_sent: int = 0           # wire frames (fleet); 0 in-process
+    frames_recv: int = 0
+    msgs_sent: int = 0             # logical messages inside those frames
+    msgs_recv: int = 0
+    leases: int = 0                # tasks leased to hosts (hierarchical)
+    claims: int = 0                # claims accepted by the central
+    claim_conflicts: int = 0       # claims rejected (dead host / reclaim)
+
+    def as_dict(self) -> dict:
+        return {
+            "pump_calls": self.pump_calls,
+            "dispatch_batches": self.dispatch_batches,
+            "dispatches": self.dispatches,
+            "max_dispatch_batch": self.max_dispatch_batch,
+            "updates_applied": self.updates_applied,
+            "lock_hold_s": self.lock_hold_s,
+            "frames_sent": self.frames_sent,
+            "frames_recv": self.frames_recv,
+            "msgs_sent": self.msgs_sent,
+            "msgs_recv": self.msgs_recv,
+            "leases": self.leases,
+            "claims": self.claims,
+            "claim_conflicts": self.claim_conflicts,
+        }
+
+
+@dataclass
 class RuntimeLedger:
     lock: threading.Lock = field(default_factory=threading.Lock)
     bytes_local: int = 0
@@ -251,6 +294,7 @@ class DiffusionRuntime:
         self.store = store if store is not None else ObjectStore()
         self.dispatcher = Dispatcher(policy)
         self.ledger = RuntimeLedger()
+        self.stats = DispatchStats()
         self.workers: dict[str, ExecutorWorker] = {}
         # the update seam: executors send IndexUpdates here; in process the
         # channel is a synchronous callback into the (locked) batcher.  The
@@ -461,7 +505,9 @@ class DiffusionRuntime:
 
     def _pump(self) -> None:
         with self._lock:
+            t0 = time.perf_counter()
             dispatches = self.dispatcher.next_dispatches(time.monotonic())
+            self._note_pump_locked(len(dispatches), time.perf_counter() - t0)
         for d in dispatches:
             w = self.workers.get(d.executor)
             if w is None:
@@ -515,10 +561,29 @@ class DiffusionRuntime:
         """Consumer side of the update seam (same code path for in-process
         sends and for updates arriving from fleet hosts)."""
         with self._lock:
-            self._update_buf.append(upd)
-            if len(self._update_buf) >= self._update_batch:
-                self.dispatcher.apply_index_updates(self._update_buf)
-                self._update_buf = []
+            self._on_update_locked(upd)
+
+    def _on_update_locked(self, upd: IndexUpdate) -> None:
+        self._update_buf.append(upd)
+        self.stats.updates_applied += 1
+        if len(self._update_buf) >= self._update_batch:
+            self.dispatcher.apply_index_updates(self._update_buf)
+            self._update_buf = []
+
+    def _note_pump_locked(self, n_dispatches: int, hold_s: float) -> None:
+        st = self.stats
+        st.pump_calls += 1
+        st.lock_hold_s += hold_s
+        if n_dispatches:
+            st.dispatch_batches += 1
+            st.dispatches += n_dispatches
+            if n_dispatches > st.max_dispatch_batch:
+                st.max_dispatch_batch = n_dispatches
+
+    def dispatch_stats(self) -> dict:
+        """Central-loop counter snapshot for RunReport / the benchmark."""
+        with self._lock:
+            return self.stats.as_dict()
 
     def _execute(self, w: ExecutorWorker, disp: Dispatch) -> None:
         t = disp.task
@@ -546,21 +611,25 @@ class DiffusionRuntime:
         thread worker here, a remote-executor proxy on a fleet -- and the
         identity check is the membership guard for both."""
         with self._lock:
-            if self.workers.get(w.eid) is not w:
-                # this worker was removed mid-execution: executor_left already
-                # re-queued (or failed out) the task, so this attempt's
-                # outcome must not complete it a second time -- that would
-                # double-decrement _outstanding and wake wait() early while
-                # the retry is still in flight -- and its input ledger must
-                # not pollute the retry's counters (acc is dropped here)
-                return
-            acc.merge_into(t)
-            self.ledger.account_attempt(acc)
-            self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
-            if ok or t.state is TaskState.FAILED:
-                self._outstanding -= 1
-                if self._outstanding == 0:
-                    self._done.notify_all()
+            self._finish_attempt_locked(w, t, acc, ok)
+
+    def _finish_attempt_locked(self, w, t: Task, acc: _InputLedger,
+                               ok: bool) -> None:
+        if self.workers.get(w.eid) is not w:
+            # this worker was removed mid-execution: executor_left already
+            # re-queued (or failed out) the task, so this attempt's
+            # outcome must not complete it a second time -- that would
+            # double-decrement _outstanding and wake wait() early while
+            # the retry is still in flight -- and its input ledger must
+            # not pollute the retry's counters (acc is dropped here)
+            return
+        acc.merge_into(t)
+        self.ledger.account_attempt(acc)
+        self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
+        if ok or t.state is TaskState.FAILED:
+            self._outstanding -= 1
+            if self._outstanding == 0:
+                self._done.notify_all()
 
     def wait(self, timeout: float = 60.0) -> bool:
         deadline = time.monotonic() + timeout

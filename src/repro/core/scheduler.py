@@ -503,6 +503,37 @@ class Dispatcher:
                 break
         return out
 
+    # ---------------- hierarchical lease / claim (DESIGN.md §9) --------------
+    def lease_next(self) -> Optional[Task]:
+        """Pop the head-of-queue live task for leasing to a host-local
+        dispatcher.  The task leaves the wait queue (and the incremental
+        hint maps, keeping its resolved hints as ``location_hints``) but
+        is NOT bound to an executor -- the owning runtime parks it in a
+        per-host lease table until a claim arrives or the host dies."""
+        if not self.queue:
+            return None
+        t = self.queue.popleft()
+        if self._mcu:
+            t.location_hints = self._hints_tuple(self._hints_drop(t))
+        t.state = TaskState.PENDING
+        return t
+
+    def bind_claim(self, t: Task, eid: str, now: float) -> Dispatch:
+        """Reconcile a host's local claim: bind the leased task to the
+        claiming executor.  A claim may transiently over-commit ``busy``
+        past ``slots`` (the host has already started the attempt);
+        ``task_finished`` decrements through the normal path."""
+        self.n_decisions += 1
+        return self._bind(t, eid, now)
+
+    def requeue_leased(self, tasks: Iterable[Task]) -> None:
+        """Return unclaimed leased tasks (their host died or was removed)
+        to the FRONT of the wait queue in their original lease order.
+        They were never dispatched, so no attempt is charged."""
+        for t in reversed(list(tasks)):
+            t.state = TaskState.SUBMITTED
+            self._enqueue(t, front=True)
+
     def _bind(self, t: Task, eid: str, now: float) -> Dispatch:
         st = self.executors[eid]
         st.busy += 1

@@ -309,6 +309,8 @@ class RuntimeEngine:
                                       if spec.cache.enabled else 0),
                 seed=spec.seed,
                 index_update_batch=spec.index_update_batch,
+                wire_batch=spec.wire_batch,
+                local_dispatch=spec.local_dispatch,
                 task_fn_name=self.task_fn_name)
         else:
             self.runtime = DiffusionRuntime(
@@ -391,7 +393,8 @@ class RuntimeEngine:
         return build_report(
             self.spec, self.name, r, m, wall_s=wall,
             n_allocated=prov.n_allocated if prov else 0,
-            n_released=prov.n_released if prov else 0)
+            n_released=prov.n_released if prov else 0,
+            dispatch_stats=rt.dispatch_stats())
 
     def _result_view(self, t_run0: float, t_end: float) -> SimResult:
         """The runtime's observables in `SimResult` shape, with every clock

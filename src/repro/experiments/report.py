@@ -71,6 +71,9 @@ class RunReport:
     n_allocated: int                # 0 on fixed-pool runs
     n_released: int
     pool_log: tuple                 # ((t, live executors), ...) samples
+    # -- dispatcher internals (runtime only; {} on sim runs) ----------------
+    dispatch_stats: dict            # DispatchStats.as_dict(): pump counts,
+                                    # lock hold time, wire frame/msg totals
 
     # ------------------------------------------------------------------
     @classmethod
@@ -97,10 +100,12 @@ class RunReport:
         kw = dict(d)
         kw["pool_log"] = tuple(tuple(p) for p in d["pool_log"])
         kw["bytes_by_kind"] = dict(d["bytes_by_kind"])
+        kw["dispatch_stats"] = dict(d["dispatch_stats"])
         return cls(**kw)
 
     def diff(self, other: "RunReport",
-             ignore: tuple[str, ...] = IDENTITY_FIELDS + ("pool_log",),
+             ignore: tuple[str, ...] = IDENTITY_FIELDS
+             + ("pool_log", "dispatch_stats"),
              ) -> dict[str, tuple]:
         """Field-by-field comparison: {field: (self value, other value)}
         for every differing field not in ``ignore``.  Empty dict == the two
@@ -117,7 +122,8 @@ class RunReport:
 
 
 def build_report(spec, engine: str, result, metrics, *, wall_s: float,
-                 n_allocated: int = 0, n_released: int = 0) -> RunReport:
+                 n_allocated: int = 0, n_released: int = 0,
+                 dispatch_stats: Mapping | None = None) -> RunReport:
     """Assemble a RunReport from a `SimResult`(-shaped) ``result`` and the
     `RunMetrics` computed from it.  Both engine adapters funnel through
     here, which is what pins the schemas together."""
@@ -157,4 +163,5 @@ def build_report(spec, engine: str, result, metrics, *, wall_s: float,
         n_allocated=n_allocated,
         n_released=n_released,
         pool_log=tuple(tuple(p) for p in result.pool_log),
+        dispatch_stats=dict(dispatch_stats or {}),
     )

@@ -192,6 +192,12 @@ class ExperimentSpec:
     # engine knob.  hosts = 0 is the classic in-process thread pool.
     hosts: int = 0
     threads_per_host: int = 1
+    # fleet wire/dispatch shape (PR 6): frames per batch on each host
+    # connection, and hierarchical per-host local dispatch (hosts score
+    # and claim leased work against a forwarded index replica).  Both are
+    # scheduling-neutral under batch-synchronous replay (DESIGN.md §9).
+    wire_batch: int = 64
+    local_dispatch: bool = False
 
     def __post_init__(self) -> None:
         DispatchPolicy(self.policy)         # raises on unknown value
@@ -210,6 +216,14 @@ class ExperimentSpec:
         if self.hosts == 0 and self.threads_per_host != 1:
             raise ValueError("threads_per_host only applies to fleet runs; "
                              "set hosts > 0 (or leave threads_per_host at 1)")
+        if self.wire_batch < 1:
+            raise ValueError("wire_batch must be >= 1")
+        if self.hosts == 0 and self.wire_batch != 64:
+            raise ValueError("wire_batch only applies to fleet runs; "
+                             "set hosts > 0 (or leave wire_batch at 64)")
+        if self.hosts == 0 and self.local_dispatch:
+            raise ValueError("local_dispatch only applies to fleet runs; "
+                             "set hosts > 0")
         if self.hosts > 0 and self.cluster.n_nodes != \
                 self.hosts * self.threads_per_host:
             raise ValueError(
@@ -367,17 +381,22 @@ ALIASES: dict[str, tuple[Optional[str], Optional[str]]] = {
     # reaches a FleetRuntime, and hosts>0 hard-errors on the simulator.
     "hosts":                   (None, "hosts"),
     "threads_per_host":        (None, "threads_per_host"),
+    "wire_batch":              (None, "wire_batch"),
+    "local_dispatch":          (None, "local_dispatch"),
 }
 
 #: spec paths whose runtime-side alias is a FleetRuntime ctor kwarg
-FLEET_PATHS = frozenset({"hosts", "threads_per_host"})
+FLEET_PATHS = frozenset({"hosts", "threads_per_host", "wire_batch",
+                         "local_dispatch"})
 
 #: FleetRuntime ctor kwargs that deliberately have no spec field: the task
-#: callable registry name and transport/liveness tuning are operational
-#: knobs of a concrete deployment, not part of the experiment's identity.
+#: callable registry name and transport/liveness/deployment tuning are
+#: operational knobs of a concrete deployment, not part of the
+#: experiment's identity (lease_depth shapes host-side queue depth, not
+#: placement under replay; bind_host is the multi-machine seam).
 FLEET_OPERATIONAL_KWARGS = frozenset({
     "task_fn_name", "codec", "heartbeat_interval_s", "heartbeat_timeout_s",
-    "spawn_timeout_s"})
+    "spawn_timeout_s", "lease_depth", "bind_host"})
 
 #: raw engine-side default disagreements the spec layer papers over by
 #: always passing explicit values.  check_alias_map() verifies these are

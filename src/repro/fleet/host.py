@@ -16,10 +16,17 @@ One host = one OS process (its own GIL -- the whole point) running:
     executor here (the paper's GridFTP-analogue cache-to-cache path);
   * a heartbeat thread.
 
-The host holds NO scheduling state: placement, hints, retries, membership
-and all metrics stay in the central Dispatcher/LocationIndex stack.  Task
-callables cannot cross the wire; hosts resolve ``task_fn_name`` against the
-:data:`TASK_FNS` registry at startup (shape-only tasks need none).
+In central mode the host holds NO scheduling state: placement, hints,
+retries, membership and all metrics stay in the central Dispatcher/
+LocationIndex stack.  With ``local_dispatch`` (DESIGN.md §9) the host
+additionally keeps a loosely-coherent `ShardedIndex` *replica* (fed by
+``index`` frames the central forwards) plus a leased slice of the wait
+queue: idle executors score leased tasks against the replica, claim the
+best match upstream, and run it -- the central Dispatcher stays the only
+authority (it reconciles every claim; unclaimed leases of a dead host
+re-queue centrally).  Task callables cannot cross the wire; hosts resolve
+``task_fn_name`` against the :data:`TASK_FNS` registry at startup
+(shape-only tasks need none).
 
 The store "replica" stands in for the paper's shared filesystem (GPFS):
 equally reachable from every node, so each host holds a local copy seeded
@@ -32,7 +39,8 @@ import threading
 from typing import Any, Callable, Optional
 
 from repro.core.cache import EvictionPolicy
-from repro.core.channel import ChannelClosed
+from repro.core.channel import BatchingChannel, ChannelClosed
+from repro.core.index import ShardedIndex
 from repro.core.objects import DataObject
 from repro.core.runtime import CacheExecutorBase, _wants_kwargs
 
@@ -130,13 +138,14 @@ class PeerClient:
 class PeerServer(threading.Thread):
     """Serves this host's executor caches to other hosts."""
 
-    def __init__(self, host: "FleetHost", codec: str) -> None:
+    def __init__(self, host: "FleetHost", codec: str,
+                 bind_host: str = "127.0.0.1") -> None:
         super().__init__(daemon=True, name="peer-server")
         self.host = host
         self.codec = codec
         self.sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self.sock.bind(("127.0.0.1", 0))
+        self.sock.bind((bind_host, 0))
         self.sock.listen(16)
         self.port = self.sock.getsockname()[1]
         self._stop = threading.Event()
@@ -195,12 +204,16 @@ class HostExecutor(CacheExecutorBase):
 
     # -- task loop ----------------------------------------------------------
     def _run(self) -> None:
+        # announce readiness before blocking on the inbox: under
+        # local_dispatch an idle executor is what pulls leased work
+        self.host.executor_ready(self)
         while self.alive:
             try:
                 msg = self.inbox.recv()
             except ChannelClosed:
                 return
             self._execute(msg)
+            self.host.executor_ready(self)
 
     def _admit(self, obj: DataObject, payload: Any) -> None:
         added, removed = self.cache_admit(obj, payload)
@@ -268,15 +281,19 @@ class HostExecutor(CacheExecutorBase):
 
 class FleetHost:
     def __init__(self, central: tuple[str, int], host_id: str, codec: str,
-                 task_fn_name: Optional[str], hb_interval_s: float) -> None:
+                 task_fn_name: Optional[str], hb_interval_s: float,
+                 bind_host: str = "127.0.0.1", wire_batch: int = 64,
+                 local_dispatch: bool = False) -> None:
         self.host_id = host_id
         self.codec = codec
         self.task_fn = resolve_task_fn(task_fn_name)
         self.hb_interval_s = hb_interval_s
+        self.bind_host = bind_host
+        self.local_dispatch = local_dispatch
         self.store: dict[str, tuple[DataObject, Any]] = {}
         self.executors: dict[str, HostExecutor] = {}
         self.peers = PeerClient(codec)
-        self.peer_server = PeerServer(self, codec)
+        self.peer_server = PeerServer(self, codec, bind_host)
         sock = socket.create_connection(central, timeout=30.0)
         # drop the connect timeout: it would otherwise persist on the
         # socket and turn any 30s dispatch lull into a phantom
@@ -284,30 +301,111 @@ class FleetHost:
         sock.settimeout(None)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.up = SocketChannel(sock, codec)   # both directions of the pair
+        # all upstream traffic funnels through one batcher so wire order
+        # is exactly buffer order: an attempt's updates always precede its
+        # done, and a claim always precedes its attempt's first update
+        self.out = BatchingChannel(self.up, max_batch=wire_batch)
         self._stop = threading.Event()
+        # -- local-dispatch state (DESIGN.md §9) ----------------------------
+        self.replica = ShardedIndex()          # forwarded central index view
+        self.routes: dict[str, list] = {}      # eid -> [peer_host, peer_port]
+        self._sched_lock = threading.Lock()
+        self._lease: list[dict] = []           # leased task descriptors
+        self._idle: set[str] = set()           # eids waiting for lease work
 
     # -- upstream (the update channel of the pair) --------------------------
     def send_update(self, eid: str, added, removed) -> None:
+        if self.local_dispatch:
+            # short-circuit our own admissions into the replica: the central
+            # forwards them back eventually, but fresher hints are free here
+            # (re-application is idempotent -- the index is set-valued)
+            self.replica.apply_wire([[eid, list(added), list(removed)]])
         try:
-            self.up.send({"t": "updates", "eid": eid,
-                          "added": list(added), "removed": list(removed)})
+            # buffered: the matching done (flush=True) bounds the delay
+            self.out.send({"t": "updates", "eid": eid,
+                           "added": list(added), "removed": list(removed)})
         except ChannelClosed:
             self._stop.set()
 
     def send_done(self, eid: str, tid: str, ok: bool, led: dict,
                   err: Optional[str]) -> None:
         try:
-            self.up.send({"t": "done", "eid": eid, "tid": tid, "ok": ok,
-                          "ledger": led, "error": err})
+            self.out.send({"t": "done", "eid": eid, "tid": tid, "ok": ok,
+                           "ledger": led, "error": err}, flush=True)
         except ChannelClosed:
             self._stop.set()
 
     def _heartbeat(self) -> None:
         while not self._stop.wait(self.hb_interval_s):
             try:
-                self.up.send({"t": "hb", "host_id": self.host_id})
+                # flushing here bounds buffered-update staleness to one
+                # heartbeat interval even on a host with no completions
+                self.out.send({"t": "hb", "host_id": self.host_id},
+                              flush=True)
             except ChannelClosed:
                 return
+
+    # -- local dispatch (lease pool -> idle executors) ----------------------
+    def executor_ready(self, ex: HostExecutor) -> None:
+        """Executor-thread callback on start and after every attempt: pull
+        the best-matching leased task, or park in the idle set."""
+        if not self.local_dispatch:
+            return
+        with self._sched_lock:
+            if not ex.alive or not ex.inbox.empty():
+                # centrally-dispatched work is already queued; run it first
+                self._idle.discard(ex.eid)
+                return
+            ent = self._pick_locked(ex.eid)
+            if ent is None:
+                self._idle.add(ex.eid)
+                return
+            self._idle.discard(ex.eid)
+            msg = self._task_msg(ex.eid, ent)
+        # the claim goes upstream through the SAME outbox the attempt's
+        # updates/done will use, BEFORE the task enters the inbox: wire
+        # order therefore shows claim -> updates -> done, and the central
+        # binds the lease before it can see the completion
+        try:
+            self.out.send({"t": "claim", "eid": ex.eid, "tid": msg["tid"]},
+                          flush=True)
+        except ChannelClosed:
+            self._stop.set()
+            return
+        try:
+            ex.inbox.send(msg)
+        except ChannelClosed:
+            pass
+
+    def _pick_locked(self, eid: str) -> Optional[dict]:
+        """Best lease-pool entry for ``eid`` by replica-cached input bytes
+        (the host-local mirror of max-compute-util's byte score); ties break
+        toward lease order.  Removes and returns the winner."""
+        best_i, best_score = -1, -1
+        for i, ent in enumerate(self._lease):
+            score = 0
+            for oid, size in ent["inputs"]:
+                if eid in self.replica.lookup(oid):
+                    score += int(size)
+            if score > best_score:
+                best_i, best_score = i, score
+        if best_i < 0:
+            return None
+        return self._lease.pop(best_i)
+
+    def _task_msg(self, eid: str, ent: dict) -> dict:
+        hints: dict[str, list] = {}
+        routes: dict[str, list] = {}
+        for oid, _size in ent["inputs"]:
+            locs = self.replica.lookup(oid)
+            if locs:
+                hints[oid] = sorted(locs)
+                for peer in locs:
+                    if peer not in self.executors and peer in self.routes:
+                        routes[peer] = self.routes[peer]
+        return {"t": "task", "eid": eid, "tid": ent["tid"],
+                "inputs": ent["inputs"], "outputs": ent["outputs"],
+                "hints": hints, "routes": routes}
 
     # -- dispatch loop ------------------------------------------------------
     def run(self) -> None:
@@ -316,6 +414,7 @@ class FleetHost:
         self.peer_server.start()
         self.up.send({"t": "hello", "host_id": self.host_id,
                       "pid": os.getpid(),
+                      "peer_host": self.bind_host,
                       "peer_port": self.peer_server.port})
         threading.Thread(target=self._heartbeat, daemon=True,
                          name="heartbeat").start()
@@ -333,17 +432,42 @@ class FleetHost:
                 ex.stop()
             self.peer_server.stop()
             self.peers.close()
-            self.up.close()
+            try:
+                self.out.close()   # flush buffered updates, then close up
+            except ChannelClosed:
+                self.up.close()
 
     def _handle(self, msg: dict) -> bool:
         kind = msg["t"]
-        if kind == "task":
+        if kind == "batch":
+            for m in msg["msgs"]:
+                if not self._handle(m):
+                    return False
+        elif kind == "task":
             ex = self.executors.get(msg["eid"])
             if ex is not None:
+                if self.local_dispatch:
+                    with self._sched_lock:
+                        self._idle.discard(msg["eid"])
                 try:
                     ex.inbox.send(msg)
                 except ChannelClosed:
                     pass
+        elif kind == "lease":
+            with self._sched_lock:
+                self._lease.extend(msg["tasks"])
+                ready = [self.executors[eid] for eid in sorted(self._idle)
+                         if eid in self.executors]
+            for ex in ready:
+                self.executor_ready(ex)
+        elif kind == "index":
+            self.replica.apply_wire(msg["updates"])
+        elif kind == "index_drop":
+            for eid in msg["eids"]:
+                self.replica.drop_executor(eid)
+                self.routes.pop(eid, None)
+        elif kind == "peers":
+            self.routes.update(msg["routes"])
         elif kind == "put":
             obj = DataObject(msg["oid"], int(msg["size"]))
             self.store[obj.oid] = (obj, msg["payload"])
@@ -362,8 +486,10 @@ class FleetHost:
 
 
 def host_main(central_host: str, central_port: int, host_id: str,
-              codec: str, task_fn_name: Optional[str],
-              hb_interval_s: float) -> None:
+              codec: str = "auto", task_fn_name: Optional[str] = None,
+              hb_interval_s: float = 0.25, bind_host: str = "127.0.0.1",
+              wire_batch: int = 64, local_dispatch: bool = False) -> None:
     """Entry point for the spawned host process (see manager.py)."""
     FleetHost((central_host, central_port), host_id, codec,
-              task_fn_name, hb_interval_s).run()
+              task_fn_name, hb_interval_s, bind_host=bind_host,
+              wire_batch=wire_batch, local_dispatch=local_dispatch).run()

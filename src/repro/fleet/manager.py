@@ -46,6 +46,10 @@ class HostHandle:
         self.eids: list[str] = []        # executors spawned on this host
         self.last_hb = time.monotonic()
         self.dead = False                # set under runtime._lock
+        self.frames_sent = 0             # wire frames down to this host
+        self.msgs_sent = 0               # logical messages inside them
+        self.frames_recv = 0             # frames up from this host (not hb)
+        self.msgs_recv = 0
 
     def send(self, msg: Any) -> None:
         """Dispatch-channel send; a broken pipe is not an error here -- the
@@ -55,7 +59,21 @@ class HostHandle:
         try:
             self.chan.send(msg)
         except ChannelClosed:
-            pass
+            return
+        self.frames_sent += 1
+        self.msgs_sent += (len(msg["msgs"])
+                           if isinstance(msg, dict) and msg.get("t") == "batch"
+                           else 1)
+
+    def send_batch(self, msgs: list, max_batch: int = 64) -> None:
+        """Send many messages as bounded batch frames, preserving order.
+        A chunk of one goes bare, so ``max_batch=1`` reproduces the
+        one-frame-per-message wire exactly."""
+        max_batch = max(int(max_batch), 1)
+        for i in range(0, len(msgs), max_batch):
+            chunk = msgs[i:i + max_batch]
+            self.send(chunk[0] if len(chunk) == 1
+                      else {"t": "batch", "msgs": chunk})
 
 
 class HostManager:
@@ -63,13 +81,19 @@ class HostManager:
                  task_fn_name: Optional[str] = None,
                  hb_interval_s: float = 0.25,
                  hb_timeout_s: float = 3.0,
-                 spawn_timeout_s: float = 60.0) -> None:
+                 spawn_timeout_s: float = 60.0,
+                 bind_host: str = "127.0.0.1",
+                 wire_batch: int = 64,
+                 local_dispatch: bool = False) -> None:
         self.rt = rt
         self.codec = _resolve_codec(codec)
         self.task_fn_name = task_fn_name
         self.hb_interval_s = hb_interval_s
         self.hb_timeout_s = hb_timeout_s
         self.spawn_timeout_s = spawn_timeout_s
+        self.bind_host = bind_host
+        self.wire_batch = wire_batch
+        self.local_dispatch = local_dispatch
         self._ctx = multiprocessing.get_context("spawn")
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -78,7 +102,7 @@ class HostManager:
         self._next_host = 0
         self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self.listener.bind(("127.0.0.1", 0))
+        self.listener.bind((bind_host, 0))
         self.listener.listen(64)
         self.addr = self.listener.getsockname()
         threading.Thread(target=self._accept_loop, daemon=True,
@@ -100,7 +124,8 @@ class HostManager:
         proc = self._ctx.Process(
             target=host_main,
             args=(self.addr[0], self.addr[1], host_id, self.codec,
-                  self.task_fn_name, self.hb_interval_s),
+                  self.task_fn_name, self.hb_interval_s, self.bind_host,
+                  self.wire_batch, self.local_dispatch),
             daemon=True, name=f"fleet-{host_id}")
         proc.start()
         if not slot["event"].wait(self.spawn_timeout_s):
@@ -112,7 +137,10 @@ class HostManager:
         hello = slot["hello"]
         handle = HostHandle(host_id, proc,
                             SocketChannel(slot["sock"], self.codec),
-                            peer_host="127.0.0.1",
+                            # the host advertises the address its peer
+                            # server bound (multi-machine seam); older
+                            # hellos without it mean shared-loopback
+                            peer_host=hello.get("peer_host") or "127.0.0.1",
                             peer_port=int(hello["peer_port"]))
         with self._lock:
             self.handles[host_id] = handle
@@ -162,14 +190,19 @@ class HostManager:
                     self.rt._on_host_dead(handle)
                 return
             kind = msg["t"]
+            handle.last_hb = time.monotonic()
             if kind == "hb":
-                handle.last_hb = time.monotonic()
-            elif kind == "updates":
-                handle.last_hb = time.monotonic()
-                self.rt._on_remote_updates(handle, msg)
-            elif kind == "done":
-                handle.last_hb = time.monotonic()
-                self.rt._on_remote_done(handle, msg)
+                continue
+            handle.frames_recv += 1
+            if kind == "batch":
+                # unwrap in list order: exactly equivalent to the messages
+                # arriving as consecutive frames (ordering contract)
+                inner = msg["msgs"]
+                handle.msgs_recv += len(inner)
+                self.rt._on_remote_batch(handle, inner)
+            else:
+                handle.msgs_recv += 1
+                self.rt._on_remote_batch(handle, [msg])
 
     def _monitor_loop(self) -> None:
         period = max(self.hb_interval_s / 2, 0.05)

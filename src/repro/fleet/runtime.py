@@ -35,6 +35,7 @@ executors are ALL idle are offered for release.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Iterable, Optional
 
@@ -60,7 +61,9 @@ class _RemoteExecutor:
         self.host = host
         self.rt = rt
 
-    def dispatch(self, disp: Dispatch) -> None:
+    def task_msg(self, disp: Dispatch) -> dict:
+        """Serialise one Dispatch to its wire message (the pump collects
+        these per host and ships them as bounded batch frames)."""
         t = disp.task
         routes: dict[str, list] = {}
         for locs in disp.hints.values():
@@ -71,7 +74,7 @@ class _RemoteExecutor:
                 if isinstance(w, _RemoteExecutor) and w.host is not self.host:
                     routes[peer] = [w.host.peer_host, w.host.peer_port]
         sizes = self.rt.dispatcher.sizes
-        self.host.send({
+        return {
             "t": "task",
             "eid": self.eid,
             "tid": t.tid,
@@ -79,7 +82,10 @@ class _RemoteExecutor:
             "outputs": [[ob.oid, ob.size_bytes] for ob in t.outputs],
             "hints": {oid: list(locs) for oid, locs in disp.hints.items()},
             "routes": routes,
-        })
+        }
+
+    def dispatch(self, disp: Dispatch) -> None:
+        self.host.send(self.task_msg(disp))
 
     def stop(self) -> None:
         """Nothing to join centrally; host teardown stops the thread."""
@@ -101,22 +107,41 @@ class FleetRuntime(DiffusionRuntime):
         heartbeat_interval_s: float = 0.25,
         heartbeat_timeout_s: float = 3.0,
         spawn_timeout_s: float = 60.0,
+        wire_batch: int = 64,
+        local_dispatch: bool = False,
+        lease_depth: int = 2,
+        bind_host: str = "127.0.0.1",
     ) -> None:
-        if hosts < 1:
-            raise ValueError("need hosts >= 1")
+        if hosts < 0:
+            # hosts=0 builds an empty fleet (unit tests drive the receive
+            # path directly; add_host() grows it for real)
+            raise ValueError("need hosts >= 0")
         if threads_per_host < 1:
             raise ValueError("need threads_per_host >= 1")
+        if wire_batch < 1:
+            raise ValueError("need wire_batch >= 1")
+        if lease_depth < 1:
+            raise ValueError("need lease_depth >= 1")
         self.threads_per_host = threads_per_host
+        self.wire_batch = wire_batch
+        self.local_dispatch = local_dispatch
+        self.lease_depth = lease_depth
         super().__init__(n_executors=0, policy=policy,
                          cache_policy=cache_policy,
                          cache_capacity_bytes=cache_capacity_bytes,
                          store=store, seed=seed,
                          index_update_batch=index_update_batch)
+        #: host_id -> {tid: Task} parked on a lease, awaiting claim/reclaim
+        self._leases: dict[str, dict[str, Any]] = {}
+        #: applied index updates pending forward to host replicas
+        self._fwd_buf: list[list] = []
         self.manager = HostManager(
             self, codec=codec, task_fn_name=task_fn_name,
             hb_interval_s=heartbeat_interval_s,
             hb_timeout_s=heartbeat_timeout_s,
-            spawn_timeout_s=spawn_timeout_s)
+            spawn_timeout_s=spawn_timeout_s,
+            bind_host=bind_host, wire_batch=wire_batch,
+            local_dispatch=local_dispatch)
         try:
             for _ in range(hosts):
                 self.add_host()
@@ -153,6 +178,14 @@ class FleetRuntime(DiffusionRuntime):
                 self.dispatcher.executor_joined(eid, time.monotonic())
                 self.pool_log.append((time.monotonic() - self._t0,
                                       len(self.workers)))
+        if self.local_dispatch:
+            # every host needs routes to every executor so locally-built
+            # hints can resolve to cross-host peer fetches
+            with self._lock:
+                routes = {eid: [w.host.peer_host, w.host.peer_port]
+                          for eid, w in self.workers.items()
+                          if isinstance(w, _RemoteExecutor)}
+            self.manager.broadcast({"t": "peers", "routes": routes})
         self._pump()
         return handle.host_id
 
@@ -168,6 +201,8 @@ class FleetRuntime(DiffusionRuntime):
             handle.dead = True
             self._drop_host_locked(handle, failed=False)
         self.manager.reap(handle, graceful=True)
+        if self.local_dispatch:
+            self.manager.broadcast({"t": "index_drop", "eids": handle.eids})
         self._pump()
 
     def _drop_host_locked(self, handle: HostHandle, failed: bool) -> None:
@@ -177,6 +212,20 @@ class FleetRuntime(DiffusionRuntime):
             self.pool_log.append((time.monotonic() - self._t0,
                                   len(self.workers)))
             self._deregister_locked(eid, failed)
+        # unclaimed leases return to the queue front in lease order; any
+        # claim frame still in flight from this host will be rejected (the
+        # handle is dead) and its eventual done dropped by the membership
+        # guard, so the re-queued task runs exactly once
+        leased = self._leases.pop(handle.host_id, None)
+        if leased:
+            self.dispatcher.requeue_leased(leased.values())
+        # fold the dying connection's wire counters into the runtime's
+        # stats so dispatch_stats() keeps counting retired hosts (dead
+        # handles are excluded from the live fold)
+        self.stats.frames_sent += handle.frames_sent
+        self.stats.msgs_sent += handle.msgs_sent
+        self.stats.frames_recv += handle.frames_recv
+        self.stats.msgs_recv += handle.msgs_recv
 
     def _on_host_dead(self, handle: HostHandle) -> None:
         """Receiver-EOF / monitor callback: requeue the dead host's
@@ -188,6 +237,11 @@ class FleetRuntime(DiffusionRuntime):
             handle.dead = True
             self._drop_host_locked(handle, failed=True)
         self.manager.reap(handle)
+        if self.local_dispatch:
+            # surviving replicas must forget the dead executors' entries
+            # (a late resurrection there costs a failed peer fetch, not
+            # correctness, but the drop keeps local scores honest)
+            self.manager.broadcast({"t": "index_drop", "eids": handle.eids})
         self._pump()
 
     def add_executor(self) -> str:
@@ -233,8 +287,120 @@ class FleetRuntime(DiffusionRuntime):
         self.manager.broadcast({"t": "put", "oid": obj.oid,
                                 "size": obj.size_bytes, "payload": payload})
 
+    # -- central dispatch loop (batched wire) --------------------------------
+    def _pump(self) -> None:
+        """Fleet pump: one lock pass collects dispatches, lease grants and
+        forwarded index updates; outside the lock everything is grouped per
+        host and shipped as bounded batch frames (wire_batch=1 degenerates
+        to the one-frame-per-message wire)."""
+        with self._lock:
+            t0 = time.perf_counter()
+            now = time.monotonic()
+            dispatches = self.dispatcher.next_dispatches(now)
+            # leases engage only on backlog: a non-empty queue after
+            # next_dispatches means no executor is idle, so under
+            # batch-synchronous replay (B <= pool drains each chunk in one
+            # pump against an all-idle pool) leases NEVER engage and
+            # placement stays bit-identical to central dispatch
+            lease_out = (self._lease_locked(now)
+                         if self.local_dispatch else [])
+            fwd, self._fwd_buf = self._fwd_buf, []
+            self._note_pump_locked(len(dispatches), time.perf_counter() - t0)
+        per_host: dict[str, tuple[HostHandle, list]] = {}
+        if fwd:
+            for handle in self.manager.live_handles():
+                per_host[handle.host_id] = (
+                    handle, [{"t": "index", "updates": fwd}])
+        orphans = []
+        for d in dispatches:
+            w = self.workers.get(d.executor)
+            if w is None:
+                orphans.append(d)
+            elif isinstance(w, _RemoteExecutor):
+                ent = per_host.get(w.host.host_id)
+                if ent is None:
+                    ent = per_host[w.host.host_id] = (w.host, [])
+                ent[1].append(w.task_msg(d))
+            else:   # pragma: no cover - fleets hold only remote executors
+                w.dispatch(d)
+        for handle, msg in lease_out:
+            ent = per_host.get(handle.host_id)
+            if ent is None:
+                ent = per_host[handle.host_id] = (handle, [])
+            ent[1].append(msg)
+        for handle, msgs in per_host.values():
+            handle.send_batch(msgs, self.wire_batch)
+        for d in orphans:
+            with self._lock:
+                self.dispatcher.task_finished(d.task, time.monotonic(),
+                                              ok=False)
+
+    def _lease_locked(self, now: float) -> list[tuple[HostHandle, list]]:
+        """Top up each live host's lease pool from the queue head (up to
+        ``lease_depth * threads_per_host`` outstanding per host); returns
+        the per-host lease messages to ship."""
+        if not self.dispatcher.queue:
+            return []
+        out: list[tuple[HostHandle, list]] = []
+        sizes = self.dispatcher.sizes
+        cap = self.lease_depth * self.threads_per_host
+        for handle in self.manager.live_handles():
+            pool = self._leases.setdefault(handle.host_id, {})
+            granted = []
+            while len(pool) < cap:
+                t = self.dispatcher.lease_next()
+                if t is None:
+                    break
+                pool[t.tid] = t
+                self.stats.leases += 1
+                granted.append({
+                    "tid": t.tid,
+                    "inputs": [[oid, sizes.get(oid, 0)] for oid in t.inputs],
+                    "outputs": [[ob.oid, ob.size_bytes]
+                                for ob in t.outputs]})
+            if granted:
+                out.append((handle, {"t": "lease", "tasks": granted}))
+            if not self.dispatcher.queue:
+                break
+        return out
+
+    def _on_update_locked(self, upd) -> None:
+        super()._on_update_locked(upd)
+        if self.local_dispatch:
+            # queue the applied update for forwarding to host replicas on
+            # the next pump (hosts apply them loosely-coherently, exactly
+            # like the central index itself)
+            self._fwd_buf.append([upd.executor, list(upd.added),
+                                  list(upd.removed)])
+
     # -- update-channel consumers (called by the per-host receivers) --------
+    def _on_remote_batch(self, handle: HostHandle, msgs: list) -> None:
+        """Apply one frame's messages in wire order under ONE lock
+        acquisition, then pump once if anything completed -- the receive-
+        side half of the batching win (the send side cut the frame count;
+        this cuts lock acquisitions and pump passes per completion storm)."""
+        need_pump = False
+        with self._lock:
+            for msg in msgs:
+                kind = msg["t"]
+                if kind == "updates":
+                    self._remote_update_locked(handle, msg)
+                elif kind == "done":
+                    self._remote_done_locked(handle, msg)
+                    need_pump = True
+                elif kind == "claim":
+                    self._remote_claim_locked(handle, msg)
+                # hb riding in a batch already refreshed handle.last_hb
+        if need_pump:
+            self._pump()
+
     def _on_remote_updates(self, handle: HostHandle, msg: dict) -> None:
+        self._on_remote_batch(handle, [msg])
+
+    def _on_remote_done(self, handle: HostHandle, msg: dict) -> None:
+        self._on_remote_batch(handle, [msg])
+
+    def _remote_update_locked(self, handle: HostHandle, msg: dict) -> None:
         from repro.core.index import IndexUpdate
 
         w = self.workers.get(msg["eid"])
@@ -244,10 +410,11 @@ class FleetRuntime(DiffusionRuntime):
             # dropped with it, and a late update must not resurrect
             # locations for an executor that can never rejoin
             return
-        self._emit(IndexUpdate(msg["eid"], added=tuple(msg["added"]),
-                               removed=tuple(msg["removed"])))
+        self._on_update_locked(IndexUpdate(msg["eid"],
+                                           added=tuple(msg["added"]),
+                                           removed=tuple(msg["removed"])))
 
-    def _on_remote_done(self, handle: HostHandle, msg: dict) -> None:
+    def _remote_done_locked(self, handle: HostHandle, msg: dict) -> None:
         t = self.dispatcher.tasks.get(msg["tid"])
         w = self.workers.get(msg["eid"])
         if t is None or w is None:
@@ -266,8 +433,40 @@ class FleetRuntime(DiffusionRuntime):
             # results/payloads stay host-side; the central clock brackets
             # the attempt at dispatch..completion for the report's makespan
             t.start_time = t.dispatch_time
-        self._finish_attempt(w, t, acc, msg["ok"])
-        self._pump()
+        self._finish_attempt_locked(w, t, acc, msg["ok"])
+
+    def _remote_claim_locked(self, handle: HostHandle, msg: dict) -> None:
+        """Reconcile a host's local claim against its lease pool.  Every
+        conflict path falls back to central authority: the lease was
+        already reclaimed (host declared dead mid-flight) or the claiming
+        executor is no longer a member -- in both cases the claim is
+        refused here and the attempt's eventual done is dropped by the
+        membership guard, while the re-queued task runs centrally."""
+        w = self.workers.get(msg["eid"])
+        if (handle.dead or not isinstance(w, _RemoteExecutor)
+                or w.host is not handle):
+            self.stats.claim_conflicts += 1
+            return
+        pool = self._leases.get(handle.host_id)
+        t = pool.pop(msg["tid"], None) if pool else None
+        if t is None:
+            self.stats.claim_conflicts += 1
+            return
+        self.dispatcher.bind_claim(t, msg["eid"], time.monotonic())
+        self.stats.claims += 1
+
+    def dispatch_stats(self) -> dict:
+        """Central counters plus the wire counters of live connections
+        (retired hosts were folded into ``stats`` at drop time)."""
+        live = self.manager.live_handles()
+        with self._lock:
+            d = self.stats.as_dict()
+            for h in live:
+                d["frames_sent"] += h.frames_sent
+                d["msgs_sent"] += h.msgs_sent
+                d["frames_recv"] += h.frames_recv
+                d["msgs_recv"] += h.msgs_recv
+        return d
 
     # -- lifecycle ----------------------------------------------------------
     def shutdown(self) -> None:
@@ -322,7 +521,9 @@ def slow_task(payloads: dict) -> int:
 #: the paper testbed's single-node disk read rate, halved -- a slower
 #: simulated disk makes bench runs sleep-dominated, so the measured
 #: scaling curve survives this container's CPU-share throttling.
-BENCH_DISK_BW = 16 * 10**6
+#: ``REPRO_BENCH_DISK_BW`` overrides it (inherited by spawned hosts, so a
+#: bench can deepen dwell without shipping proportionally larger payloads).
+BENCH_DISK_BW = float(os.environ.get("REPRO_BENCH_DISK_BW") or 16 * 10**6)
 
 
 def io_dwell_task(payloads: dict) -> int:

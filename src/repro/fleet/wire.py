@@ -26,6 +26,15 @@ Tuples are encoded as lists (consumers re-tuple where the runtime cares).
 the tests exercise both by forcing ``codec="json"``.  Both ends of a
 connection must agree, so the codec is fixed per fleet: the central
 process picks it and passes it to every host at spawn time.
+
+Batched frames (DESIGN.md §9)
+-----------------------------
+A frame may carry one logical message or a bounded batch wrapper
+``{"t": "batch", "msgs": [...]}``; receivers unwrap and process the inner
+messages in list order, so a batch is exactly equivalent to its messages
+sent as consecutive frames -- the updates-before-done ordering contract
+holds within and across batches because batching (core.channel.
+BatchingChannel / HostHandle.send_batch) never reorders the buffer.
 """
 from __future__ import annotations
 
@@ -205,6 +214,7 @@ class SocketChannel:
         self._send_lock = threading.Lock()
         self._closed = False
         self.bytes_sent = 0
+        self.frames_sent = 0
 
     def send(self, msg: Any) -> None:
         from repro.core.channel import ChannelClosed
@@ -214,6 +224,7 @@ class SocketChannel:
         try:
             with self._send_lock:
                 self.bytes_sent += send_msg(self.sock, msg, self.codec)
+                self.frames_sent += 1
         except (PeerGone, ConnectionError, OSError) as e:
             raise ChannelClosed(str(e)) from None
 

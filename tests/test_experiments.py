@@ -194,6 +194,24 @@ class TestEngineKnobRejection:
         # ...but the runtime accepts it
         RuntimeEngine().prepare(spec).shutdown()
 
+    def test_batching_knobs_validate_against_layout(self):
+        """wire_batch / local_dispatch are wire-level knobs: meaningless
+        off the fleet (hosts == 0) and bounded below at 1."""
+        with pytest.raises(ValueError, match="wire_batch"):
+            with_overrides(small_spec(), {"wire_batch": 0})
+        with pytest.raises(ValueError, match="fleet"):
+            with_overrides(small_spec(), {"wire_batch": 8})
+        with pytest.raises(ValueError, match="fleet"):
+            with_overrides(small_spec(), {"local_dispatch": True})
+        # a fleet layout accepts both (constructed only -- no spawn here)
+        spec = small_spec(n_nodes=4, hosts=2, threads_per_host=2)
+        spec = with_overrides(spec, {"wire_batch": 8,
+                                     "local_dispatch": True})
+        assert spec.wire_batch == 8 and spec.local_dispatch is True
+        # the knobs survive the strict to_dict/from_dict round trip
+        back = ExperimentSpec.from_dict(spec.to_dict())
+        assert back.wire_batch == 8 and back.local_dispatch is True
+
 
 # ---------------------------------------------------------------------------
 # bit-identity vs. the legacy construction paths
@@ -345,6 +363,19 @@ class TestRunReport:
             d = rep.as_dict()
             d.pop("cache_hit_ratio")
             RunReport.from_dict(d)
+
+    def test_report_dispatch_stats_round_trip_and_diff_ignore(self):
+        """dispatch_stats is carried, survives serialization, and -- like
+        pool_log -- is excluded from diff() so wire-counter noise never
+        breaks replay-parity checks."""
+        rep = run_experiment(small_spec(n_tasks=50), engine="sim")
+        assert rep.dispatch_stats == {}          # sim has no wire
+        d = rep.as_dict()
+        d["dispatch_stats"] = {"frames_sent": 9, "msgs_sent": 40,
+                               "leases": 3, "claims": 2}
+        back = RunReport.from_dict(json.loads(json.dumps(d)))
+        assert back.dispatch_stats["msgs_sent"] == 40
+        assert back.diff(rep) == {}              # ignored by diff
 
     def test_trace_binding_matches_generator(self, tmp_path):
         gen_spec = small_spec(n_tasks=60)

@@ -363,3 +363,102 @@ class TestWholeHostProvisioning:
         assert rep.n_allocated % 2 == 0        # whole hosts only
         assert rep.peak_executors % 2 == 0
         assert rep.peak_executors > 2
+
+
+# --------------------------------------------------------------------------
+# hierarchical dispatch (PR 6): local claims, lease reclaim, replay parity
+# --------------------------------------------------------------------------
+
+class TestHierarchicalDispatch:
+    def test_local_dispatch_end_to_end_with_claims(self):
+        """A deep backlog makes the central grant lease slices; hosts score
+        and claim work locally, and every claim reconciles centrally."""
+        rt = FleetRuntime(hosts=2, threads_per_host=2, local_dispatch=True,
+                          task_fn_name="repro.fleet.runtime:fleet_task")
+        try:
+            _put_all(rt)
+            rt.submit(Task(inputs=(f"o{i % 12}",)) for i in range(120))
+            assert rt.wait(60)
+            d = rt.dispatcher
+            assert len(d.completed) == 120 and not d.failed
+            st = rt.dispatch_stats()
+            assert st["leases"] > 0 and st["claims"] > 0
+            assert st["claims"] + st["claim_conflicts"] <= st["leases"]
+            _conservation(rt)
+        finally:
+            rt.shutdown()
+
+    def test_sigkill_host_with_outstanding_leases_drains(self):
+        """Killing a host that holds lease slices returns the unclaimed
+        tasks to the queue front; the run still drains with every task
+        accounted exactly once."""
+        rt = FleetRuntime(hosts=3, threads_per_host=2, local_dispatch=True,
+                          task_fn_name="repro.fleet.runtime:slow_task",
+                          heartbeat_timeout_s=2.0)
+        try:
+            _put_all(rt, n_objects=16)
+            n = 200
+            rt.submit(Task(inputs=(f"o{i % 16}",)) for i in range(n))
+            time.sleep(0.15)
+            rt.manager.kill_host("h1")
+            assert rt.wait(60), "wait() leaked after killing a lease holder"
+            d = rt.dispatcher
+            assert len(d.completed) == n and not d.failed
+            st = rt.dispatch_stats()
+            assert st["leases"] > 0
+            _conservation(rt)
+        finally:
+            rt.shutdown()
+
+    def test_hierarchical_batched_replay_matches_single_process(self):
+        """Batch-synchronous replay (B <= pool) on a hierarchical fleet --
+        batching ON, at both wire_batch extremes -- is placement-identical
+        to the single-process runtime, and leases never engage (barrier
+        chunks drain against an all-idle pool; DESIGN.md §9)."""
+        wl = generate("hier",
+                      ARRIVALS["PoissonArrivals"](rate_per_s=100.0),
+                      POPULARITY["ZipfPopularity"](alpha=1.1, k=2, corr=0.8),
+                      n_tasks=120, n_objects=32, object_bytes=50_000,
+                      seed=11)
+
+        def run(rt):
+            th = rt.submit_workload(wl, payload_factory=lambda ob: b"p",
+                                    barrier_every=4)
+            th.join(120)
+            assert not th.is_alive() and rt.wait(60)
+            d = rt.dispatcher
+            per_task = sorted((t.tid, t.executor, t.cache_hits, t.peer_hits,
+                               t.cache_misses) for t in d.completed)
+            st = rt.dispatch_stats() if isinstance(rt, FleetRuntime) else {}
+            rt.shutdown()
+            return per_task, st
+
+        base, _ = run(DiffusionRuntime(n_executors=4,
+                                       cache_capacity_bytes=10**12, seed=3))
+        for wb in (64, 1):
+            per, st = run(FleetRuntime(hosts=2, threads_per_host=2,
+                                       cache_capacity_bytes=10**12, seed=3,
+                                       local_dispatch=True, wire_batch=wb))
+            assert per == base, f"placement drift at wire_batch={wb}"
+            assert st["leases"] == 0 and st["claims"] == 0
+
+
+def test_bind_host_loopback_alias():
+    """Multi-machine seam: bind the whole fleet (central listener, host
+    peer servers) to a loopback alias; hosts advertise it in their hello
+    and cache-to-cache traffic flows through it."""
+    rt = FleetRuntime(hosts=2, threads_per_host=1, bind_host="127.0.0.2",
+                      task_fn_name="repro.fleet.runtime:fleet_task")
+    try:
+        assert rt.manager.addr[0] == "127.0.0.2"
+        for h in rt.manager.live_handles():
+            assert h.peer_host == "127.0.0.2"     # advertised, not assumed
+        _put_all(rt, n_objects=8)
+        rt.submit(Task(inputs=(f"o{i % 8}", f"o{(i + 3) % 8}"))
+                  for i in range(60))
+        assert rt.wait(60)
+        assert len(rt.dispatcher.completed) == 60
+        assert rt.ledger.peer_hits > 0            # c2c went over the alias
+        _conservation(rt)
+    finally:
+        rt.shutdown()

@@ -1,23 +1,36 @@
-"""Wire-protocol tests: framing + codec round-trips (DESIGN.md §8).
+"""Wire-protocol tests: framing + codec round-trips (DESIGN.md §8) and the
+batched wire (DESIGN.md §9).
 
 Every payload class the fleet ships is round-tripped under BOTH codecs
 (msgpack when present, and the forced-JSON fallback): numpy arrays,
 raw bytes, k-input task dispatch messages, empty payloads, and the
 runtime's shape-only store sentinel (PR 4) -- which must decode to the
 sentinel *object*, because a None payload reads as a cache miss.
+
+The batching half covers `BatchingChannel` (bounded coalescing, flush
+semantics, the batch=1 degenerate), batch-frame codec round-trips, and --
+through a fake-host harness driving the REAL `_on_remote_batch` receive
+path -- randomized updates/done/hb interleavings under random frame
+chunkings: every task completes exactly once, the byte ledger conserves,
+and frames from a dead host can never resurrect its index entries.
 """
 from __future__ import annotations
 
+import random
 import socket
 import struct
 import threading
+import time
 
 import numpy as np
 import pytest
 
-from repro.core.channel import ChannelClosed
+from repro.core import Task
+from repro.core.channel import BatchingChannel, ChannelClosed, LocalChannel
 from repro.core.runtime import SHAPE_ONLY_PAYLOAD
-from repro.fleet import wire
+from repro.fleet import FleetRuntime, wire
+from repro.fleet.manager import HostHandle
+from repro.fleet.runtime import _RemoteExecutor
 from repro.fleet.wire import (MAX_FRAME, PeerGone, SocketChannel, WireError,
                               decode, encode, recv_msg, send_msg)
 
@@ -190,3 +203,305 @@ def test_socket_channel_pair(codec):
     with pytest.raises(ChannelClosed):
         ca.send({"x": 1})
     cb.close()
+
+
+# --------------------------------------------------------------------------
+# batched wire: BatchingChannel units + batch-frame codec round-trips
+# --------------------------------------------------------------------------
+
+class TestBatchingChannel:
+    def test_threshold_flush_preserves_order(self):
+        inner = LocalChannel()
+        ch = BatchingChannel(inner, max_batch=3)
+        for i in range(5):
+            ch.send(i)
+        assert inner.recv() == {"t": "batch", "msgs": [0, 1, 2]}
+        assert inner.empty()            # 3, 4 still buffered
+        ch.flush()
+        assert inner.recv() == {"t": "batch", "msgs": [3, 4]}
+        assert ch.batches_sent == 2 and ch.msgs_sent == 5
+
+    def test_single_message_flush_goes_bare(self):
+        inner = LocalChannel()
+        ch = BatchingChannel(inner, max_batch=8)
+        ch.send({"t": "done", "tid": "x"}, flush=True)
+        assert inner.recv() == {"t": "done", "tid": "x"}   # no wrapper
+
+    def test_max_batch_one_degenerates_to_inner_channel(self):
+        inner = LocalChannel()
+        ch = BatchingChannel(inner, max_batch=1)
+        for i in range(4):
+            ch.send(i)
+            assert inner.recv() == i    # forwarded immediately, bare
+
+    def test_send_side_only(self):
+        with pytest.raises(ChannelClosed):
+            BatchingChannel(LocalChannel(), max_batch=4).recv()
+
+    def test_close_flushes_pending_then_closes_inner(self):
+        inner = LocalChannel()
+        ch = BatchingChannel(inner, max_batch=8)
+        ch.send("u")
+        ch.send("d")
+        ch.close()
+        assert inner.recv() == {"t": "batch", "msgs": ["u", "d"]}
+        with pytest.raises(ChannelClosed):
+            inner.recv()
+
+    def test_updates_before_done_across_batch_boundaries(self):
+        """The §8 ordering contract batched: an attempt's updates precede
+        its done in the FLATTENED frame stream even when the boundary
+        falls between them."""
+        inner = LocalChannel()
+        ch = BatchingChannel(inner, max_batch=2)
+        sent = [{"t": "updates", "n": 0}, {"t": "updates", "n": 1},
+                {"t": "done"}]
+        for m in sent[:-1]:
+            ch.send(m)
+        ch.send(sent[-1], flush=True)
+        flat = []
+        while not inner.empty():
+            f = inner.recv()
+            flat.extend(f["msgs"] if isinstance(f, dict)
+                        and f.get("t") == "batch" else [f])
+        assert flat == sent
+
+
+def test_batch_frame_round_trip(codec):
+    frame = {"t": "batch", "msgs": [
+        {"t": "updates", "eid": "w0", "added": ["a", "b"], "removed": ["c"]},
+        {"t": "done", "eid": "w0", "tid": "t1", "ok": True,
+         "ledger": {"bytes_local": 5, "bytes_cache_to_cache": 0,
+                    "bytes_store": 7, "cache_hits": 1, "peer_hits": 0,
+                    "cache_misses": 1}},
+        {"t": "hb", "host": "h0"}]}
+    assert rt(frame, codec) == frame
+
+
+# --------------------------------------------------------------------------
+# fake-host harness: the REAL _on_remote_batch receive path, no sockets
+# --------------------------------------------------------------------------
+
+class _FakeProc:
+    """Process stand-in so HostManager monitor/reap accept the handle."""
+    pid = 0
+    exitcode = None
+
+    def is_alive(self):
+        return True
+
+    def terminate(self):
+        pass
+
+    def join(self, timeout=None):
+        pass
+
+
+def _fake_fleet(n_hosts=2, tph=2, wire_batch=64, **rt_kw):
+    """A hosts=0 FleetRuntime with fake in-process host handles: dispatch
+    frames land in a LocalChannel per host, and the test feeds replies
+    straight into the production `_on_remote_batch`."""
+    rt_ = FleetRuntime(hosts=0, threads_per_host=tph, wire_batch=wire_batch,
+                       heartbeat_timeout_s=60.0, **rt_kw)
+    handles = []
+    for h in range(n_hosts):
+        handle = HostHandle(f"h{h}", _FakeProc(), LocalChannel(),
+                            peer_host="127.0.0.1", peer_port=0)
+        with rt_._lock:
+            for _ in range(tph):
+                eid = f"w{rt_._next_worker_id}"
+                rt_._next_worker_id += 1
+                rt_.workers[eid] = _RemoteExecutor(eid, handle, rt_)
+                handle.eids.append(eid)
+                rt_.dispatcher.executor_joined(eid, time.monotonic())
+        rt_.manager.handles[handle.host_id] = handle
+        handles.append(handle)
+    return rt_, handles
+
+
+def _drain_dispatched(handles):
+    """Unwrap every frame queued on the fake hosts' dispatch channels,
+    returning (handle, task_msg) pairs in wire order."""
+    out = []
+    for h in handles:
+        while not h.chan.empty():
+            m = h.chan.recv()
+            inner = (m["msgs"] if isinstance(m, dict)
+                     and m.get("t") == "batch" else [m])
+            for msg in inner:
+                if isinstance(msg, dict) and msg.get("t") == "task":
+                    out.append((h, msg))
+    return out
+
+
+def _reply_msgs(msg, caches, peer_every=0, counter=[0]):
+    """Scripted host reply for one task msg: LRU-churn one coalesced
+    updates frame + the done frame.  Every ``peer_every``-th miss is
+    served cache-to-cache (peer hit) instead of from the store, so the
+    conservation identity store_reads == misses - peer_hits is exercised
+    with a non-trivial peer term."""
+    eid = msg["eid"]
+    cache = caches.setdefault(eid, [])
+    before = set(cache)
+    led = {"bytes_local": 0, "bytes_cache_to_cache": 0, "bytes_store": 0,
+           "cache_hits": 0, "peer_hits": 0, "cache_misses": 0}
+    for oid, size in msg["inputs"]:
+        if oid in cache:
+            cache.remove(oid)
+            cache.append(oid)
+            led["cache_hits"] += 1
+            led["bytes_local"] += size
+            continue
+        led["cache_misses"] += 1
+        counter[0] += 1
+        if peer_every and counter[0] % peer_every == 0:
+            led["peer_hits"] += 1
+            led["bytes_cache_to_cache"] += size
+        else:
+            led["bytes_store"] += size
+        cache.append(oid)
+        while len(cache) > 4:
+            cache.pop(0)
+    # one coalesced NET delta per attempt (an oid evicted then re-admitted
+    # within the attempt must appear in neither list)
+    added = [o for o in cache if o not in before]
+    removed = sorted(before - set(cache))
+    replies = []
+    if added or removed:
+        replies.append({"t": "updates", "eid": eid,
+                        "added": added, "removed": removed})
+    replies.append({"t": "done", "eid": eid, "tid": msg["tid"],
+                    "ok": True, "ledger": led})
+    return replies
+
+
+def _ledger_conserves(rt_):
+    lg, d = rt_.ledger, rt_.dispatcher
+    sums = [0] * 6
+    for t in d.completed:
+        sums[0] += t.bytes_local
+        sums[1] += t.bytes_cache_to_cache
+        sums[2] += t.bytes_store
+        sums[3] += t.cache_hits
+        sums[4] += t.peer_hits
+        sums[5] += t.cache_misses - t.peer_hits
+    assert sums == [lg.bytes_local, lg.bytes_c2c, lg.bytes_store,
+                    lg.local_hits, lg.peer_hits, lg.store_reads]
+
+
+def test_randomized_interleavings_complete_and_conserve(codec):
+    """Random frame chunkings of updates/done/hb streams -- round-tripped
+    through the codec exactly like the real wire -- drive every task to
+    completion exactly once with an exactly-conserved ledger, regardless
+    of how batch boundaries fall."""
+    rng = random.Random(0xD15BA7C4)
+    for trial in range(3):
+        rt_, handles = _fake_fleet(wire_batch=rng.choice([1, 4, 64]))
+        try:
+            n, n_oids = 60, 16
+            with rt_._lock:
+                for i in range(n_oids):
+                    rt_.dispatcher.sizes[f"o{i}"] = 1000
+            oids = [f"o{i}" for i in range(n_oids)]
+            rt_.submit(Task(inputs=tuple(rng.sample(oids, 2)))
+                       for _ in range(n))
+            caches, outbox = {}, {h.host_id: [] for h in handles}
+            counter = [0]
+            spins = 0
+            while len(rt_.dispatcher.completed) < n:
+                spins += 1
+                assert spins < 10_000, "drive loop wedged"
+                for h, msg in _drain_dispatched(handles):
+                    outbox[h.host_id].extend(
+                        _reply_msgs(msg, caches, peer_every=5,
+                                    counter=counter))
+                    if rng.random() < 0.3:
+                        outbox[h.host_id].append({"t": "hb",
+                                                  "host": h.host_id})
+                for h in handles:
+                    buf = outbox[h.host_id]
+                    while buf:
+                        k = rng.randint(1, min(6, len(buf)))
+                        chunk = [buf.pop(0) for _ in range(k)]
+                        frame = (chunk[0] if len(chunk) == 1
+                                 else {"t": "batch", "msgs": chunk})
+                        frame = decode(encode(frame, codec), codec)
+                        inner = (frame["msgs"]
+                                 if frame.get("t") == "batch" else [frame])
+                        rt_._on_remote_batch(h, inner)
+            d = rt_.dispatcher
+            assert len(d.completed) == n and not d.failed
+            assert rt_.ledger.peer_hits > 0      # the peer term is live
+            _ledger_conserves(rt_)
+            # index coherence at drain: central locations == the caches
+            # the scripted hosts actually hold (§8, batched)
+            for eid, cache in caches.items():
+                if eid in rt_.workers:
+                    assert rt_.dispatcher.index.holdings(eid) == set(cache)
+        finally:
+            rt_.shutdown()
+
+
+def test_dead_host_frames_cannot_resurrect_index_entries():
+    """Late updates/done frames from a declared-dead host are dropped by
+    the membership guard: no index resurrection, no double accounting,
+    and the re-queued task still runs exactly once (elsewhere)."""
+    rt_, (h0, h1) = _fake_fleet(n_hosts=2, tph=1)
+    try:
+        with rt_._lock:
+            rt_.dispatcher.sizes["a"] = 10
+        eid0, eid1 = h0.eids[0], h1.eids[0]
+        rt_._on_remote_batch(h0, [{"t": "updates", "eid": eid0,
+                                   "added": ["a"], "removed": []}])
+        assert eid0 in rt_.dispatcher.index.lookup("a")
+        # an update claiming ANOTHER host's executor is refused outright
+        rt_._on_remote_batch(h0, [{"t": "updates", "eid": eid1,
+                                   "added": ["a"], "removed": []}])
+        assert eid1 not in rt_.dispatcher.index.lookup("a")
+
+        # give h0's executor an in-flight task, then declare the host dead
+        rt_.submit([Task(inputs=("a",))])
+        inflight = [(h, m) for h, m in _drain_dispatched((h0, h1))
+                    if m["eid"] == eid0]
+        rt_._on_host_dead(h0)
+        assert eid0 not in rt_.dispatcher.index.lookup("a")
+        assert eid0 not in rt_.workers
+
+        # late frames from the corpse: dropped, nothing resurrects
+        rt_._on_remote_batch(h0, [{"t": "updates", "eid": eid0,
+                                   "added": ["a"], "removed": []}])
+        assert eid0 not in rt_.dispatcher.index.lookup("a")
+        before = rt_.ledger.store_reads
+        for h, m in inflight:
+            for reply in _reply_msgs(m, {}):
+                rt_._on_remote_batch(h0, [reply])
+        assert rt_.ledger.store_reads == before
+        assert not rt_.dispatcher.completed
+
+        # the re-queued task drains once on the survivor
+        caches = {}
+        for h, m in _drain_dispatched((h1,)):
+            rt_._on_remote_batch(h1, _reply_msgs(m, caches))
+        assert [t.executor for t in rt_.dispatcher.completed] == [eid1]
+        _ledger_conserves(rt_)
+    finally:
+        rt_.shutdown()
+
+
+def test_unleased_claim_is_a_conflict():
+    """A claim frame with no backing lease (or from a dead handle) falls
+    back to central authority: counted as a conflict, never bound."""
+    rt_, (h0,) = _fake_fleet(n_hosts=1, tph=1)
+    try:
+        eid = h0.eids[0]
+        rt_._on_remote_batch(h0, [{"t": "claim", "eid": eid,
+                                   "tid": "ghost"}])
+        st = rt_.dispatch_stats()
+        assert st["claim_conflicts"] == 1 and st["claims"] == 0
+        h0.dead = True
+        rt_._on_remote_batch(h0, [{"t": "claim", "eid": eid,
+                                   "tid": "ghost"}])
+        assert rt_.dispatch_stats()["claim_conflicts"] == 2
+    finally:
+        h0.dead = False
+        rt_.shutdown()

@@ -114,3 +114,76 @@ def test_elastic_join_mid_stream():
     assert len(d.next_dispatches(0.0)) == 1
     d.executor_joined("e9", 1.0)                       # DRP grew the pool
     assert {o.executor for o in d.next_dispatches(1.0)} == {"e9"}
+
+
+# ---------------------------------------------------------------------------
+# TaskQueue: tombstone churn, compaction, ordered views
+# ---------------------------------------------------------------------------
+
+from repro.core.scheduler import TaskQueue  # noqa: E402
+
+
+def _filled_queue(n):
+    q = TaskQueue()
+    ts = [Task(inputs=()) for _ in range(n)]
+    for t in ts:
+        q.append(t)
+    return q, ts
+
+
+def test_taskqueue_heavy_remove_compacts_storage():
+    q, ts = _filled_queue(200)
+    for t in ts[:150]:
+        assert q.remove(t.tid)
+    assert len(q) == 50
+    # tombstones were physically compacted away at some point (the deque
+    # would otherwise still hold all 200 entries)
+    assert len(q._dq) < 200
+    assert len(q._dq) == len(q) + q._dead
+    # FIFO of the survivors is intact
+    assert [t.tid for t in q] == [t.tid for t in ts[150:]]
+    assert [q.popleft().tid for _ in range(50)] == [t.tid for t in ts[150:]]
+
+
+def test_taskqueue_popleft_skips_tombstones():
+    q, ts = _filled_queue(10)
+    for t in ts[::2]:                 # kill the evens
+        q.remove(t.tid)
+    assert [q.popleft().tid for _ in range(5)] == [t.tid for t in ts[1::2]]
+    try:
+        q.popleft()
+        assert False, "pop from empty TaskQueue must raise"
+    except IndexError:
+        pass
+
+
+def test_taskqueue_first_live_after_heavy_churn():
+    q, ts = _filled_queue(300)
+    for t in ts[:297]:
+        q.remove(t.tid)
+    assert [t.tid for t in q.first_live(10)] == [t.tid for t in ts[297:]]
+    assert [t.tid for t in q.first_live(2)] == [t.tid for t in ts[297:299]]
+    assert ts[299].tid in q and ts[0].tid not in q
+    assert not q.remove(ts[0].tid)    # double-remove is a no-op
+
+
+def test_taskqueue_reappend_moves_to_back():
+    q, ts = _filled_queue(3)
+    q.append(ts[0])                   # same tid: tombstone + re-append
+    assert len(q) == 3
+    assert [t.tid for t in q] == [ts[1].tid, ts[2].tid, ts[0].tid]
+
+
+def test_taskqueue_appendleft_position_total_order():
+    q = TaskQueue()
+    a, b, c = (Task(inputs=()) for _ in range(3))
+    q.append(a)
+    q.appendleft(b)                   # requeue path: back to the front
+    q.append(c)
+    assert [t.tid for t in q] == [b.tid, a.tid, c.tid]
+    assert q.position(b.tid) < q.position(a.tid) < q.position(c.tid)
+    assert bool(q) and len(q) == 3
+    q.remove(a.tid)
+    q.remove(b.tid)
+    q.remove(c.tid)
+    assert not q and len(q) == 0

@@ -26,7 +26,13 @@ on more than ``--threshold`` regression (default 25%):
              drains, aggregate cache bandwidth rises monotonically
              1 -> 2 -> 4 hosts, and a recorded trace replayed batch-
              synchronously matches the single-process runtime EXACTLY on
-             scheduling-determined RunReport fields).
+             scheduling-determined RunReport fields);
+  dispatch   benchmarks/bench_dispatch.py vs BENCH_dispatch.json -- guards
+             the batched-wire central loop, with canaries (the batched
+             wire is >= 3x the unbatched one on the same completion
+             storm, hierarchical tasks/s rises monotonically with host
+             count, and hierarchical + batched batch-synchronous replay
+             still matches single-process placement exactly).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -40,6 +46,8 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_policies \
         --out BENCH_policies.json
     PYTHONPATH=src python -m benchmarks.bench_fleet --out BENCH_fleet.json
+    PYTHONPATH=src python -m benchmarks.bench_dispatch \
+        --out BENCH_dispatch.json
 """
 from __future__ import annotations
 
@@ -109,12 +117,14 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_policies.json"))
     ap.add_argument("--fleet-baseline",
                     default=str(REPO_ROOT / "BENCH_fleet.json"))
+    ap.add_argument("--dispatch-baseline",
+                    default=str(REPO_ROOT / "BENCH_dispatch.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
-                                       "policies", "fleet"],
+                                       "policies", "fleet", "dispatch"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -124,8 +134,8 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import (bench_engine, bench_fleet, bench_joins,
-                            bench_policies, bench_workloads)
+    from benchmarks import (bench_dispatch, bench_engine, bench_fleet,
+                            bench_joins, bench_policies, bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -200,6 +210,24 @@ def main(argv=None) -> int:
                 ("aggregate cache bandwidth monotonic 1 -> 2 -> 4 hosts",
                  lambda b, c: bool(c["bw_monotonic"])),
                 ("fleet trace replay matches single-process exactly",
+                 lambda b, c: bool(c["parity"])),
+            ]))
+    if args.only in (None, "dispatch"):
+        rc = max(rc, _check_gate(
+            "dispatch", Path(args.dispatch_baseline),
+            lambda: bench_dispatch.gate_measure(repeats=args.repeats),
+            (bench_dispatch.GATE_NODES, bench_dispatch.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("batched wire >= 3x unbatched on the same storm",
+                 lambda b, c: c["batched_speedup"] >= 3.0),
+                ("every hierarchical curve cell drained",
+                 lambda b, c: bool(c["curve_drained"])),
+                ("hierarchical tasks/s monotonic 1 -> 2 -> 4 hosts",
+                 lambda b, c: bool(c["curve_monotonic"])),
+                ("hierarchical+batched replay matches single-process",
                  lambda b, c: bool(c["parity"])),
             ]))
     return rc
