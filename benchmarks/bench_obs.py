@@ -1,0 +1,226 @@
+"""Observability benchmark: recording overhead + sim<->fleet agreement.
+
+`repro.obs` promises (DESIGN.md §10) that recording is (a) free when off
+-- every hot-path hook is one attribute read and a branch -- and cheap
+when on: one short critical section on the recorder's own leaf lock,
+never held across the dispatcher lock, never doing I/O.  This bench is
+the measurement side, three canaries:
+
+  overhead    the bench_dispatch completion STORM (real framed sockets,
+              scripted hosts, instant completions -- the worst case for
+              per-task fixed costs) run events-OFF and events-ON with
+              the central recorder at default ring capacity; best-of-N
+              **central-loop CPU** events-on must stay within 10% of
+              events-off;
+  drops       the events-on storm must lose nothing: ``dropped == 0``
+              at DEFAULT_RING_CAPACITY (an under-provisioned ring
+              degrades to a truncated trace by design, but the default
+              must absorb a full storm);
+  agreement   a serial replay (arrivals spaced >> service time,
+              ``barrier_every=1``: every dispatch decision sees an
+              all-idle pool) recorded on a real 2-host x 2-thread fleet,
+              diffed per task against the sim twin's prediction --
+              placement agreement must be >= 99% (it is exactly 100% in
+              this regime; see §10 for why contended replay diverges).
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+
+from repro.core import DataObject
+from repro.experiments import (ClusterSpec, ExperimentSpec, ObserveSpec,
+                               RuntimeEngine, SimEngine, WorkloadSpec)
+from repro.obs import Recorder, diff_outcomes, lifecycle_fingerprints
+from repro.obs.recorder import DEFAULT_RING_CAPACITY
+from repro.workloads import TaskEvent, Workload
+
+from . import bench_dispatch
+from .common import row
+
+#: fixed configuration tools/bench_gate.py replays against the baseline.
+GATE_NODES = bench_dispatch.GATE_NODES     # storm pool (4 hosts x 48)
+GATE_TASKS = 1200                          # storm tasks per overhead cell
+PARITY_TASKS = 40                          # serial-replay agreement cell
+STORM_WIRE_BATCH = 64
+
+
+# --------------------------------------------------------------------------
+# overhead: events-off vs events-on on the same storm
+# --------------------------------------------------------------------------
+
+def measure_overhead(n_tasks: int = GATE_TASKS, repeats: int = 3) -> dict:
+    """Best-of-N central-loop CPU with and without a central recorder on
+    identical scripted storms.  Wall clock on a 1-core box mostly measures
+    the scripted hosts; central CPU is what the guarded hooks could tax."""
+    best_off = best_on = None
+    drops = emitted = 0
+    for _ in range(repeats):
+        off = bench_dispatch.measure_storm(STORM_WIRE_BATCH, n_tasks)
+        rec = Recorder(DEFAULT_RING_CAPACITY)
+        on = bench_dispatch.measure_storm(STORM_WIRE_BATCH, n_tasks,
+                                          recorder=rec)
+        if best_off is None or off["central_cpu_s"] < best_off["central_cpu_s"]:
+            best_off = off
+        if best_on is None or on["central_cpu_s"] < best_on["central_cpu_s"]:
+            best_on = on
+            drops, emitted = rec.dropped, rec.emitted
+    return {
+        "n_tasks": n_tasks,
+        "n_completed": best_on["n_completed"],
+        "wall_s": best_on["wall_s"],
+        "central_cpu_off_s": best_off["central_cpu_s"],
+        "central_cpu_on_s": best_on["central_cpu_s"],
+        "overhead_ratio": round(best_on["central_cpu_s"]
+                                / max(best_off["central_cpu_s"], 1e-9), 3),
+        "events_emitted": emitted,
+        "dropped": drops,
+    }
+
+
+# --------------------------------------------------------------------------
+# agreement: serial replay, sim twin vs real fleet
+# --------------------------------------------------------------------------
+
+def serial_workload(n_tasks: int = PARITY_TASKS, seed: int = 7) -> Workload:
+    """Arrivals 1 s apart vs ~50 ms anl_uc service time: every dispatch
+    decision on every engine is made against an all-idle pool."""
+    rng = random.Random(seed)
+    objs = [DataObject(f"p.o{i}", 10_000) for i in range(12)]
+    events = [TaskEvent(t=float(i), tid=f"p-{i}",
+                        inputs=tuple(o.oid for o in rng.sample(objs, 2)),
+                        outputs=(), compute_seconds=0.0,
+                        store_metadata_ops=0)
+              for i in range(n_tasks)]
+    return Workload("obs-parity", objs, events, spec=None)
+
+
+def _parity_spec(hosts: int, tph: int, n_tasks: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="obs-agreement",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=4),
+        policy="max-compute-util",
+        workload=WorkloadSpec(
+            name="obs",
+            arrivals={"kind": "BatchArrivals", "at_s": 0.0},
+            popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 2,
+                        "corr": 1.0},
+            n_tasks=n_tasks, n_objects=12, object_bytes=10_000, seed=7),
+        observe=ObserveSpec(events=True),
+        seed=3, hosts=hosts, threads_per_host=tph)
+
+
+def measure_agreement(n_tasks: int = PARITY_TASKS) -> dict:
+    """Sim twin vs a real 2x2 fleet on the serial workload: per-task
+    placement agreement from `repro.obs.diff`, plus full lifecycle-
+    fingerprint identity (kinds, placement, per-input source/bytes)."""
+    wl = serial_workload(n_tasks)
+    eng = SimEngine()
+    try:
+        eng.prepare(_parity_spec(0, 1, n_tasks), workload=wl)
+        eng.run()
+        sim_out, sim_fp = (eng.last_outcomes,
+                           lifecycle_fingerprints(eng.recorder.events()))
+    finally:
+        eng.shutdown()
+    eng = RuntimeEngine()
+    try:
+        eng.prepare(_parity_spec(2, 2, n_tasks), workload=wl)
+        rep = eng.run(barrier_every=1, timeout=300.0)
+        fleet_out, fleet_fp = (eng.last_outcomes,
+                               lifecycle_fingerprints(eng.recorder.events()))
+        fleet_dropped = eng.recorder.dropped
+    finally:
+        eng.shutdown()
+    div = diff_outcomes(fleet_out, sim_out)
+    return {
+        "n_tasks": n_tasks,
+        "n_completed": rep.n_completed,
+        "n_matched": div["n_matched"],
+        "placement_agreement": div["placement_agreement"],
+        "bytes_agreement": div["bytes_agreement"],
+        "fingerprints_identical": sim_fp == fleet_fp,
+        "fleet_dropped": fleet_dropped,
+    }
+
+
+# --------------------------------------------------------------------------
+# gate / CSV entry points
+# --------------------------------------------------------------------------
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The fixed shape bench_gate.py replays.  The gated wall is the
+    events-on storm (best-of-N); the canaries are the overhead ratio, the
+    drop count, and the sim<->fleet placement agreement."""
+    # the on/off CPU ratio divides two ~100 ms measurements on a shared
+    # box; the best-of-N floor needs more samples than the wall gate does
+    ov = measure_overhead(GATE_TASKS, repeats=max(repeats, 5))
+    ag = measure_agreement(PARITY_TASKS)
+    return {
+        "n_nodes": GATE_NODES, "n_tasks": GATE_TASKS,
+        "wall_s": ov["wall_s"],
+        "n_completed": ov["n_completed"],
+        "central_cpu_off_s": ov["central_cpu_off_s"],
+        "central_cpu_on_s": ov["central_cpu_on_s"],
+        "overhead_ratio": ov["overhead_ratio"],
+        "events_emitted": ov["events_emitted"],
+        "dropped": ov["dropped"] + ag["fleet_dropped"],
+        "placement_agreement": ag["placement_agreement"],
+        "bytes_agreement": ag["bytes_agreement"],
+        "fingerprints_identical": ag["fingerprints_identical"],
+    }
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: overhead + agreement as CSV rows."""
+    n_tasks = max(int(GATE_TASKS * scale), 100)
+    ov = measure_overhead(n_tasks, repeats=1)
+    rows = [
+        row("obs", "events_on_overhead_ratio", ov["overhead_ratio"], "x",
+            note=f"central-loop CPU, storm of {n_tasks}, on/off"),
+        row("obs", "events_emitted", ov["events_emitted"], "events",
+            note=f"dropped {ov['dropped']} at default ring "
+                 f"({DEFAULT_RING_CAPACITY})"),
+    ]
+    ag = measure_agreement()
+    rows.append(row("obs", "sim_fleet_placement_agreement",
+                    ag["placement_agreement"], "ratio",
+                    note=f"serial replay, {ag['n_matched']} tasks joined, "
+                         f"fingerprints identical: "
+                         f"{ag['fingerprints_identical']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=GATE_TASKS)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args(argv)
+
+    ov = measure_overhead(args.tasks, repeats=args.repeats)
+    print(f"# overhead: on {ov['central_cpu_on_s'] * 1e3:.1f} ms vs off "
+          f"{ov['central_cpu_off_s'] * 1e3:.1f} ms central CPU "
+          f"({ov['overhead_ratio']:.3f}x), {ov['events_emitted']} events, "
+          f"{ov['dropped']} dropped", file=sys.stderr)
+    ag = measure_agreement()
+    print(f"# agreement: placement {ag['placement_agreement']:.3f}, bytes "
+          f"{ag['bytes_agreement']:.3f}, fingerprints identical "
+          f"{ag['fingerprints_identical']}", file=sys.stderr)
+    out = {"overhead": ov, "agreement": ag,
+           "gate": gate_measure(repeats=args.repeats)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

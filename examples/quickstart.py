@@ -9,7 +9,12 @@ executed by the discrete-event engine, three times:
      tasks follow them;
   3. ELASTIC: the same diffusion engine under an open-loop sine-wave demand
      curve, with the DynamicResourceProvisioner growing and shrinking the
-     pool as arrivals rise and fall (the paper's §3.1 elasticity story).
+     pool as arrivals rise and fall (the paper's §3.1 elasticity story);
+  4. OBSERVED: the diffusion run again with lifecycle recording on
+     (repro.obs, DESIGN.md §10) -- exports a Chrome-trace JSON you can open
+     in chrome://tracing or Perfetto, and diffs the run's measured per-task
+     outcomes against a fresh replay prediction (placement + byte-split
+     agreement; on the deterministic sim twin both are exactly 100%).
 
 Everything is seeded, so the printed numbers are identical run-to-run (and
 identical to what the pre-spec, hand-constructed SimConfig path produced --
@@ -105,7 +110,46 @@ def main():
           f"(ideal core-s / allocated core-s)")
     print("\nas demand rises the provisioner acquires executors; when the "
           "sine trough drains the queue, idle executors are released -- "
-          "the elasticity the paper claims, measured end-to-end.")
+          "the elasticity the paper claims, measured end-to-end.\n")
+
+    observed()
+
+
+def observed():
+    """The PR-7 observability loop in miniature: record -> export -> diff."""
+    import dataclasses
+
+    from repro.experiments import ObserveSpec, SimEngine
+    from repro.obs import (chrome_trace, diff_outcomes, format_divergence,
+                           sim_replay_outcomes)
+
+    spec = dataclasses.replace(batch_spec("max-compute-util", True),
+                               observe=ObserveSpec(events=True))
+    eng = SimEngine()
+    try:
+        eng.prepare(spec, workload=build_workload(BATCH_WORKLOAD))
+        eng.run()
+        events = eng.recorder.events()
+        measured = eng.last_outcomes
+    finally:
+        eng.shutdown()
+
+    out = "quickstart_trace.json"
+    trace = chrome_trace(events, out)
+    spans = sum(1 for e in trace["traceEvents"] if e["ph"] == "X")
+    print("== observed (lifecycle recording + sim-twin divergence)")
+    print(f"   events recorded     {len(events):9d}   (0 dropped)")
+    print(f"   chrome trace        {out}  ({spans} task spans -- open in "
+          f"chrome://tracing)")
+    # diff the measured outcomes against a fresh prediction of the same
+    # spec -- the same join `tools/run_experiment.py diff` runs on a
+    # recorded FLEET trace, where the agreement numbers become interesting
+    predicted = sim_replay_outcomes(spec)
+    div = diff_outcomes(measured, predicted)
+    # latencies=False: quantile lines carry engine wall-clock noise on a
+    # real fleet; agreement lines are deterministic and belong in a demo
+    for line in format_divergence(div, latencies=False).splitlines():
+        print(f"   {line}")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,10 @@ class DynamicResourceProvisioner:
         self._last_trigger = -float("inf")
         self.n_allocated = 0
         self.n_released = 0
+        # optional repro.obs.Recorder; the owning engine installs it so DRP
+        # decisions land in the same event stream as the pool transitions
+        # they cause (one "provision" event per non-empty step)
+        self.recorder = None
 
     def step(
         self,
@@ -108,6 +112,10 @@ class DynamicResourceProvisioner:
             releasable = ((live_executors - self.min_executors) // q) * q
             acts.release = idle_executors[:releasable]
             self.n_released += len(acts.release)
+        if self.recorder is not None and (acts.allocate or acts.release):
+            self.recorder.emit("provision", allocate=acts.allocate,
+                               release=len(acts.release), queue=queue_len,
+                               live=live_executors)
         return acts
 
     def snapshot(self) -> dict:

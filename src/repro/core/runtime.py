@@ -290,9 +290,14 @@ class DiffusionRuntime:
         store: Optional[ObjectStore] = None,
         seed: int = 0,
         index_update_batch: int = 1,   # >1 demonstrates loose coherence
+        recorder=None,                 # optional repro.obs.Recorder
     ) -> None:
         self.store = store if store is not None else ObjectStore()
         self.dispatcher = Dispatcher(policy)
+        # lifecycle observability (repro.obs): None = recording off, and
+        # every hot-path hook below is a None-guard -- off-by-default free.
+        self.recorder = recorder
+        self.dispatcher.recorder = recorder
         self.ledger = RuntimeLedger()
         self.stats = DispatchStats()
         self.workers: dict[str, ExecutorWorker] = {}
@@ -343,6 +348,9 @@ class DiffusionRuntime:
             self.dispatcher.executor_joined(eid, time.monotonic())
             self.pool_log.append((time.monotonic() - self._t0,
                                   len(self.workers)))
+            if self.recorder is not None:
+                self.recorder.emit("pool", eid=eid, size=len(self.workers),
+                                   delta=1)
         w.start()
         return eid
 
@@ -371,6 +379,9 @@ class DiffusionRuntime:
                 return
             self.pool_log.append((time.monotonic() - self._t0,
                                   len(self.workers)))
+            if self.recorder is not None:
+                self.recorder.emit("pool", eid=eid, size=len(self.workers),
+                                   delta=-1)
             self._deregister_locked(eid, failed)
         w.stop()
         self._pump()
@@ -504,10 +515,16 @@ class DiffusionRuntime:
         return th
 
     def _pump(self) -> None:
+        rec = self.recorder
         with self._lock:
             t0 = time.perf_counter()
             dispatches = self.dispatcher.next_dispatches(time.monotonic())
             self._note_pump_locked(len(dispatches), time.perf_counter() - t0)
+            qlen = self.dispatcher.queue_len if rec is not None else 0
+        if rec is not None:
+            # emitted OUTSIDE the runtime lock: the recorder's own lock is
+            # the only one recording ever takes on this path
+            rec.emit("pump", n=len(dispatches), queue=qlen)
         for d in dispatches:
             w = self.workers.get(d.executor)
             if w is None:
@@ -517,7 +534,7 @@ class DiffusionRuntime:
             w.dispatch(d)
 
     def _resolve(self, acc: "_InputLedger", w: ExecutorWorker, oid: str,
-                 hints: dict[str, tuple[str, ...]]) -> Any:
+                 hints: dict[str, tuple[str, ...]], tid: str = "") -> Any:
         """Stage one input, accounting a per-attempt accumulator (joins
         need the per-task split: a k-input task may hit locally on some
         inputs, peer-fetch others, miss the rest).  Only the accumulator --
@@ -530,10 +547,14 @@ class DiffusionRuntime:
         de-registered workers -- so ledger totals always equal the sum of
         counted attempts (fleet hosts report through the same path)."""
         size = self.dispatcher.sizes.get(oid, 0)
+        rec = self.recorder
         payload = w.cache_lookup(oid)
         if payload is not None:
             acc.cache_hits += 1
             acc.bytes_local += size
+            if rec is not None:
+                rec.emit("input", tid=tid, eid=w.eid, oid=oid,
+                         source="local", bytes=size)
             return payload
         acc.cache_misses += 1
         for peer_id in hints.get(oid, ()):
@@ -546,11 +567,17 @@ class DiffusionRuntime:
             if payload is not None:
                 acc.peer_hits += 1
                 acc.bytes_cache_to_cache += size
+                if rec is not None:
+                    rec.emit("input", tid=tid, eid=w.eid, oid=oid,
+                             source="peer", bytes=size, peer=peer_id)
                 obj = self.store.meta(oid) if oid in self.store else DataObject(oid, size)
                 self._emit(w.admit_update(obj, payload))
                 return payload
         obj, payload = self.store.get(oid)
         acc.bytes_store += obj.size_bytes
+        if rec is not None:
+            rec.emit("input", tid=tid, eid=w.eid, oid=oid,
+                     source="store", bytes=obj.size_bytes)
         self._emit(w.admit_update(obj, payload))
         return payload
 
@@ -591,8 +618,12 @@ class DiffusionRuntime:
         t.start_time = time.monotonic()
         ok = True
         acc = _InputLedger()
+        rec = self.recorder
         try:
-            inputs = {oid: self._resolve(acc, w, oid, disp.hints) for oid in t.inputs}
+            inputs = {oid: self._resolve(acc, w, oid, disp.hints, tid=t.tid)
+                      for oid in t.inputs}
+            if rec is not None:
+                rec.emit("exec_start", tid=t.tid, eid=w.eid)
             if t.fn is not None:
                 t.result = t.fn(**inputs) if _wants_kwargs(t.fn) else t.fn(inputs)
             for ob in t.outputs:
@@ -602,6 +633,8 @@ class DiffusionRuntime:
         except Exception as e:  # noqa: BLE001 - task failure is data, not a crash
             ok = False
             t.result = e
+        if rec is not None:
+            rec.emit("exec_end", tid=t.tid, eid=w.eid, ok=ok)
         self._finish_attempt(w, t, acc, ok)
         self._pump()
 

@@ -188,6 +188,10 @@ class Dispatcher:
         self._twin_of: dict[str, str] = {}        # original tid -> twin tid
         self.n_decisions = 0
         self.decision_lookups = 0
+        # optional repro.obs.Recorder: the owning engine installs it; every
+        # emission below is None-guarded so recording-off costs one attribute
+        # load per lifecycle transition (never per queue scan).
+        self.recorder = None
         # ---- incremental max-compute-util placement state -----------------
         # tid -> oid -> executors known (per the loosely-coherent index) to
         # cache it; resolved once at enqueue, patched by index-update hooks.
@@ -237,19 +241,26 @@ class Dispatcher:
             t.state = TaskState.SUBMITTED
             requeue.append(t)
         del self.executors[eid]
+        rec = self.recorder
         for t in requeue:
+            if rec is not None:
+                rec.emit("task_requeued", tid=t.tid, eid=eid,
+                         reason="executor_left")
             self._enqueue(t, front=True)
         return requeue
 
     # ---------------- submission -------------------------------------------
     def submit(self, tasks: Iterable[Task], now: float) -> int:
         n = 0
+        rec = self.recorder
         for t in tasks:
             t.submit_time = now
             t.state = TaskState.SUBMITTED
             self.tasks[t.tid] = t
             for ob in t.outputs:
                 self.sizes[ob.oid] = ob.size_bytes
+            if rec is not None:
+                rec.emit("task_arrived", tid=t.tid)
             self._enqueue(t)
             n += 1
         return n
@@ -260,6 +271,8 @@ class Dispatcher:
 
     # ---------------- incremental hint maintenance --------------------------
     def _enqueue(self, t: Task, front: bool = False) -> None:
+        if self.recorder is not None:
+            self.recorder.emit("task_queued", tid=t.tid, front=front)
         if front:
             self.queue.appendleft(t)
         else:
@@ -516,6 +529,8 @@ class Dispatcher:
         if self._mcu:
             t.location_hints = self._hints_tuple(self._hints_drop(t))
         t.state = TaskState.PENDING
+        if self.recorder is not None:
+            self.recorder.emit("task_leased", tid=t.tid)
         return t
 
     def bind_claim(self, t: Task, eid: str, now: float) -> Dispatch:
@@ -524,14 +539,19 @@ class Dispatcher:
         past ``slots`` (the host has already started the attempt);
         ``task_finished`` decrements through the normal path."""
         self.n_decisions += 1
+        if self.recorder is not None:
+            self.recorder.emit("task_claimed", tid=t.tid, eid=eid)
         return self._bind(t, eid, now)
 
     def requeue_leased(self, tasks: Iterable[Task]) -> None:
         """Return unclaimed leased tasks (their host died or was removed)
         to the FRONT of the wait queue in their original lease order.
         They were never dispatched, so no attempt is charged."""
+        rec = self.recorder
         for t in reversed(list(tasks)):
             t.state = TaskState.SUBMITTED
+            if rec is not None:
+                rec.emit("task_requeued", tid=t.tid, reason="lease_returned")
             self._enqueue(t, front=True)
 
     def _bind(self, t: Task, eid: str, now: float) -> Dispatch:
@@ -542,6 +562,8 @@ class Dispatcher:
         t.state = TaskState.DISPATCHED
         t.executor = eid
         t.dispatch_time = now
+        if self.recorder is not None:
+            self.recorder.emit("task_dispatched", tid=t.tid, eid=eid)
         return Dispatch(task=t, executor=eid, hints=t.location_hints)
 
     # ---------------- completion -------------------------------------------
@@ -555,9 +577,12 @@ class Dispatcher:
             st.last_busy_at = now
         cancel: Optional[str] = None
         orig_tid = self._twins.pop(t.tid, None)
+        rec = self.recorder
         if ok:
             t.state = TaskState.DONE
             t.end_time = now
+            if rec is not None:
+                rec.emit("task_done", tid=t.tid, eid=eid)
             self.durations.append(now - t.dispatch_time)
             if orig_tid is not None:
                 # a speculative twin won; cancel the original
@@ -582,12 +607,18 @@ class Dispatcher:
             if t.attempts >= t.max_attempts:
                 t.state = TaskState.FAILED
                 self.failed.append(t)
+                if rec is not None:
+                    rec.emit("task_failed", tid=t.tid, eid=eid,
+                             attempts=t.attempts)
                 if orig_tid is not None:
                     self._twins.pop(t.tid, None)
                     self._twin_of.pop(orig_tid, None)
                     self._speculated.discard(orig_tid)
             else:
                 t.reset_for_retry()
+                if rec is not None:
+                    rec.emit("task_requeued", tid=t.tid, eid=eid,
+                             reason="retry")
                 self._enqueue(t, front=True)
         if cancel is not None and cancel in self.queue:
             # the losing copy never left the wait queue: dequeue it now so it

@@ -80,6 +80,9 @@ class SimConfig:
     seed: int = 0
     executor_slowdown: dict[str, float] = field(default_factory=dict)
     fail_at: dict[str, float] = field(default_factory=dict)
+    # optional repro.obs.Recorder (lifecycle events on the simulated clock);
+    # None = recording off, zero hot-path cost
+    recorder: Optional[object] = None
 
 
 @dataclass
@@ -144,6 +147,12 @@ class DiffusionSim:
         self.dispatch_cpu = FifoServer(self.loop, tb.dispatch_service_s)
         self.dispatcher = Dispatcher(
             cfg.policy, speculation_factor=cfg.speculation_factor)
+        self.recorder = cfg.recorder
+        if self.recorder is not None:
+            # events are stamped on the simulated clock, so sim and runtime
+            # traces line up phase-for-phase (not second-for-second)
+            self.recorder.clock = lambda: self.loop.now
+            self.dispatcher.recorder = self.recorder
         self.nodes: dict[str, SimNodeRes] = {}
         self.store_catalog: dict[str, DataObject] = {}
         self._rng = random.Random(cfg.seed)
@@ -173,8 +182,10 @@ class DiffusionSim:
 
     # ------------- membership -------------------------------------------------
     def _log_pool(self, now: float) -> None:
-        self.pool_log.append(
-            (now, sum(1 for n in self.nodes.values() if n.alive)))
+        live = sum(1 for n in self.nodes.values() if n.alive)
+        self.pool_log.append((now, live))
+        if self.recorder is not None:
+            self.recorder.emit("pool", t=now, size=live)
 
     def _add_node(self, now: float) -> str:
         tb = self.cfg.testbed
@@ -301,7 +312,11 @@ class DiffusionSim:
 
     # ------------- scheduling pump -----------------------------------------------
     def _pump(self, now: float) -> None:
-        for disp in self.dispatcher.next_dispatches(now):
+        dispatches = self.dispatcher.next_dispatches(now)
+        if self.recorder is not None:
+            self.recorder.emit("pump", t=now, n=len(dispatches),
+                               queue=self.dispatcher.queue_len)
+        for disp in dispatches:
             cost = self.cfg.testbed.dispatch_service_s
             if self.cfg.policy.ships_hints:
                 cost += len(disp.task.inputs) * self.cfg.testbed.index_lookup_s
@@ -354,6 +369,9 @@ class DiffusionSim:
             self.local_hits += 1
             t.cache_hits += 1
             t.bytes_local += size
+            if self.recorder is not None:
+                self.recorder.emit("input", t=now, tid=t.tid, eid=node.eid,
+                                   oid=oid, source="local", bytes=size)
             fid = self.net.start(
                 size, (node.disk_read,),
                 lambda tt, t=t, n=node, o=oid, f=nxt: (n.cache.unpin(o), f(tt)),
@@ -373,6 +391,10 @@ class DiffusionSim:
             self.peer_hits += 1
             t.peer_hits += 1
             t.bytes_cache_to_cache += size
+            if self.recorder is not None:
+                self.recorder.emit("input", t=now, tid=t.tid, eid=node.eid,
+                                   oid=oid, source="peer", bytes=size,
+                                   peer=src.eid)
             tb = self.cfg.testbed
 
             def done_peer(tt, t=t, n=node, o=oid, s=src, sz=size, f=nxt):
@@ -389,6 +411,9 @@ class DiffusionSim:
         # persistent store read
         self.store_reads += 1
         t.bytes_store += size
+        if self.recorder is not None:
+            self.recorder.emit("input", t=now, tid=t.tid, eid=node.eid,
+                               oid=oid, source="store", bytes=size)
         tb = self.cfg.testbed
 
         def done_store(tt, t=t, n=node, o=oid, sz=size, f=nxt):
@@ -439,6 +464,8 @@ class DiffusionSim:
         if self._task_gen.get(t.tid, 0) != gen:
             return
         t.state = TaskState.RUNNING
+        if self.recorder is not None:
+            self.recorder.emit("exec_start", t=now, tid=t.tid, eid=node.eid)
         dt = (t.compute_seconds + self.cfg.testbed.task_overhead_s) * node.slowdown
         self.loop.after(dt, lambda tt, t=t, n=node, g=gen: self._write_outputs(t, n, 0, g, tt))
 
@@ -473,6 +500,9 @@ class DiffusionSim:
             self.dispatcher.sizes[ob.oid] = ob.size_bytes
         self._task_flows.pop(t.tid, None)
         self._t_last_complete = now
+        if self.recorder is not None:
+            self.recorder.emit("exec_end", t=now, tid=t.tid, eid=node.eid,
+                               ok=True)
         cancel_tid = self.dispatcher.task_finished(t, now, ok=True)
         if cancel_tid is not None:
             self._cancel_task(cancel_tid)

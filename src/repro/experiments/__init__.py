@@ -26,11 +26,11 @@ Quick use::
     report_sim.diff(report_rt)     # field-by-field, shared schema
 """
 from .engines import (ENGINES, Engine, RuntimeEngine, SimEngine,
-                      build_provisioner, build_sim_config, build_workload,
-                      make_engine, run_experiment)
+                      build_provisioner, build_recorder, build_sim_config,
+                      build_workload, make_engine, run_experiment)
 from .report import IDENTITY_FIELDS, RunReport, build_report
 from .spec import (ALIASES, DOCUMENTED_DIVERGENCES, CacheSpec, ClusterSpec,
-                   ExperimentSpec, ProvisionerSpec, WorkloadSpec,
+                   ExperimentSpec, ObserveSpec, ProvisionerSpec, WorkloadSpec,
                    check_alias_map, with_overrides)
 from .sweep import Sweep, SweepCell, load_results
 
@@ -43,6 +43,7 @@ __all__ = [
     "Engine",
     "ExperimentSpec",
     "IDENTITY_FIELDS",
+    "ObserveSpec",
     "ProvisionerSpec",
     "RunReport",
     "RuntimeEngine",
@@ -51,6 +52,7 @@ __all__ = [
     "SweepCell",
     "WorkloadSpec",
     "build_provisioner",
+    "build_recorder",
     "build_report",
     "build_sim_config",
     "build_workload",

@@ -43,6 +43,7 @@ from repro.core.provisioner import DynamicResourceProvisioner, AllocationPolicy
 from repro.core.runtime import DiffusionRuntime, SHAPE_ONLY_PAYLOAD
 from repro.core.simulator import DiffusionSim, SimConfig, SimResult
 from repro.core.testbeds import TESTBEDS
+from repro.obs import Recorder, outcome_record
 from repro.workloads import (ARRIVALS, POPULARITY, MetricsCollector, Workload,
                              generate, replay)
 
@@ -123,6 +124,22 @@ def build_sim_config(spec: ExperimentSpec,
 _SHAPE_ONLY_PAYLOAD = SHAPE_ONLY_PAYLOAD
 
 
+def build_recorder(spec: ExperimentSpec) -> Optional[Recorder]:
+    """The engine-side half of ``spec.observe``: None with events off (the
+    hot paths then carry only a None-check), a bounded drop-oldest ring
+    otherwise.  Both adapters install the same object on their dispatcher,
+    runtime/sim and provisioner, so one ring holds the whole run."""
+    if not spec.observe.events:
+        return None
+    return Recorder(spec.observe.ring_capacity)
+
+
+def _finish_observe(spec: ExperimentSpec, recorder: Optional[Recorder]) -> None:
+    """Post-run sink: dump the ring to ``observe.sink_path`` if bound."""
+    if recorder is not None and spec.observe.sink_path is not None:
+        recorder.dump(spec.observe.sink_path)
+
+
 def _reject(engine: str, knob: str, value, supported) -> None:
     raise ValueError(
         f"spec sets {knob}={value!r}, which the {engine} engine does not "
@@ -161,6 +178,8 @@ class SimEngine:
         self.sim: Optional[DiffusionSim] = None
         self.workload: Optional[Workload] = None
         self.provisioner: Optional[DynamicResourceProvisioner] = None
+        self.recorder: Optional[Recorder] = None
+        self.last_outcomes: Optional[list[dict]] = None
         self.result = None
         self.metrics = None
 
@@ -178,7 +197,14 @@ class SimEngine:
         self.spec = spec
         self.provisioner = (build_provisioner(spec.provisioner)
                             if spec.provisioner else None)
+        self.recorder = build_recorder(spec)
         self.cfg = build_sim_config(spec, self.provisioner)
+        # installed on the config BEFORE construction: the sim ctor swaps
+        # the recorder clock to the simulated clock and hands the recorder
+        # to its dispatcher
+        self.cfg.recorder = self.recorder
+        if self.provisioner is not None:
+            self.provisioner.recorder = self.recorder
         self.sim = DiffusionSim(self.cfg)
         self.workload = workload if workload is not None \
             else build_workload(spec.workload)
@@ -195,6 +221,10 @@ class SimEngine:
         m = MetricsCollector(tb, cpus_per_node=self.cfg.cpus_per_node).collect(
             r, n_submitted=self.sim.n_submitted)
         self.result, self.metrics = r, m
+        # measured (here: simulated) per-task outcomes -- sim clocks are
+        # already run-relative, no rebasing
+        self.last_outcomes = [outcome_record(t) for t in r.dispatcher.completed]
+        _finish_observe(self.spec, self.recorder)
         prov = self.provisioner
         return build_report(
             self.spec, self.name, r, m, wall_s=wall,
@@ -271,6 +301,8 @@ class RuntimeEngine:
         self.provisioner: Optional[DynamicResourceProvisioner] = None
         self.task_fn_name = task_fn_name
         self._driver: Optional[_ProvisionerDriver] = None
+        self.recorder: Optional[Recorder] = None
+        self.last_outcomes: Optional[list[dict]] = None
         self.result = None
         self.metrics = None
 
@@ -297,6 +329,7 @@ class RuntimeEngine:
             _reject("runtime", "speculation_factor", spec.speculation_factor,
                     "0.0 (no speculative twins in the threaded runtime)")
         self.spec = spec
+        self.recorder = build_recorder(spec)
         if spec.hosts > 0:
             from repro.fleet import FleetRuntime
 
@@ -311,7 +344,8 @@ class RuntimeEngine:
                 index_update_batch=spec.index_update_batch,
                 wire_batch=spec.wire_batch,
                 local_dispatch=spec.local_dispatch,
-                task_fn_name=self.task_fn_name)
+                task_fn_name=self.task_fn_name,
+                recorder=self.recorder)
         else:
             self.runtime = DiffusionRuntime(
                 n_executors=spec.cluster.n_nodes,
@@ -320,7 +354,8 @@ class RuntimeEngine:
                 cache_capacity_bytes=(spec.cache.capacity_bytes
                                       if spec.cache.enabled else 0),
                 seed=spec.seed,
-                index_update_batch=spec.index_update_batch)
+                index_update_batch=spec.index_update_batch,
+                recorder=self.recorder)
         self.workload = workload if workload is not None \
             else build_workload(spec.workload)
         return self
@@ -364,6 +399,7 @@ class RuntimeEngine:
                     trigger_cooldown_s=ps.trigger_cooldown_s * ts),
                 allocate_quantum=(self.spec.threads_per_host
                                   if self.spec.hosts > 0 else 1))
+            self.provisioner.recorder = self.recorder
             self._driver = _ProvisionerDriver(rt, self.provisioner,
                                               ps.period_s * ts)
             self._driver.start()
@@ -389,6 +425,11 @@ class RuntimeEngine:
         m = MetricsCollector(tb, cpus_per_node=1).collect(
             r, n_submitted=len(self.workload))
         self.result, self.metrics = r, m
+        # measured per-task outcomes, rebased from the monotonic clock to
+        # seconds since run() started (same base as _result_view)
+        self.last_outcomes = [outcome_record(t, base=t0)
+                              for t in rt.dispatcher.completed]
+        _finish_observe(self.spec, self.recorder)
         prov = self.provisioner
         return build_report(
             self.spec, self.name, r, m, wall_s=wall,

@@ -74,6 +74,9 @@ class RunReport:
     # -- dispatcher internals (runtime only; {} on sim runs) ----------------
     dispatch_stats: dict            # DispatchStats.as_dict(): pump counts,
                                     # lock hold time, wire frame/msg totals
+    # -- sim<->real divergence (repro.obs.diff output; {} unless a diff
+    # joined this run's measured outcomes against a sim-twin replay) --------
+    task_divergence: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -94,18 +97,25 @@ class RunReport:
         unknown = sorted(set(d) - names)
         if unknown:
             raise ValueError(f"RunReport: unknown field(s) {unknown}")
-        missing = sorted(names - set(d))
+        # defaulted fields (task_divergence) may be absent: pre-PR-7 result
+        # files stay readable; fields WITHOUT defaults stay hard-required
+        required = {f.name for f in dataclasses.fields(cls)
+                    if f.default is dataclasses.MISSING
+                    and f.default_factory is dataclasses.MISSING}  # type: ignore
+        missing = sorted(required - set(d))
         if missing:
             raise ValueError(f"RunReport: missing field(s) {missing}")
         kw = dict(d)
         kw["pool_log"] = tuple(tuple(p) for p in d["pool_log"])
         kw["bytes_by_kind"] = dict(d["bytes_by_kind"])
         kw["dispatch_stats"] = dict(d["dispatch_stats"])
+        if "task_divergence" in kw:
+            kw["task_divergence"] = dict(d["task_divergence"])
         return cls(**kw)
 
     def diff(self, other: "RunReport",
              ignore: tuple[str, ...] = IDENTITY_FIELDS
-             + ("pool_log", "dispatch_stats"),
+             + ("pool_log", "dispatch_stats", "task_divergence"),
              ) -> dict[str, tuple]:
         """Field-by-field comparison: {field: (self value, other value)}
         for every differing field not in ``ignore``.  Empty dict == the two
@@ -123,7 +133,8 @@ class RunReport:
 
 def build_report(spec, engine: str, result, metrics, *, wall_s: float,
                  n_allocated: int = 0, n_released: int = 0,
-                 dispatch_stats: Mapping | None = None) -> RunReport:
+                 dispatch_stats: Mapping | None = None,
+                 task_divergence: Mapping | None = None) -> RunReport:
     """Assemble a RunReport from a `SimResult`(-shaped) ``result`` and the
     `RunMetrics` computed from it.  Both engine adapters funnel through
     here, which is what pins the schemas together."""
@@ -164,4 +175,5 @@ def build_report(spec, engine: str, result, metrics, *, wall_s: float,
         n_released=n_released,
         pool_log=tuple(tuple(p) for p in result.pool_log),
         dispatch_stats=dict(dispatch_stats or {}),
+        task_divergence=dict(task_divergence or {}),
     )

@@ -166,6 +166,27 @@ class WorkloadSpec:
 
 
 @dataclass(frozen=True)
+class ObserveSpec:
+    """Lifecycle-event recording (repro.obs, DESIGN.md §10).  Off by
+    default: the engines' hot paths carry only a None-check.  When on, the
+    engine installs a bounded `Recorder` (drop-oldest ring of
+    ``ring_capacity`` events) and, if ``sink_path`` is set, dumps the ring
+    to JSONL after the run."""
+
+    events: bool = False
+    sink_path: Optional[str] = None
+    ring_capacity: int = 65536
+
+    def __post_init__(self) -> None:
+        if self.ring_capacity < 1:
+            raise ValueError("ring_capacity must be >= 1")
+        if self.sink_path is not None and not self.events:
+            raise ValueError("observe.sink_path requires observe.events "
+                             "(a sink with recording off would silently "
+                             "write an empty trace)")
+
+
+@dataclass(frozen=True)
 class ExperimentSpec:
     """The one declarative object either engine executes (DESIGN.md §7)."""
 
@@ -198,6 +219,8 @@ class ExperimentSpec:
     # scheduling-neutral under batch-synchronous replay (DESIGN.md §9).
     wire_batch: int = 64
     local_dispatch: bool = False
+    # observability (PR 7): lifecycle-event recording, engine-neutral
+    observe: ObserveSpec = field(default_factory=ObserveSpec)
 
     def __post_init__(self) -> None:
         DispatchPolicy(self.policy)         # raises on unknown value
@@ -270,6 +293,7 @@ _SUBSPECS: dict[tuple[type, str], type] = {
     (ExperimentSpec, "cluster"): ClusterSpec,
     (ExperimentSpec, "cache"): CacheSpec,
     (ExperimentSpec, "provisioner"): ProvisionerSpec,
+    (ExperimentSpec, "observe"): ObserveSpec,
 }
 
 
@@ -487,13 +511,16 @@ def check_alias_map() -> None:
             problems.append(f"{path}: documented divergence no longer "
                             f"exists; remove it from DOCUMENTED_DIVERGENCES")
     sim_covered = {s for s, _ in ALIASES.values() if s is not None}
+    # testbed/executor_slowdown/fail_at are sim-only experiment machinery;
+    # recorder is the obs layer's injection point on BOTH engines, built by
+    # the engine adapters from spec.observe (not a knob a spec aliases).
     missing = set(sim) - sim_covered - {"testbed", "executor_slowdown",
-                                        "fail_at"}
+                                        "fail_at", "recorder"}
     if missing:
         problems.append(f"SimConfig fields not covered by ALIASES: "
                         f"{sorted(missing)}")
     rt_covered = {r for _, r in ALIASES.values() if r is not None}
-    missing_rt = set(rt) - rt_covered - {"store"}
+    missing_rt = set(rt) - rt_covered - {"store", "recorder"}
     if missing_rt:
         problems.append(f"DiffusionRuntime kwargs not covered by ALIASES: "
                         f"{sorted(missing_rt)}")

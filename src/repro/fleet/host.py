@@ -220,15 +220,20 @@ class HostExecutor(CacheExecutorBase):
         self.host.send_update(self.eid, added, removed)
 
     def _resolve(self, oid: str, size: int, hints: dict[str, list],
-                 routes: dict[str, list], led: dict[str, int]) -> Any:
+                 routes: dict[str, list], led: dict[str, int],
+                 tid: str = "") -> Any:
         """Mirror of DiffusionRuntime._resolve: local cache -> hinted peers
         in hint order (local peek for same-host executors, socket fetch for
         remote ones) -> store replica.  Accounting fields match
         core.runtime._InputLedger one-for-one."""
+        rec = self.host.recorder
         payload = self.cache_lookup(oid)
         if payload is not None:
             led["cache_hits"] += 1
             led["bytes_local"] += size
+            if rec is not None:
+                rec.emit("input", tid=tid, eid=self.eid, oid=oid,
+                         source="local", bytes=size)
             return payload
         led["cache_misses"] += 1
         for peer_id in hints.get(oid, ()):
@@ -245,6 +250,9 @@ class HostExecutor(CacheExecutorBase):
             if payload is not None:
                 led["peer_hits"] += 1
                 led["bytes_cache_to_cache"] += size
+                if rec is not None:
+                    rec.emit("input", tid=tid, eid=self.eid, oid=oid,
+                             source="peer", bytes=size, peer=peer_id)
                 self._admit(DataObject(oid, size), payload)
                 return payload
         ent = self.host.store.get(oid)
@@ -252,6 +260,9 @@ class HostExecutor(CacheExecutorBase):
             raise KeyError(oid)   # matches the central store's KeyError
         obj, payload = ent
         led["bytes_store"] += obj.size_bytes
+        if rec is not None:
+            rec.emit("input", tid=tid, eid=self.eid, oid=oid,
+                     source="store", bytes=obj.size_bytes)
         self._admit(obj, payload)
         return payload
 
@@ -260,10 +271,15 @@ class HostExecutor(CacheExecutorBase):
                "cache_hits": 0, "peer_hits": 0, "cache_misses": 0}
         hints = msg.get("hints") or {}
         routes = msg.get("routes") or {}
+        rec = self.host.recorder
+        tid = msg["tid"]
         ok, err, result = True, None, None
         try:
-            inputs = {oid: self._resolve(oid, size, hints, routes, led)
+            inputs = {oid: self._resolve(oid, size, hints, routes, led,
+                                         tid=tid)
                       for oid, size in msg["inputs"]}
+            if rec is not None:
+                rec.emit("exec_start", tid=tid, eid=self.eid)
             fn = self.host.task_fn
             if fn is not None:
                 result = fn(**inputs) if _wants_kwargs(fn) else fn(inputs)
@@ -272,7 +288,9 @@ class HostExecutor(CacheExecutorBase):
                 self._admit(DataObject(oid, int(osize)), payload)
         except Exception as e:  # noqa: BLE001 - task failure is data
             ok, err = False, f"{type(e).__name__}: {e}"
-        self.host.send_done(self.eid, msg["tid"], ok, led, err)
+        if rec is not None:
+            rec.emit("exec_end", tid=tid, eid=self.eid, ok=ok)
+        self.host.send_done(self.eid, tid, ok, led, err)
 
 
 # --------------------------------------------------------------------------
@@ -283,13 +301,22 @@ class FleetHost:
     def __init__(self, central: tuple[str, int], host_id: str, codec: str,
                  task_fn_name: Optional[str], hb_interval_s: float,
                  bind_host: str = "127.0.0.1", wire_batch: int = 64,
-                 local_dispatch: bool = False) -> None:
+                 local_dispatch: bool = False,
+                 observe_capacity: int = 0) -> None:
         self.host_id = host_id
         self.codec = codec
         self.task_fn = resolve_task_fn(task_fn_name)
         self.hb_interval_s = hb_interval_s
         self.bind_host = bind_host
         self.local_dispatch = local_dispatch
+        # host-side event recording (DESIGN.md §10): same Recorder class as
+        # the central, drained upstream with each done/heartbeat flush
+        if observe_capacity > 0:
+            from repro.obs.recorder import Recorder
+
+            self.recorder: Optional[Any] = Recorder(observe_capacity)
+        else:
+            self.recorder = None
         self.store: dict[str, tuple[DataObject, Any]] = {}
         self.executors: dict[str, HostExecutor] = {}
         self.peers = PeerClient(codec)
@@ -330,16 +357,34 @@ class FleetHost:
     def send_done(self, eid: str, tid: str, ok: bool, led: dict,
                   err: Optional[str]) -> None:
         try:
+            # drained events ride (buffered) immediately before the flushed
+            # done: the attempt's input/exec events arrive in the frame that
+            # carries its completion, and the updates-before-done ordering
+            # is untouched because everything shares the one outbox buffer
+            self._forward_events()
             self.out.send({"t": "done", "eid": eid, "tid": tid, "ok": ok,
                            "ledger": led, "error": err}, flush=True)
         except ChannelClosed:
             self._stop.set()
+
+    def _forward_events(self) -> None:
+        """Drain the host recorder into one buffered ``events`` message.
+        A no-op with recording off; holds no host scheduling lock (the
+        recorder has its own), so it can never reorder the outbox."""
+        if self.recorder is None:
+            return
+        events = self.recorder.drain()
+        if events:
+            self.out.send({"t": "events", "host": self.host_id,
+                           "events": events})
 
     def _heartbeat(self) -> None:
         while not self._stop.wait(self.hb_interval_s):
             try:
                 # flushing here bounds buffered-update staleness to one
                 # heartbeat interval even on a host with no completions
+                # (and bounds recorded-event staleness the same way)
+                self._forward_events()
                 self.out.send({"t": "hb", "host_id": self.host_id},
                               flush=True)
             except ChannelClosed:
@@ -433,6 +478,7 @@ class FleetHost:
             self.peer_server.stop()
             self.peers.close()
             try:
+                self._forward_events()   # last events ride the final flush
                 self.out.close()   # flush buffered updates, then close up
             except ChannelClosed:
                 self.up.close()
@@ -488,8 +534,10 @@ class FleetHost:
 def host_main(central_host: str, central_port: int, host_id: str,
               codec: str = "auto", task_fn_name: Optional[str] = None,
               hb_interval_s: float = 0.25, bind_host: str = "127.0.0.1",
-              wire_batch: int = 64, local_dispatch: bool = False) -> None:
+              wire_batch: int = 64, local_dispatch: bool = False,
+              observe_capacity: int = 0) -> None:
     """Entry point for the spawned host process (see manager.py)."""
     FleetHost((central_host, central_port), host_id, codec,
               task_fn_name, hb_interval_s, bind_host=bind_host,
-              wire_batch=wire_batch, local_dispatch=local_dispatch).run()
+              wire_batch=wire_batch, local_dispatch=local_dispatch,
+              observe_capacity=observe_capacity).run()

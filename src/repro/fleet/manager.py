@@ -84,7 +84,8 @@ class HostManager:
                  spawn_timeout_s: float = 60.0,
                  bind_host: str = "127.0.0.1",
                  wire_batch: int = 64,
-                 local_dispatch: bool = False) -> None:
+                 local_dispatch: bool = False,
+                 observe_capacity: int = 0) -> None:
         self.rt = rt
         self.codec = _resolve_codec(codec)
         self.task_fn_name = task_fn_name
@@ -94,6 +95,9 @@ class HostManager:
         self.bind_host = bind_host
         self.wire_batch = wire_batch
         self.local_dispatch = local_dispatch
+        # >0: spawned hosts record lifecycle events into a ring of this
+        # capacity and forward them upstream (0 = recording off, free)
+        self.observe_capacity = observe_capacity
         self._ctx = multiprocessing.get_context("spawn")
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -125,7 +129,8 @@ class HostManager:
             target=host_main,
             args=(self.addr[0], self.addr[1], host_id, self.codec,
                   self.task_fn_name, self.hb_interval_s, self.bind_host,
-                  self.wire_batch, self.local_dispatch),
+                  self.wire_batch, self.local_dispatch,
+                  self.observe_capacity),
             daemon=True, name=f"fleet-{host_id}")
         proc.start()
         if not slot["event"].wait(self.spawn_timeout_s):

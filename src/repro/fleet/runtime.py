@@ -111,6 +111,7 @@ class FleetRuntime(DiffusionRuntime):
         local_dispatch: bool = False,
         lease_depth: int = 2,
         bind_host: str = "127.0.0.1",
+        recorder=None,
     ) -> None:
         if hosts < 0:
             # hosts=0 builds an empty fleet (unit tests drive the receive
@@ -130,7 +131,8 @@ class FleetRuntime(DiffusionRuntime):
                          cache_policy=cache_policy,
                          cache_capacity_bytes=cache_capacity_bytes,
                          store=store, seed=seed,
-                         index_update_batch=index_update_batch)
+                         index_update_batch=index_update_batch,
+                         recorder=recorder)
         #: host_id -> {tid: Task} parked on a lease, awaiting claim/reclaim
         self._leases: dict[str, dict[str, Any]] = {}
         #: applied index updates pending forward to host replicas
@@ -141,7 +143,11 @@ class FleetRuntime(DiffusionRuntime):
             hb_timeout_s=heartbeat_timeout_s,
             spawn_timeout_s=spawn_timeout_s,
             bind_host=bind_host, wire_batch=wire_batch,
-            local_dispatch=local_dispatch)
+            local_dispatch=local_dispatch,
+            # hosts mirror the central ring's capacity; 0 keeps host-side
+            # recording compiled out entirely (no Recorder import there)
+            observe_capacity=(recorder.capacity
+                              if recorder is not None else 0))
         try:
             for _ in range(hosts):
                 self.add_host()
@@ -390,6 +396,13 @@ class FleetRuntime(DiffusionRuntime):
                     need_pump = True
                 elif kind == "claim":
                     self._remote_claim_locked(handle, msg)
+                elif kind == "events" and self.recorder is not None:
+                    # host-recorded lifecycle events ingest in wire order
+                    # (the host enqueued them just before the done they
+                    # describe, so exec events land before the central's
+                    # own task_done).  The recorder has its own lock and
+                    # never calls out, so taking it here cannot deadlock.
+                    self.recorder.ingest(msg["events"])
                 # hb riding in a batch already refreshed handle.last_hb
         if need_pump:
             self._pump()
@@ -457,11 +470,19 @@ class FleetRuntime(DiffusionRuntime):
 
     def dispatch_stats(self) -> dict:
         """Central counters plus the wire counters of live connections
-        (retired hosts were folded into ``stats`` at drop time)."""
-        live = self.manager.live_handles()
+        (retired hosts were folded into ``stats`` at drop time).
+
+        The live-handle snapshot is taken UNDER the runtime lock: the
+        ``dead`` flag flips and the counter fold (`_drop_host_locked`)
+        happen under this same lock, so a host retiring concurrently is
+        counted exactly once.  (Snapshotting before acquiring the lock --
+        the old shape -- let a host die in the gap and be counted twice:
+        once from the stale live list, once from the folded stats.)
+        Lock order runtime._lock -> manager._lock is safe; the manager
+        never calls back into the runtime while holding its own lock."""
         with self._lock:
             d = self.stats.as_dict()
-            for h in live:
+            for h in self.manager.live_handles():
                 d["frames_sent"] += h.frames_sent
                 d["msgs_sent"] += h.msgs_sent
                 d["frames_recv"] += h.frames_recv

@@ -35,6 +35,18 @@ messages in list order, so a batch is exactly equivalent to its messages
 sent as consecutive frames -- the updates-before-done ordering contract
 holds within and across batches because batching (core.channel.
 BatchingChannel / HostHandle.send_batch) never reorders the buffer.
+
+Observability frames (DESIGN.md §10)
+------------------------------------
+When event recording is on, hosts additionally send
+``{"t": "events", "host": host_id, "events": [...]}`` upstream: the
+host-side `repro.obs.Recorder` ring drained into one message.  Events
+ride the SAME BatchingChannel buffer as everything else -- a host
+enqueues them (buffered) immediately before each flushed ``done`` and
+before each heartbeat -- so an attempt's input/exec events arrive in the
+frame that carries its completion, and recording piggybacks on the
+updates-before-done contract instead of adding a side channel that could
+reorder the seam.  Receivers that don't record simply drop the kind.
 """
 from __future__ import annotations
 

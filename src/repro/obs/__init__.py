@@ -1,0 +1,41 @@
+"""repro.obs -- low-overhead observability for both engines and the fleet.
+
+Per-task lifecycle events (arrived -> queued -> leased/claimed -> dispatched
+-> per-input resolve -> exec start/end -> done/failed/requeued, plus pool and
+pump transitions) recorded into a bounded ring buffer (`Recorder`), exported
+as Chrome-trace JSON (`export.chrome_trace`) and diffed task-by-task between
+a measured run and its simulator replay (`diff.diff_outcomes`).
+
+Recording is off by default and free when off: every hot-path hook is a
+``if recorder is not None`` guard.  See DESIGN.md section 10.
+"""
+from .events import (
+    EVENT_SCHEMA_VERSION,
+    EVENT_KINDS,
+    LIFECYCLE_KINDS,
+    OUTCOME_FIELDS,
+    exec_index,
+    lifecycle_fingerprints,
+    outcome_record,
+)
+from .recorder import Recorder, load_events
+from .export import chrome_trace
+from .diff import (diff_outcomes, format_divergence, sim_replay_outcomes,
+                   sim_twin_spec)
+
+__all__ = [
+    "EVENT_SCHEMA_VERSION",
+    "EVENT_KINDS",
+    "LIFECYCLE_KINDS",
+    "OUTCOME_FIELDS",
+    "Recorder",
+    "chrome_trace",
+    "diff_outcomes",
+    "exec_index",
+    "format_divergence",
+    "lifecycle_fingerprints",
+    "load_events",
+    "outcome_record",
+    "sim_replay_outcomes",
+    "sim_twin_spec",
+]

@@ -1,0 +1,83 @@
+"""Chrome-trace (chrome://tracing / Perfetto) JSON export.
+
+One track per executor (``ph:"X"`` complete events spanning exec_start ->
+exec_end, named by task id), plus counter tracks (``ph:"C"``) for executor
+pool size, dispatcher queue depth, and cumulative cache-admitted bytes.
+Timestamps are rebased so the trace starts at ts=0 regardless of the
+emitters' clock bases.
+"""
+from __future__ import annotations
+
+import json
+
+from .events import (
+    EXEC_END,
+    EXEC_START,
+    INPUT,
+    POOL,
+    PUMP,
+    SOURCE_LOCAL,
+    exec_index,
+)
+
+_PID = 0
+_COUNTER_TID = 0  # counter tracks render per-process; tid is cosmetic
+
+
+def chrome_trace(events, path=None):
+    """Build a Chrome-trace dict from an event stream; optionally write it
+    to ``path``.  Returns the trace dict (``{"traceEvents": [...]}``)."""
+    events = sorted(events, key=lambda e: e.get("t", 0.0))
+    t0 = events[0]["t"] if events else 0.0
+
+    def us(t):
+        return round((t - t0) * 1e6, 3)
+
+    trace = []
+    # Executor tracks, ordered by normalized index.
+    eids = sorted({e["eid"] for e in events if e.get("eid") is not None},
+                  key=lambda x: (isinstance(exec_index(x), str),
+                                 exec_index(x)))
+    tid_of = {eid: i + 1 for i, eid in enumerate(eids)}
+    for eid, track in tid_of.items():
+        trace.append({"ph": "M", "pid": _PID, "tid": track,
+                      "name": "thread_name", "args": {"name": eid}})
+
+    open_execs: dict = {}
+    cache_bytes = 0
+    for e in events:
+        k = e["kind"]
+        if k == EXEC_START:
+            open_execs[e["tid"]] = e
+        elif k == EXEC_END:
+            s = open_execs.pop(e["tid"], None)
+            if s is None:
+                continue
+            eid = e.get("eid") or s.get("eid")
+            trace.append({
+                "ph": "X", "pid": _PID, "tid": tid_of.get(eid, 0),
+                "name": e["tid"], "cat": "task",
+                "ts": us(s["t"]), "dur": max(us(e["t"]) - us(s["t"]), 0.0),
+                "args": {"executor": eid},
+            })
+        elif k == POOL:
+            trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                          "name": "pool_size", "ts": us(e["t"]),
+                          "args": {"executors": e["size"]}})
+        elif k == PUMP:
+            trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                          "name": "queue_depth", "ts": us(e["t"]),
+                          "args": {"tasks": e["queue"]}})
+        elif k == INPUT and e.get("source") != SOURCE_LOCAL:
+            # Cumulative bytes admitted into caches (peer + store reads both
+            # end in a cache admit; local hits move nothing).
+            cache_bytes += e.get("bytes", 0)
+            trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                          "name": "cache_bytes", "ts": us(e["t"]),
+                          "args": {"bytes": cache_bytes}})
+
+    out = {"traceEvents": trace, "displayTimeUnit": "ms"}
+    if path is not None:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(out, fh)
+    return out

@@ -14,8 +14,9 @@ from .arrivals import (ARRIVALS, ArrivalProcess, BatchArrivals,
 from .metrics import MetricsCollector, RunMetrics
 from .popularity import (POPULARITY, PopularityModel, ShiftingWorkingSet,
                          StackingTrace, UniformScan, ZipfPopularity)
-from .trace import (SUPPORTED_VERSIONS, TRACE_VERSION, events_fingerprint,
-                    record, replay)
+from .trace import (SUPPORTED_VERSIONS, TRACE_VERSION, TRACE_VERSION_V3,
+                    events_fingerprint, read_outcomes, record, record_v3,
+                    replay)
 from .workload import TaskEvent, Workload, generate
 
 __all__ = [
@@ -34,12 +35,15 @@ __all__ = [
     "SineWaveArrivals",
     "StackingTrace",
     "TRACE_VERSION",
+    "TRACE_VERSION_V3",
     "TaskEvent",
     "UniformScan",
     "Workload",
     "ZipfPopularity",
     "events_fingerprint",
     "generate",
+    "read_outcomes",
     "record",
+    "record_v3",
     "replay",
 ]

@@ -18,6 +18,19 @@ Version history:
       task line is self-describing (k-input byte totals without a catalog
       join) and size drift between the task lines and the catalog is a
       hard error instead of silent disagreement.
+  v3  measured-outcome era (written by :func:`record_v3` only; plain
+      :func:`record` still writes v2 -- arrivals-only traces gain nothing
+      from the bump).  A v3 trace is a v2 trace plus, after the task rows,
+      one ``{"kind": "outcome", ...}`` row per *measured* task completion
+      (executor, attempts, per-source byte split, queue/exec/turnaround
+      latencies -- the `repro.obs.events.outcome_record` schema), and its
+      header carries ``n_outcomes`` so truncation stays a hard error.
+      :func:`replay` reads the arrival half of a v3 trace bit-identically
+      to v2 (outcome rows don't exist to it beyond the count check);
+      :func:`read_outcomes` reads the measured half.  One file therefore
+      carries both what a run was ASKED to do and what a real fleet
+      MEASURED doing it -- the sim twin replays the former, repro.obs.diff
+      joins the latter against the sim's prediction per task.
 
 Round-trip guarantee: ``replay(record(wl))`` reproduces the *exact* event
 sequence -- same tids, arrival times, input/output sets and sizes -- because
@@ -43,8 +56,10 @@ from .workload import TaskEvent, Workload
 
 #: version written by :func:`record`
 TRACE_VERSION = 2
+#: version written by :func:`record_v3` (arrivals + measured outcomes)
+TRACE_VERSION_V3 = 3
 #: versions :func:`replay` understands (v1 = single-input era traces)
-SUPPORTED_VERSIONS = (1, 2)
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 
 def _open(path_or_file: Union[str, Path, IO[str]], mode: str):
@@ -80,6 +95,81 @@ def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
     return len(wl.events)
 
 
+def record_v3(wl: Workload, path_or_file: Union[str, Path, IO[str]],
+              outcomes: list[dict]) -> int:
+    """Write ``wl`` plus measured per-task ``outcomes`` as JSONL (schema
+    v3).  Every outcome must carry at least the
+    `repro.obs.events.OUTCOME_FIELDS` keys (extra keys -- e.g. raw
+    timestamps -- are preserved); a missing key hard-errors before the
+    first byte is written.  Returns the task events written."""
+    from repro.obs.events import OUTCOME_FIELDS
+
+    for i, rec in enumerate(outcomes):
+        missing = [k for k in OUTCOME_FIELDS if k not in rec]
+        if missing:
+            raise ValueError(f"outcome {i} (tid={rec.get('tid')!r}) is "
+                             f"missing field(s) {missing}")
+    sizes = {ob.oid: ob.size_bytes for ob in wl.objects}
+    f, should_close = _open(path_or_file, "w")
+    try:
+        f.write(json.dumps({
+            "kind": "header", "version": TRACE_VERSION_V3, "name": wl.name,
+            "n_objects": len(wl.objects), "n_tasks": len(wl.events),
+            "n_outcomes": len(outcomes), "spec": wl.spec,
+        }, sort_keys=True) + "\n")
+        for ob in wl.objects:
+            f.write(json.dumps({"kind": "object", "oid": ob.oid,
+                                "size": ob.size_bytes}, sort_keys=True) + "\n")
+        for e in wl.events:
+            f.write(json.dumps({
+                "kind": "task", "t": e.t, "tid": e.tid,
+                "inputs": [[oid, sizes[oid]] for oid in e.inputs],
+                "outputs": [[oid, sz] for oid, sz in e.outputs],
+                "compute_s": e.compute_seconds,
+                "meta_ops": e.store_metadata_ops,
+            }, sort_keys=True) + "\n")
+        for rec in outcomes:
+            f.write(json.dumps({"kind": "outcome", **rec},
+                               sort_keys=True) + "\n")
+    finally:
+        if should_close:
+            f.close()
+    return len(wl.events)
+
+
+def read_outcomes(path_or_file: Union[str, Path, IO[str]]) -> list[dict]:
+    """Read the measured-outcome rows of a v3 trace.  Hard-errors on any
+    other version (a v1/v2 trace HAS no measured half -- silently
+    returning [] would read as 'the run completed nothing')."""
+    f, should_close = _open(path_or_file, "r")
+    try:
+        lines = (ln for ln in f if ln.strip())
+        try:
+            header = json.loads(next(lines))
+        except StopIteration:
+            raise ValueError("empty trace file") from None
+        if header.get("kind") != "header":
+            raise ValueError("trace must start with a header line")
+        if header.get("version") != TRACE_VERSION_V3:
+            raise ValueError(
+                f"trace version {header.get('version')!r} carries no "
+                f"measured outcomes (need v{TRACE_VERSION_V3})")
+        out = []
+        for ln in lines:
+            rec = json.loads(ln)
+            if rec.get("kind") == "outcome":
+                rec.pop("kind")
+                out.append(rec)
+    finally:
+        if should_close:
+            f.close()
+    if len(out) != header.get("n_outcomes"):
+        raise ValueError(
+            f"truncated trace: header promises {header.get('n_outcomes')} "
+            f"outcomes, found {len(out)}")
+    return out
+
+
 def _parse_inputs(rec: dict, version: int, sizes: dict[str, int]) -> tuple[str, ...]:
     if version == 1:
         return tuple(rec["inputs"])
@@ -113,6 +203,7 @@ def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
         objects: list[DataObject] = []
         sizes: dict[str, int] = {}
         events: list[TaskEvent] = []
+        n_outcomes = 0
         for ln in lines:
             rec = json.loads(ln)
             kind = rec.get("kind")
@@ -127,6 +218,10 @@ def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
                     compute_seconds=rec["compute_s"],
                     store_metadata_ops=rec["meta_ops"],
                 ))
+            elif kind == "outcome" and version >= 3:
+                # measured half of a v3 trace: not this reader's business
+                # (read_outcomes consumes it), but still truncation-checked
+                n_outcomes += 1
             else:
                 raise ValueError(f"unknown trace record kind {kind!r}")
     finally:
@@ -138,6 +233,10 @@ def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
             f"truncated trace: header promises {header.get('n_objects')} "
             f"objects / {header.get('n_tasks')} tasks, "
             f"found {len(objects)} / {len(events)}")
+    if version >= 3 and n_outcomes != header.get("n_outcomes"):
+        raise ValueError(
+            f"truncated trace: header promises {header.get('n_outcomes')} "
+            f"outcomes, found {n_outcomes}")
     return Workload(header.get("name", "trace"), objects, events,
                     spec=header.get("spec"))
 

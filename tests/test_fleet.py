@@ -19,6 +19,7 @@ The heavyweight facts verified here:
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import pytest
@@ -441,6 +442,127 @@ class TestHierarchicalDispatch:
                                        local_dispatch=True, wire_batch=wb))
             assert per == base, f"placement drift at wire_batch={wb}"
             assert st["leases"] == 0 and st["claims"] == 0
+
+
+class TestDispatchStatsConservation:
+    """Regression guard for a dispatch_stats() double-count: the live-handle
+    snapshot used to be taken BEFORE the runtime lock, so a host retiring in
+    the gap was counted twice -- once from the stale live list, once from
+    the counters `_drop_host_locked` had just folded into ``stats``."""
+
+    COUNTERS = ("frames_sent", "msgs_sent", "frames_recv", "msgs_recv",
+                "leases", "claims", "claim_conflicts", "dispatches")
+
+    def test_no_reading_exceeds_final_totals_under_sigkill(self):
+        """Wire/lease counters are monotone and every unit is counted
+        exactly once (live handle XOR folded stats), so no concurrent
+        dispatch_stats() reading may ever exceed the final totals taken
+        after every host died and folded.  A double-count during
+        retirement shows up as a reading ABOVE the final value."""
+        rt = FleetRuntime(hosts=3, threads_per_host=2, local_dispatch=True,
+                          task_fn_name="repro.fleet.runtime:slow_task",
+                          heartbeat_timeout_s=2.0)
+        readings: list[dict] = []
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                readings.append(rt.dispatch_stats())
+
+        th = threading.Thread(target=hammer, daemon=True)
+        try:
+            _put_all(rt, n_objects=16)
+            n = 200
+            rt.submit(Task(inputs=(f"o{i % 16}",)) for i in range(n))
+            th.start()
+            time.sleep(0.15)
+            rt.manager.kill_host("h1")   # dies holding leases mid-batch
+            assert rt.wait(60), "wait() leaked after SIGKILL"
+            assert len(rt.dispatcher.completed) == n
+            # retire the survivors too, so EVERY host's counters fold
+            for h in list(rt.manager.live_handles()):
+                rt.manager.kill_host(h.host_id)
+            deadline = time.monotonic() + 15
+            while rt.manager.live_handles() and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert not rt.manager.live_handles(), "hosts never retired"
+            stop.set()
+            th.join(10)
+            final = rt.dispatch_stats()
+        finally:
+            stop.set()
+            rt.shutdown()
+        assert readings, "stats hammer never ran"
+        for d in readings:
+            for k in self.COUNTERS:
+                assert d[k] <= final[k], \
+                    f"{k} read {d[k]} > final {final[k]}: double-count"
+        # lease conservation across the kill: every lease produced at most
+        # one claim or conflict; the rest were reclaimed, never re-counted
+        assert final["leases"] > 0
+        assert final["claims"] + final["claim_conflicts"] <= final["leases"]
+        # frames carry >= 1 logical message each, in both directions
+        assert final["msgs_sent"] >= final["frames_sent"] > 0
+        assert final["msgs_recv"] >= final["frames_recv"] > 0
+
+    def test_stats_decompose_into_folded_plus_live(self):
+        """At quiescence the report is exactly stats (retired hosts folded
+        in) plus the live connections' wire counters -- the identity the
+        locked snapshot preserves."""
+        rt = FleetRuntime(hosts=2, threads_per_host=2,
+                          task_fn_name="repro.fleet.runtime:fleet_task")
+        try:
+            _put_all(rt)
+            rt.submit(Task(inputs=(f"o{i % 12}",)) for i in range(40))
+            assert rt.wait(60)
+            with rt._lock:
+                expect = rt.stats.as_dict()
+                for h in rt.manager.live_handles():
+                    expect["frames_sent"] += h.frames_sent
+                    expect["msgs_sent"] += h.msgs_sent
+                    expect["frames_recv"] += h.frames_recv
+                    expect["msgs_recv"] += h.msgs_recv
+            got = rt.dispatch_stats()
+            # heartbeats may land between the two snapshots: recv counters
+            # are monotone, everything else must match exactly
+            for k in ("frames_sent", "msgs_sent", "leases", "claims",
+                      "claim_conflicts", "dispatches"):
+                assert got[k] == expect[k], k
+            assert got["frames_recv"] >= expect["frames_recv"]
+            assert got["msgs_recv"] >= expect["msgs_recv"]
+        finally:
+            rt.shutdown()
+
+
+def test_fleet_event_forwarding_reaches_central_ring():
+    """Observability frames ride the host's one BatchingChannel outbox:
+    a recorded fleet run lands host-side exec/input events in the central
+    recorder, interleaved so each task's exec events precede its central
+    task_done in ring order (the frame is enqueued before the flushed
+    done; DESIGN.md §10)."""
+    from repro.obs import Recorder, lifecycle_fingerprints
+
+    rec = Recorder()
+    rt = FleetRuntime(hosts=2, threads_per_host=2, recorder=rec,
+                      task_fn_name="repro.fleet.runtime:fleet_task")
+    try:
+        _put_all(rt)
+        n = 40
+        rt.submit(Task(inputs=(f"o{i % 12}",)) for i in range(n))
+        assert rt.wait(60)
+        assert len(rt.dispatcher.completed) == n
+    finally:
+        rt.shutdown()
+    events = rec.events()
+    fps = lifecycle_fingerprints(events)
+    assert len(fps) == n
+    for tid, (kinds, exec_idx, inputs) in fps.items():
+        assert kinds[0] == "task_arrived"
+        assert kinds[-1] == "task_done"
+        # host-side exec events arrived before the central done
+        assert kinds.index("exec_end") < kinds.index("task_done"), tid
+        assert exec_idx is not None and len(inputs) == 1
+    assert rec.dropped == 0
 
 
 def test_bind_host_loopback_alias():

@@ -1,0 +1,384 @@
+"""repro.obs: recorder semantics, lifecycle-event parity across all three
+engines, Chrome-trace export, and the sim<->real divergence diff
+(DESIGN.md §10).
+
+The headline fact verified here: under serial replay (arrivals spaced far
+apart relative to service time, ``barrier_every=1`` so every dispatch
+decision is made against an all-idle pool) the simulator, the in-process
+runtime, and a multi-process fleet emit IDENTICAL per-task lifecycle
+fingerprints -- same kind sequences, same placement, same per-input
+source/byte triples -- and the divergence diff reports 100% placement
+agreement.
+"""
+from __future__ import annotations
+
+import json
+import random
+
+import pytest
+
+from repro.core import DataObject
+from repro.experiments import (ClusterSpec, ExperimentSpec, ObserveSpec,
+                               RuntimeEngine, SimEngine, WorkloadSpec)
+from repro.obs import (EVENT_SCHEMA_VERSION, Recorder, chrome_trace,
+                       diff_outcomes, exec_index, format_divergence,
+                       lifecycle_fingerprints, load_events, outcome_record,
+                       sim_replay_outcomes, sim_twin_spec)
+from repro.workloads import TaskEvent, Workload, record_v3
+
+# --------------------------------------------------------------------------
+# recorder units
+# --------------------------------------------------------------------------
+
+class TestRecorder:
+    def test_emit_and_snapshot(self):
+        rec = Recorder(capacity=8, clock=lambda: 1.5)
+        rec.emit("task_arrived", tid="t0")
+        rec.emit("pool", t=9.0, eid="w0", size=1, delta=1)
+        evs = rec.events()
+        assert evs == [
+            {"t": 1.5, "kind": "task_arrived", "tid": "t0"},
+            {"t": 9.0, "kind": "pool", "eid": "w0", "size": 1, "delta": 1},
+        ]
+        assert rec.emitted == 2 and rec.dropped == 0 and len(rec) == 2
+
+    def test_ring_drops_oldest_and_counts(self):
+        rec = Recorder(capacity=3, clock=lambda: 0.0)
+        for i in range(10):
+            rec.emit("pump", n=i)
+        assert [e["n"] for e in rec.events()] == [7, 8, 9]   # newest kept
+        assert rec.emitted == 10 and rec.dropped == 7
+
+    def test_capacity_validated(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            Recorder(capacity=0)
+
+    def test_drain_empties_ingest_refills(self):
+        rec = Recorder(capacity=4, clock=lambda: 0.0)
+        rec.emit("pump", n=1)
+        evs = rec.drain()
+        assert len(evs) == 1 and len(rec) == 0
+        rec.ingest(evs)                      # fleet-forwarding path
+        assert rec.events() == evs and rec.emitted == 2
+
+    def test_dump_load_roundtrip(self, tmp_path):
+        rec = Recorder(capacity=4, clock=lambda: 0.0)
+        for i in range(6):                   # 2 dropped
+            rec.emit("pump", n=i)
+        path = tmp_path / "events.jsonl"
+        assert rec.dump(path) == 4
+        header, evs = load_events(path)
+        assert header["schema_version"] == EVENT_SCHEMA_VERSION
+        assert header["n_events"] == 4
+        assert header["emitted"] == 6 and header["dropped"] == 2
+        assert evs == rec.events()
+
+    def test_load_rejects_truncation_and_foreign_files(self, tmp_path):
+        rec = Recorder(clock=lambda: 0.0)
+        rec.emit("pump", n=0)
+        path = tmp_path / "e.jsonl"
+        rec.dump(path)
+        lines = path.read_text().splitlines()
+        path.write_text(lines[0] + "\n")     # header promises 1, has 0
+        with pytest.raises(ValueError, match="truncated"):
+            load_events(path)
+        path.write_text(json.dumps({"kind": "header", "version": 2}) + "\n")
+        with pytest.raises(ValueError, match="not an events sink"):
+            load_events(path)
+
+
+def test_exec_index_normalizes_engine_naming():
+    assert exec_index("e3") == exec_index("w3") == 3
+    assert exec_index("host-2.w11") == 11
+    assert exec_index(None) is None
+    assert exec_index("oddball") == "oddball"
+
+
+# --------------------------------------------------------------------------
+# ObserveSpec plumbing
+# --------------------------------------------------------------------------
+
+class TestObserveSpec:
+    def test_defaults_off_and_roundtrip(self):
+        spec = ExperimentSpec(name="o", workload=_wspec())
+        assert spec.observe == ObserveSpec()
+        assert not spec.observe.events
+        spec2 = ExperimentSpec(name="o2", workload=_wspec(),
+                               observe=ObserveSpec(events=True,
+                                                   ring_capacity=128))
+        back = ExperimentSpec.from_dict(spec2.to_dict())
+        assert back == spec2
+        assert back.observe.ring_capacity == 128
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="ring_capacity"):
+            ObserveSpec(ring_capacity=0)
+        with pytest.raises(ValueError, match="sink_path requires"):
+            ObserveSpec(sink_path="/tmp/x.jsonl")   # events off
+
+    def test_unknown_observe_field_hard_errors(self):
+        d = ExperimentSpec(name="o", workload=_wspec()).to_dict()
+        d["observe"] = {"events": True, "ringcap": 9}
+        with pytest.raises(ValueError, match="ringcap"):
+            ExperimentSpec.from_dict(d)
+
+
+# --------------------------------------------------------------------------
+# cross-engine lifecycle parity (the tentpole contract)
+# --------------------------------------------------------------------------
+
+def _wspec(n_tasks=40):
+    return WorkloadSpec(
+        name="par",
+        arrivals={"kind": "BatchArrivals", "at_s": 0.0},
+        popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 2,
+                    "corr": 1.0},
+        n_tasks=n_tasks, n_objects=12, object_bytes=10_000, seed=7)
+
+
+def _serial_workload(n_tasks=40):
+    """Arrivals spaced 1 s apart vs ~50 ms service time: every dispatch
+    decision on every engine is made against an all-idle pool, which is
+    the regime where sim and real placement coincide exactly."""
+    rng = random.Random(7)
+    objs = [DataObject(f"p.o{i}", 10_000) for i in range(12)]
+    events = [TaskEvent(t=float(i), tid=f"p-{i}",
+                        inputs=tuple(o.oid for o in rng.sample(objs, 2)),
+                        outputs=(), compute_seconds=0.0,
+                        store_metadata_ops=0)
+              for i in range(n_tasks)]
+    return Workload("par", objs, events, spec=None)
+
+
+def _spec(hosts, tph, *, sink=None):
+    return ExperimentSpec(
+        name="obs-parity",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=4),
+        policy="max-compute-util",
+        workload=_wspec(),
+        observe=ObserveSpec(events=True, sink_path=sink),
+        seed=3, hosts=hosts, threads_per_host=tph)
+
+
+EXPECTED_KINDS = ("task_arrived", "task_queued", "task_dispatched",
+                  "exec_start", "exec_end", "task_done")
+
+
+@pytest.fixture(scope="module")
+def engine_runs():
+    """One observed serial replay per engine (sim / in-process runtime /
+    2-host fleet); shared across the parity assertions below."""
+    wl = _serial_workload()
+    runs = {}
+    eng = SimEngine()
+    try:
+        eng.prepare(_spec(0, 1), workload=wl)
+        rep = eng.run()
+        runs["sim"] = (rep, eng.recorder.events(), eng.last_outcomes)
+    finally:
+        eng.shutdown()
+    for label, hosts, tph in (("runtime", 0, 1), ("fleet", 2, 2)):
+        eng = RuntimeEngine()
+        try:
+            eng.prepare(_spec(hosts, tph), workload=wl)
+            rep = eng.run(barrier_every=1, timeout=180.0)
+            runs[label] = (rep, eng.recorder.events(), eng.last_outcomes)
+        finally:
+            eng.shutdown()
+    return runs
+
+
+class TestLifecycleParity:
+    def test_all_engines_complete(self, engine_runs):
+        for label, (rep, _, outcomes) in engine_runs.items():
+            assert rep.n_completed == 40, label
+            assert len(outcomes) == 40, label
+
+    def test_per_task_event_order(self, engine_runs):
+        """Every completed task's lifecycle reads arrived -> queued ->
+        dispatched -> inputs -> exec_start -> exec_end -> done (leases
+        never engage under serial replay)."""
+        for label, (_, events, _) in engine_runs.items():
+            fps = lifecycle_fingerprints(events)
+            assert len(fps) == 40, label
+            for tid, (kinds, exec_idx, inputs) in fps.items():
+                assert kinds == EXPECTED_KINDS, (label, tid, kinds)
+                assert exec_idx is not None, (label, tid)
+                assert len(inputs) == 2, (label, tid)
+
+    def test_fingerprints_identical_across_engines(self, engine_runs):
+        """The tentpole: same kinds, same placement, same per-input
+        source/byte triples on sim, runtime, and a real 4-executor fleet."""
+        fp_sim = lifecycle_fingerprints(engine_runs["sim"][1])
+        fp_rt = lifecycle_fingerprints(engine_runs["runtime"][1])
+        fp_fl = lifecycle_fingerprints(engine_runs["fleet"][1])
+        assert fp_sim == fp_rt
+        assert fp_sim == fp_fl
+
+    def test_divergence_diff_reports_full_agreement(self, engine_runs):
+        """Measured fleet outcomes joined against the sim twin's replay:
+        placement agreement must be 100% in the serial regime."""
+        predicted = engine_runs["sim"][2]
+        for label in ("runtime", "fleet"):
+            div = diff_outcomes(engine_runs[label][2], predicted)
+            assert div["n_matched"] == 40
+            assert div["n_only_measured"] == div["n_only_predicted"] == 0
+            assert div["placement_agreement"] == 1.0, label
+            assert div["bytes_agreement"] == 1.0, label
+        text = format_divergence(div)
+        assert "placement agreement  100.0%" in text
+
+    def test_no_drops_at_default_capacity(self, engine_runs):
+        for label, (rep, events, _) in engine_runs.items():
+            assert events, label
+
+    def test_trace_v3_diff_loop_end_to_end(self, engine_runs, tmp_path):
+        """record_v3(fleet outcomes) -> sim_replay_outcomes(twin spec) ->
+        diff: the full CLI loop, in-process."""
+        wl = _serial_workload()
+        measured = engine_runs["fleet"][2]
+        trace = tmp_path / "fleet.jsonl"
+        record_v3(wl, trace, measured)
+        spec = _spec(2, 2)
+        predicted = sim_replay_outcomes(spec, trace_path=str(trace))
+        div = diff_outcomes(measured, predicted)
+        assert div["placement_agreement"] == 1.0
+        assert div["latency_error_s"]["queue_s"]["n"] == 40
+
+    def test_sim_twin_spec_strips_fleet_and_observe(self):
+        spec = _spec(2, 2)
+        twin = sim_twin_spec(spec)
+        assert twin.hosts == 0 and twin.threads_per_host == 1
+        assert not twin.observe.events
+        assert twin.cluster == spec.cluster and twin.seed == spec.seed
+
+
+# --------------------------------------------------------------------------
+# events-off runs are untouched; sinks write
+# --------------------------------------------------------------------------
+
+def test_events_off_runs_identically_and_without_recorder():
+    wl = _serial_workload(n_tasks=10)
+    off = _spec(0, 1)
+    off = ExperimentSpec.from_dict({**off.to_dict(),
+                                    "observe": {"events": False}})
+    eng = SimEngine()
+    try:
+        eng.prepare(off, workload=wl)
+        rep_off = eng.run()
+        assert eng.recorder is None          # no ring allocated at all
+    finally:
+        eng.shutdown()
+    eng = SimEngine()
+    try:
+        eng.prepare(_spec(0, 1), workload=wl)
+        rep_on = eng.run()
+    finally:
+        eng.shutdown()
+    assert rep_off.diff(rep_on) == {}        # recording changed no metric
+
+
+def test_sink_path_writes_jsonl(tmp_path):
+    sink = tmp_path / "sink.jsonl"
+    eng = SimEngine()
+    try:
+        eng.prepare(_spec(0, 1, sink=str(sink)),
+                    workload=_serial_workload(n_tasks=5))
+        eng.run()
+    finally:
+        eng.shutdown()
+    header, events = load_events(sink)
+    assert header["dropped"] == 0
+    assert len(lifecycle_fingerprints(events)) == 5
+
+
+# --------------------------------------------------------------------------
+# Chrome-trace export golden
+# --------------------------------------------------------------------------
+
+GOLDEN_EVENTS = [
+    {"t": 10.0, "kind": "pool", "eid": "w0", "size": 1, "delta": 1},
+    {"t": 10.0, "kind": "pool", "eid": "w1", "size": 2, "delta": 1},
+    {"t": 10.5, "kind": "task_arrived", "tid": "a"},
+    {"t": 10.5, "kind": "pump", "bound": 1, "queue": 0},
+    {"t": 10.5, "kind": "input", "tid": "a", "eid": "w1", "oid": "o1",
+     "source": "store", "bytes": 100},
+    {"t": 10.6, "kind": "exec_start", "tid": "a", "eid": "w1"},
+    {"t": 10.8, "kind": "exec_end", "tid": "a", "eid": "w1", "ok": True},
+    {"t": 11.0, "kind": "input", "tid": "b", "eid": "w0", "oid": "o1",
+     "source": "peer", "peer": "w1", "bytes": 100},
+    {"t": 11.1, "kind": "exec_start", "tid": "b", "eid": "w0"},
+    {"t": 11.2, "kind": "exec_end", "tid": "b", "eid": "w0", "ok": True},
+]
+
+GOLDEN_TRACE = [
+    {"ph": "M", "pid": 0, "tid": 1, "name": "thread_name",
+     "args": {"name": "w0"}},
+    {"ph": "M", "pid": 0, "tid": 2, "name": "thread_name",
+     "args": {"name": "w1"}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "pool_size", "ts": 0.0,
+     "args": {"executors": 1}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "pool_size", "ts": 0.0,
+     "args": {"executors": 2}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "queue_depth", "ts": 500000.0,
+     "args": {"tasks": 0}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "cache_bytes", "ts": 500000.0,
+     "args": {"bytes": 100}},
+    {"ph": "X", "pid": 0, "tid": 2, "name": "a", "cat": "task",
+     "ts": 600000.0, "dur": 200000.0, "args": {"executor": "w1"}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "cache_bytes", "ts": 1000000.0,
+     "args": {"bytes": 200}},
+    {"ph": "X", "pid": 0, "tid": 1, "name": "b", "cat": "task",
+     "ts": 1100000.0, "dur": 100000.0, "args": {"executor": "w0"}},
+]
+
+
+def test_chrome_trace_golden(tmp_path):
+    """Pinned end-to-end export: thread-name metadata per executor, X spans
+    pairing exec_start/exec_end, counter tracks, microsecond timestamps
+    rebased to the first event."""
+    path = tmp_path / "trace.json"
+    out = chrome_trace(GOLDEN_EVENTS, path)
+    assert out["displayTimeUnit"] == "ms"
+    assert out["traceEvents"] == GOLDEN_TRACE
+    assert json.loads(path.read_text()) == out   # file round-trips
+
+
+def test_chrome_trace_from_real_run_is_valid(tmp_path):
+    eng = SimEngine()
+    try:
+        eng.prepare(_spec(0, 1), workload=_serial_workload(n_tasks=10))
+        rep = eng.run()
+        events = eng.recorder.events()
+    finally:
+        eng.shutdown()
+    out = chrome_trace(events)
+    spans = [e for e in out["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == rep.n_completed == 10
+    names = {e["args"]["name"] for e in out["traceEvents"]
+             if e["ph"] == "M"}
+    assert names == {s["args"]["executor"] for s in spans}
+    assert all(s["dur"] >= 0 and s["ts"] >= 0 for s in spans)
+
+
+# --------------------------------------------------------------------------
+# outcome records
+# --------------------------------------------------------------------------
+
+def test_outcome_record_rebasing():
+    class T:
+        tid, executor, attempts = "t", "w0", 0
+        submit_time, dispatch_time, start_time, end_time = (
+            100.0, 101.0, 101.5, 103.5)
+        bytes_local = bytes_cache_to_cache = bytes_store = 0
+        cache_hits = peer_hits = cache_misses = 0
+
+    rec = outcome_record(T(), base=100.0)
+    assert rec["t_submit"] == 0.0 and rec["t_end"] == 3.5
+    assert rec["queue_s"] == 1.0
+    assert rec["exec_s"] == 2.0
+    assert rec["turnaround_s"] == 3.5
+    # latency fields are base-independent
+    rec2 = outcome_record(T(), base=0.0)
+    assert all(rec[k] == rec2[k]
+               for k in ("queue_s", "exec_s", "turnaround_s"))

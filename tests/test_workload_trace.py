@@ -9,12 +9,13 @@ import pytest
 
 from repro.core import ANL_UC, DispatchPolicy
 from repro.core.simulator import DiffusionSim, SimConfig
-from repro.workloads import (TRACE_VERSION, BatchArrivals, BurstyArrivals,
+from repro.workloads import (SUPPORTED_VERSIONS, TRACE_VERSION,
+                             TRACE_VERSION_V3, BatchArrivals, BurstyArrivals,
                              DiurnalArrivals, MetricsCollector,
                              PoissonArrivals, ShiftingWorkingSet,
                              SineWaveArrivals, StackingTrace, UniformScan,
                              ZipfPopularity, events_fingerprint, generate,
-                             record, replay)
+                             read_outcomes, record, record_v3, replay)
 
 MB = 10**6
 
@@ -83,7 +84,7 @@ def test_replayed_trace_runs_to_identical_metrics(arrivals, tmp_path):
 
 def test_unsupported_version_rejected():
     buf = io.StringIO(json.dumps(
-        {"kind": "header", "version": TRACE_VERSION + 1,
+        {"kind": "header", "version": max(SUPPORTED_VERSIONS) + 1,
          "n_objects": 0, "n_tasks": 0}) + "\n")
     with pytest.raises(ValueError, match="unsupported trace version"):
         replay(buf)
@@ -175,11 +176,84 @@ def test_v2_input_size_drift_is_a_hard_error(tmp_path):
         replay(path)
 
 
+# --------------------------- v3: measured outcomes ----------------------------
+
+def _fake_outcomes(wl):
+    """Synthetic but schema-complete measured rows, one per task."""
+    from repro.obs.events import OUTCOME_FIELDS
+    out = []
+    for i, e in enumerate(wl.events):
+        rec = {k: 0 for k in OUTCOME_FIELDS}
+        rec.update(tid=e.tid, executor=f"w{i % 3}", attempts=1,
+                   queue_s=0.25 * i, exec_s=0.5, turnaround_s=0.25 * i + 0.5)
+        out.append(rec)
+    return out
+
+
+def test_v3_roundtrip_outcomes_and_arrivals(tmp_path):
+    wl = generate("v3", PoissonArrivals(4.0), ZipfPopularity(1.0, k=2),
+                  n_tasks=20, n_objects=8, object_bytes=MB, seed=5)
+    outcomes = _fake_outcomes(wl)
+    path = tmp_path / "v3.jsonl"
+    assert record_v3(wl, path, outcomes) == 20
+    header = json.loads(path.read_text().splitlines()[0])
+    assert header["version"] == TRACE_VERSION_V3 == 3
+    assert header["n_outcomes"] == 20
+    # the arrival half replays bit-identically to a v2 record of the same wl
+    assert events_fingerprint(replay(path)) == events_fingerprint(wl)
+    # the measured half reads back exactly (extra keys preserved)
+    assert read_outcomes(path) == outcomes
+
+
+def test_v3_outcome_missing_field_hard_errors_before_write(tmp_path):
+    wl = generate("v3b", BatchArrivals(), UniformScan(), n_tasks=3,
+                  n_objects=3, object_bytes=1, seed=0)
+    outcomes = _fake_outcomes(wl)
+    del outcomes[1]["executor"]
+    path = tmp_path / "v3b.jsonl"
+    with pytest.raises(ValueError, match="missing field.*executor"):
+        record_v3(wl, path, outcomes)
+    assert not path.exists()                      # nothing was written
+
+
+def test_v3_truncated_outcomes_rejected(tmp_path):
+    wl = generate("v3t", BatchArrivals(), UniformScan(), n_tasks=5,
+                  n_objects=3, object_bytes=1, seed=0)
+    path = tmp_path / "v3t.jsonl"
+    record_v3(wl, path, _fake_outcomes(wl))
+    lines = path.read_text().splitlines()
+    path.write_text("\n".join(lines[:-1]) + "\n")  # drop one outcome row
+    with pytest.raises(ValueError, match="truncated"):
+        read_outcomes(path)
+    with pytest.raises(ValueError, match="truncated"):
+        replay(path)                               # replay also counts them
+
+
+def test_read_outcomes_rejects_arrivals_only_traces(tmp_path):
+    wl = generate("v2o", BatchArrivals(), UniformScan(), n_tasks=3,
+                  n_objects=3, object_bytes=1, seed=0)
+    path = tmp_path / "v2o.jsonl"
+    record(wl, path)                               # plain v2
+    with pytest.raises(ValueError, match="carries no measured outcomes"):
+        read_outcomes(path)
+
+
+def test_record_still_writes_v2_and_versions_tuple():
+    """The plain writer did not silently bump; v3 is record_v3-only."""
+    assert TRACE_VERSION == 2
+    assert SUPPORTED_VERSIONS == (1, 2, 3)
+    wl = generate("v2w", BatchArrivals(), UniformScan(), n_tasks=2,
+                  n_objects=2, object_bytes=1, seed=0)
+    buf = io.StringIO()
+    record(wl, buf)
+    assert json.loads(buf.getvalue().splitlines()[0])["version"] == 2
+
+
 def test_future_versions_hard_error_not_best_effort():
-    """A reader must refuse what it cannot fully parse: version 3 with
-    well-formed v2-looking records still raises."""
+    """A reader must refuse what it cannot fully parse: version 4 with
+    well-formed v3-looking records still raises."""
     buf = io.StringIO(
-        json.dumps({"kind": "header", "version": 3, "name": "f",
-                    "n_objects": 0, "n_tasks": 0}) + "\n")
+        json.dumps({"kind": "header", "version": 4, "name": "f",
+                    "n_objects": 0, "n_tasks": 0, "n_outcomes": 0}) + "\n")
     with pytest.raises(ValueError, match="unsupported trace version"):
         replay(buf)

@@ -32,7 +32,13 @@ on more than ``--threshold`` regression (default 25%):
              wire is >= 3x the unbatched one on the same completion
              storm, hierarchical tasks/s rises monotonically with host
              count, and hierarchical + batched batch-synchronous replay
-             still matches single-process placement exactly).
+             still matches single-process placement exactly);
+  obs        benchmarks/bench_obs.py vs BENCH_obs.json -- guards the
+             observability layer (repro.obs), with canaries (events-on
+             central-loop CPU <= 10% over events-off on the dispatch
+             storm, zero dropped events at the default ring capacity,
+             and sim<->fleet per-task placement agreement >= 99% under
+             serial replay).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -48,6 +54,7 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_fleet --out BENCH_fleet.json
     PYTHONPATH=src python -m benchmarks.bench_dispatch \
         --out BENCH_dispatch.json
+    PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
 """
 from __future__ import annotations
 
@@ -119,12 +126,15 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_fleet.json"))
     ap.add_argument("--dispatch-baseline",
                     default=str(REPO_ROOT / "BENCH_dispatch.json"))
+    ap.add_argument("--obs-baseline",
+                    default=str(REPO_ROOT / "BENCH_obs.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
-                                       "policies", "fleet", "dispatch"],
+                                       "policies", "fleet", "dispatch",
+                                       "obs"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -135,7 +145,8 @@ def main(argv=None) -> int:
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
     from benchmarks import (bench_dispatch, bench_engine, bench_fleet,
-                            bench_joins, bench_policies, bench_workloads)
+                            bench_joins, bench_obs, bench_policies,
+                            bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -229,6 +240,22 @@ def main(argv=None) -> int:
                  lambda b, c: bool(c["curve_monotonic"])),
                 ("hierarchical+batched replay matches single-process",
                  lambda b, c: bool(c["parity"])),
+            ]))
+    if args.only in (None, "obs"):
+        rc = max(rc, _check_gate(
+            "obs", Path(args.obs_baseline),
+            lambda: bench_obs.gate_measure(repeats=args.repeats),
+            (bench_obs.GATE_NODES, bench_obs.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("events-on central CPU <= 10% over events-off",
+                 lambda b, c: c["overhead_ratio"] <= 1.10),
+                ("zero dropped events at default ring capacity",
+                 lambda b, c: c["dropped"] == 0),
+                ("sim<->fleet placement agreement >= 99%",
+                 lambda b, c: c["placement_agreement"] >= 0.99),
             ]))
     return rc
 

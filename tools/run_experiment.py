@@ -81,22 +81,63 @@ def cmd_describe(args) -> int:
 
 
 def cmd_run(args) -> int:
+    from repro.experiments import RuntimeEngine, make_engine
+
     spec = _load_spec(args.spec)
     run_kw = {}
-    engine = args.engine
     if args.engine == "runtime":
         run_kw = {"time_scale": args.time_scale, "timeout": args.timeout,
                   "barrier_every": args.barrier_every}
-        if args.task_fn is not None:
-            # fleet runs name their callable; hosts resolve module:attr
-            from repro.experiments import RuntimeEngine
-            engine = RuntimeEngine(task_fn_name=args.task_fn)
+    if args.engine == "runtime" and args.task_fn is not None:
+        # fleet runs name their callable; hosts resolve module:attr
+        eng = RuntimeEngine(task_fn_name=args.task_fn)
+    else:
+        eng = make_engine(args.engine)
     try:
-        rep = run_experiment(spec, engine=engine, **run_kw)
+        eng.prepare(spec)
+        rep = eng.run(**run_kw)
+        if args.trace_out:
+            # arrivals + measured per-task outcomes, one file (trace v3):
+            # the input to the `diff` subcommand's sim-twin replay
+            from repro.workloads import record_v3
+
+            record_v3(eng.workload, args.trace_out, eng.last_outcomes)
+            print(f"# wrote {args.trace_out} "
+                  f"({len(eng.last_outcomes)} outcomes)", file=sys.stderr)
     finally:
-        if not isinstance(engine, str):
-            engine.shutdown()
+        eng.shutdown()
     _report_out(rep, args.out)
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """sim<->real divergence: replay a v3 trace's arrival half through the
+    sim twin of the spec, join predicted vs measured outcomes by task id."""
+    import dataclasses
+
+    from repro.obs import diff_outcomes, format_divergence, sim_replay_outcomes
+    from repro.workloads import read_outcomes
+
+    spec = _load_spec(args.spec)
+    try:
+        measured = read_outcomes(args.trace)
+    except (OSError, ValueError) as e:
+        raise SystemExit(f"run_experiment: bad trace {args.trace!r}: {e}")
+    predicted = sim_replay_outcomes(spec, trace_path=args.trace)
+    div = diff_outcomes(measured, predicted)
+    if args.out:
+        Path(args.out).write_text(json.dumps(div, indent=2, sort_keys=True)
+                                  + "\n")
+        print(f"# wrote {args.out}", file=sys.stderr)
+    if args.report:
+        # attach the divergence to an existing report file in place
+        # (RunReport.task_divergence is the programmatic surface)
+        rep = RunReport.from_dict(json.loads(Path(args.report).read_text()))
+        rep = dataclasses.replace(rep, task_divergence=div)
+        Path(args.report).write_text(
+            json.dumps(rep.as_dict(), indent=2, sort_keys=True) + "\n")
+        print(f"# updated {args.report} (task_divergence)", file=sys.stderr)
+    print(format_divergence(div))
     return 0
 
 
@@ -178,7 +219,22 @@ def main(argv=None) -> int:
                    help="runtime engine, fleet specs (hosts>0): named task "
                         "callable each host resolves locally")
     r.add_argument("--out", default=None, help="also write the report JSON")
+    r.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a v3 trace (arrivals + measured per-task "
+                        "outcomes) for the diff subcommand")
     r.set_defaults(fn=cmd_run)
+
+    f = sub.add_parser("diff", help="sim<->real per-task divergence: replay "
+                                    "a recorded v3 trace through the sim "
+                                    "twin and join outcomes by task id")
+    f.add_argument("spec", help="the spec the trace was recorded under")
+    f.add_argument("trace", help="v3 trace written by run --trace-out")
+    f.add_argument("--out", default=None,
+                   help="also write the divergence dict as JSON")
+    f.add_argument("--report", default=None,
+                   help="report JSON file (from run --out) to update in "
+                        "place with task_divergence")
+    f.set_defaults(fn=cmd_diff)
 
     s = sub.add_parser("sweep", help="cartesian grid over spec fields")
     s.add_argument("spec")
