@@ -27,15 +27,16 @@ def main(argv=None) -> int:
                          "BENCH_engine.json + BENCH_workloads.json + "
                          "BENCH_joins.json + BENCH_policies.json + "
                          "BENCH_fleet.json + BENCH_dispatch.json + "
-                         "BENCH_obs.json baselines (fails on >25%% "
+                         "BENCH_obs.json + BENCH_dags.json baselines "
+                         "(fails on >25%% "
                          "wall-clock regression or a correctness-canary "
                          "miss)")
     args = ap.parse_args(argv)
 
-    from . import (bench_dispatch, bench_engine, bench_fleet, bench_index,
-                   bench_joins, bench_microbench, bench_obs, bench_policies,
-                   bench_roofline, bench_scheduler, bench_stacking,
-                   bench_workloads)
+    from . import (bench_dags, bench_dispatch, bench_engine, bench_fleet,
+                   bench_index, bench_joins, bench_microbench, bench_obs,
+                   bench_policies, bench_roofline, bench_scheduler,
+                   bench_stacking, bench_workloads)
 
     modules = [
         ("index", bench_index, 1.0 if args.full else 0.5),
@@ -49,6 +50,7 @@ def main(argv=None) -> int:
         ("fleet", bench_fleet, 1.0 if args.full else 0.5),
         ("dispatch", bench_dispatch, 1.0 if args.full else 0.5),
         ("obs", bench_obs, 1.0 if args.full else 0.5),
+        ("dags", bench_dags, 1.0 if args.full else 0.5),
         ("roofline", bench_roofline, 1.0),
     ]
     rows = []

@@ -2,29 +2,30 @@
 stacking over data diffusion, with the REAL compute executed by the Pallas
 stacking kernel (repro/kernels/stacking, interpret mode on CPU).
 
-Three layers run together here, all bound by one declarative
-:class:`ExperimentSpec` executed on the threaded engine
-(``repro.experiments.RuntimeEngine``):
-  * workload plane: a seeded ``repro.workloads`` StackingTrace (the §4.3
-    trace shape: every file accessed ``locality`` times, order shuffled)
-    paced into the runtime by the open-loop submitter thread;
-  * scheduling plane: the threaded DiffusionRuntime moves (synthetic) image
-    files through executor caches under max-compute-util, exactly as §5.3;
-  * compute plane: each task extracts its object's ROI and the coadd runs
-    through stack_rois (calibrate -> sub-pixel shift -> accumulate).
+Default mode is the full stack-then-mosaic PIPELINE (PR 8): a
+``stacking_pyramid`` DAG of ``--groups`` stack tasks (each coadding
+``--group-size`` image files into one produced stack) feeding ONE mosaic
+task that reads every produced stack.  The mosaic arrives at t=0 like
+everything else -- the dispatcher's ready-set holds it until all stacks
+complete, and producer-placement scoring routes it at the executors whose
+caches hold the freshly written stacks (DESIGN.md §11).  One task callable
+serves both stages, dispatching on the input oid shape: catalog images
+(``astro.g{g}.o{k}``) -> calibrate/shift/accumulate through
+``st_ops.stack_rois``; produced stacks (``astro.stack{g}``) -> a pure
+coadd through the same kernel with zero shift/sky.
 
-All randomness is derived from fixed seeds (file content from the file id,
-shift offsets from the task's input ids), so the stacked pixels -- and the
-printed summary -- are identical run-to-run regardless of thread timing,
-and identical to the pre-spec construction path (the spec builds the exact
-historical DiffusionRuntime).
+``--flat`` keeps the historical PR-level shape: a seeded §4.3 StackingTrace
+(every file accessed ``locality`` times, order shuffled) of independent
+one-stage tasks.
 
-``--stack-width K`` turns each request into the paper's true many-files
-stack: a k-input join over the primary file's stack group (K=1 keeps the
-historical one-file-per-task shape and byte-identical output).
+All randomness is derived from fixed seeds (file content from the file's
+group/index, shift offsets from the task's input ids), so the stacked and
+mosaicked pixels -- and the printed summary -- are identical run-to-run
+regardless of thread timing.
 
-  PYTHONPATH=src python examples/astronomy_stacking.py --locality 10
-  PYTHONPATH=src python examples/astronomy_stacking.py --stack-width 3
+  PYTHONPATH=src python examples/astronomy_stacking.py
+  PYTHONPATH=src python examples/astronomy_stacking.py --groups 12 --hosts 6
+  PYTHONPATH=src python examples/astronomy_stacking.py --flat --locality 10
 """
 import argparse
 import sys
@@ -40,27 +41,100 @@ from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
 from repro.kernels.stacking import ops as st_ops
 
 SEED = 0
+H, W = ROI_SHAPE
+TILES_PER_FILE = 8
+FILE_BYTES = TILES_PER_FILE * H * W * 4
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--locality", type=float, default=10, choices=[1, 2, 3, 4, 5, 10, 20, 30])
-    ap.add_argument("--objects", type=int, default=96,
-                    help="number of stacking objects (scaled workload)")
-    ap.add_argument("--hosts", type=int, default=4)
-    ap.add_argument("--policy", default="max-compute-util")
-    ap.add_argument("--stack-width", type=int, default=1,
-                    help="files coadded per request (k-input joins over "
-                         "stack groups; 1 = classic one-file tasks)")
-    ap.add_argument("--time-scale", type=float, default=1.0,
-                    help="wall seconds per workload second for the paced "
-                         "submitter (0 = submit as fast as possible)")
-    args = ap.parse_args(argv)
+def _coadd(tiles: np.ndarray, seed_ids) -> np.ndarray:
+    """Calibrate -> sub-pixel shift -> accumulate via the Pallas kernel.
+    Shift offsets are seeded by the input ids, never a shared stream, so
+    the pixels are independent of thread scheduling order."""
+    n = tiles.shape[0]
+    sky = tiles.mean(axis=(1, 2)) * 0.1
+    cal = np.ones(n, np.float32)
+    task_rng = np.random.default_rng([SEED + 1, *seed_ids])
+    dy = task_rng.random(n).astype(np.float32)
+    dx = task_rng.random(n).astype(np.float32)
+    return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
 
+
+# --------------------------------------------------------------------------
+# pipeline mode (default): stacking_pyramid DAG, one two-stage task_fn
+# --------------------------------------------------------------------------
+
+def run_pipeline(args) -> int:
+    spec = ExperimentSpec(
+        name="astro",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=args.hosts),
+        cache=CacheSpec(capacity_bytes=1 << 30),
+        policy=args.policy,
+        workload=WorkloadSpec(
+            name="astro",
+            dag={"kind": "stacking_pyramid", "n_groups": args.groups,
+                 "group_size": args.group_size, "object_bytes": FILE_BYTES,
+                 "stack_bytes": H * W * 4, "mosaic_bytes": H * W * 4,
+                 "seed": SEED}),
+        seed=SEED)
+
+    def make_tiles(ob: DataObject) -> np.ndarray:
+        """Catalog image content derived from the file's (group, index):
+        identical every run."""
+        g, k = ob.oid.split(".")[1:]          # "astro.g{g}.o{k}"
+        file_rng = np.random.default_rng([SEED, int(g[1:]), int(k[1:])])
+        return file_rng.normal(500, 100, size=(TILES_PER_FILE, H, W)) \
+            .astype(np.float32)
+
+    def stack_or_mosaic(inputs):
+        """ONE callable for both stages, dispatched on the input oids."""
+        oids = list(inputs)
+        if all(o.split(".")[-1].startswith("stack") for o in oids):
+            # mosaic stage: inputs are PRODUCED stacks (h, w); pure coadd
+            # through the same kernel (zero sky, unit cal, zero shift)
+            tiles = np.stack([np.asarray(v) for v in inputs.values()])
+            zeros = np.zeros(tiles.shape[0], np.float32)
+            return np.asarray(st_ops.stack_rois(
+                tiles, zeros, np.ones(tiles.shape[0], np.float32),
+                zeros, zeros))
+        # stack stage: inputs are catalog files of TILES_PER_FILE tiles
+        tiles = np.concatenate([np.asarray(v) for v in inputs.values()],
+                               axis=0)
+        seed_ids = [int(o.split(".")[2][1:]) for o in oids]
+        return _coadd(tiles, seed_ids)
+
+    eng = RuntimeEngine().prepare(spec)
+    rep = eng.run(task_fn=stack_or_mosaic, payload_factory=make_tiles,
+                  time_scale=args.time_scale, timeout=600.0)
+    done = {t.tid: t for t in eng.runtime.dispatcher.completed}
+    stacks = [done[f"astro-stack{g}"].result for g in range(args.groups)]
+    mosaic = done["astro-mosaic"].result
+    assert all(s.shape == ROI_SHAPE for s in stacks)
+    assert mosaic.shape == ROI_SHAPE
+    print(f"# wall time {rep.wall_s:.2f}s (time_scale {args.time_scale})",
+          file=sys.stderr)
+    print(f"stacked {args.groups} groups x {args.group_size} files, then "
+          f"mosaicked, on {args.hosts} hosts")
+    print(f"  cache hit ratio: {rep.cache_hit_ratio:.2%} "
+          f"(mosaic inputs all scheduler-produced)")
+    print(f"  slowdown: from-arrival {rep.slowdown_from_arrival:.2f} "
+          f"from-ready {rep.slowdown_from_ready:.2f} "
+          f"(gap = mosaic dep-wait)")
+    cached = (rep.bytes_by_kind["c2c"] + rep.bytes_by_kind["local"]) / 1e6
+    print(f"  bytes: store={rep.bytes_by_kind['store_read'] / 1e6:.1f}MB "
+          f"cache-served={cached:.1f}MB")
+    print(f"  mosaic pixel mean: {float(mosaic.mean()):.2f}")
+    eng.shutdown()
+    return 0
+
+
+# --------------------------------------------------------------------------
+# flat mode (--flat): the historical one-stage StackingTrace shape
+# --------------------------------------------------------------------------
+
+def run_flat(args) -> int:
     wl_cfg = workload(args.locality)
     locality = max(int(args.locality), 1)
     n_files = max(int(args.objects / args.locality), 1)
-    h, w = ROI_SHAPE
 
     # one declarative spec: Poisson arrivals x §4.3 stacking-trace
     # popularity over an img{i} catalog, on --hosts 1GiB-cache workers
@@ -77,28 +151,20 @@ def main(argv=None) -> int:
                         "shuffle_seed": SEED, "k": args.stack_width,
                         "corr": 1.0},
             n_tasks=args.objects, n_objects=n_files,
-            object_bytes=8 * h * w * 4, object_prefix="img", seed=SEED),
+            object_bytes=FILE_BYTES, object_prefix="img", seed=SEED),
         seed=SEED)
 
     def make_tiles(ob: DataObject) -> np.ndarray:
         """File content derived from the file id: identical every run."""
         file_rng = np.random.default_rng([SEED, int(ob.oid[3:])])
-        return file_rng.normal(500, 100, size=(8, h, w)).astype(np.float32)
+        return file_rng.normal(500, 100, size=(TILES_PER_FILE, H, W)) \
+            .astype(np.float32)
 
     def stack_object(inputs):
         # one file (classic) or a whole stack group (k-input join): coadd
         # every tile of every input file into one ROI
         tiles = np.concatenate(list(inputs.values()), axis=0)
-        n = tiles.shape[0]
-        sky = tiles.mean(axis=(1, 2)) * 0.1
-        cal = np.ones(n, np.float32)
-        # shift offsets seeded by the *input ids*, not a shared stream, so
-        # results do not depend on thread scheduling order
-        task_rng = np.random.default_rng(
-            [SEED + 1] + [int(oid[3:]) for oid in inputs])
-        dy = task_rng.random(n).astype(np.float32)
-        dx = task_rng.random(n).astype(np.float32)
-        return np.asarray(st_ops.stack_rois(tiles, sky, cal, dy, dx))
+        return _coadd(tiles, [int(oid[3:]) for oid in inputs])
 
     eng = RuntimeEngine().prepare(spec)
     rep = eng.run(task_fn=stack_object, payload_factory=make_tiles,
@@ -121,6 +187,31 @@ def main(argv=None) -> int:
     print(f"  sample stacked-pixel mean: {float(results[0].mean()):.2f}")
     eng.shutdown()
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--flat", action="store_true",
+                    help="historical one-stage StackingTrace workload "
+                         "instead of the stack-then-mosaic pipeline")
+    ap.add_argument("--groups", type=int, default=8,
+                    help="pipeline: stack tasks (mosaic fan-in)")
+    ap.add_argument("--group-size", type=int, default=4,
+                    help="pipeline: image files coadded per stack")
+    ap.add_argument("--locality", type=float, default=10,
+                    choices=[1, 2, 3, 4, 5, 10, 20, 30])
+    ap.add_argument("--objects", type=int, default=96,
+                    help="flat: number of stacking objects (scaled workload)")
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--policy", default="max-compute-util")
+    ap.add_argument("--stack-width", type=int, default=1,
+                    help="flat: files coadded per request (k-input joins "
+                         "over stack groups; 1 = classic one-file tasks)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="wall seconds per workload second for the paced "
+                         "submitter (0 = submit as fast as possible)")
+    args = ap.parse_args(argv)
+    return run_flat(args) if args.flat else run_pipeline(args)
 
 
 if __name__ == "__main__":

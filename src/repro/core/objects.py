@@ -62,6 +62,9 @@ class Task:
     store_metadata_ops: int = 0
     tid: str = field(default_factory=lambda: f"t{next(_task_counter)}")
     tag: Any = None
+    # tids of producer tasks that must complete before this task may run.
+    # The dispatcher holds tasks with unmet deps out of the queue entirely.
+    deps: tuple[str, ...] = ()
 
     # -- mutable bookkeeping (owned by the dispatcher) ----------------------
     state: TaskState = TaskState.SUBMITTED
@@ -69,6 +72,9 @@ class Task:
     attempts: int = 0
     max_attempts: int = 3
     submit_time: float = 0.0
+    # when the task became runnable: == submit_time for dep-free tasks,
+    # stamped at release for tasks that waited on producers.
+    ready_time: float = 0.0
     dispatch_time: float = 0.0
     start_time: float = 0.0
     end_time: float = 0.0

@@ -402,6 +402,9 @@ class DiffusionRuntime:
             1 for tid in running
             if (t := self.dispatcher.tasks.get(tid)) is not None
             and t.state is TaskState.FAILED)
+        # a producer failed out above may have cascade-failed held
+        # dependents (never dispatched): account them here too
+        terminal += len(self.dispatcher.drain_dep_failed())
         if terminal:
             self._outstanding -= terminal
             if self._outstanding == 0:
@@ -436,6 +439,13 @@ class DiffusionRuntime:
         with self._lock:
             self.dispatcher.submit(ts, time.monotonic())
             self._outstanding += len(ts)
+            # a task submitted after its producer terminally failed is
+            # failed on arrival; it will never dispatch, account it now
+            dead = len(self.dispatcher.drain_dep_failed())
+            if dead:
+                self._outstanding -= dead
+                if self._outstanding == 0:
+                    self._done.notify_all()
         self._pump()
         return len(ts)
 
@@ -627,7 +637,13 @@ class DiffusionRuntime:
             if t.fn is not None:
                 t.result = t.fn(**inputs) if _wants_kwargs(t.fn) else t.fn(inputs)
             for ob in t.outputs:
-                payload = t.result if len(t.outputs) == 1 else t.result[ob.oid]
+                # shape-only tasks (no fn) produce no real payload; admit the
+                # sentinel so downstream DAG reads still count as cache hits
+                # (a None payload would read as a miss on every lookup)
+                if t.fn is None:
+                    payload = SHAPE_ONLY_PAYLOAD
+                else:
+                    payload = t.result if len(t.outputs) == 1 else t.result[ob.oid]
                 self._emit(w.admit_update(ob, payload))
                 self.dispatcher.sizes[ob.oid] = ob.size_bytes
         except Exception as e:  # noqa: BLE001 - task failure is data, not a crash
@@ -659,8 +675,13 @@ class DiffusionRuntime:
         acc.merge_into(t)
         self.ledger.account_attempt(acc)
         self.dispatcher.task_finished(t, time.monotonic(), ok=ok)
-        if ok or t.state is TaskState.FAILED:
-            self._outstanding -= 1
+        # a completion may also release held dependents (they re-enter the
+        # queue and stay outstanding) or -- on terminal failure -- cascade-
+        # fail them; cascaded tasks never dispatch, so account them here.
+        terminal = 1 if (ok or t.state is TaskState.FAILED) else 0
+        terminal += len(self.dispatcher.drain_dep_failed())
+        if terminal:
+            self._outstanding -= terminal
             if self._outstanding == 0:
                 self._done.notify_all()
 

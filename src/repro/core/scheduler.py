@@ -33,6 +33,15 @@ scores a smaller full hit.  Byte-score ties break toward the higher overlap
 bytes over fewer total bytes, i.e. less left to fetch), then toward the
 earlier queue position.  ``reference_scores()`` is the retained brute-force
 scorer the incremental maps must bit-match (tests/test_join_scoring.py).
+
+DAG tasks (DESIGN.md §11): a task may declare producer ``deps``.  Tasks
+with unmet deps are *held* outside the wait queue (so no dispatch path --
+window scan, FIFO pop, or host lease -- can ever see them); the producer's
+``task_finished`` releases them through the ordinary ``_enqueue`` path.
+A released task's placement score covers its inputs PLUS everything its
+producers created (``score_oids``), folded into the same cached-byte score
+and tie-break chain, so downstream work lands where its inputs were just
+written.  Dep-free tasks take the exact pre-DAG code path bit-identically.
 """
 from __future__ import annotations
 
@@ -201,6 +210,26 @@ class Dispatcher:
         self._exec_scores: dict[str, dict[str, int]] = {}
         # oid -> queued tids with oid among their inputs (update fan-out).
         self._oid_waiters: dict[str, set[str]] = {}
+        # ---- DAG ready-set (DESIGN.md §11) --------------------------------
+        # held tid -> producer tids still outstanding.  Held tasks are in
+        # ``tasks`` but never in ``queue``/``pending``, so no dispatch or
+        # lease path can reach them until every dep completes.
+        self._held: dict[str, set[str]] = {}
+        # producer tid -> held dependents in submission order (dict-as-
+        # ordered-set: release order is deterministic across engines).
+        self._dependents: dict[str, dict[str, None]] = {}
+        # dependents terminally failed by a producer's failure, awaiting
+        # pickup by the owning engine's accounting (drain_dep_failed).
+        self._dep_failed: list[Task] = []
+        # every oid some submitted task produces (for the outputs-ignored
+        # baseline below; disjoint from the catalog by Workload validation).
+        self._produced: set[str] = set()
+        # benchmark baseline knob: when False, produced outputs are invisible
+        # to placement (no hints resolved, no bytes scored) -- the "outputs-
+        # ignored" dispatcher that bench_dags compares against.  Scoring is
+        # unaffected either way for workloads whose inputs are all catalog
+        # objects, i.e. every dep-free workload.
+        self.score_outputs: bool = True
 
     @property
     def _mcu(self) -> bool:
@@ -231,6 +260,7 @@ class Dispatcher:
                 if t.attempts >= t.max_attempts:
                     t.state = TaskState.FAILED
                     self.failed.append(t)
+                    self._fail_dependents(t.tid)
                 else:
                     t.reset_for_retry()
                     requeue.append(t)
@@ -259,11 +289,90 @@ class Dispatcher:
             self.tasks[t.tid] = t
             for ob in t.outputs:
                 self.sizes[ob.oid] = ob.size_bytes
+                self._produced.add(ob.oid)
             if rec is not None:
                 rec.emit("task_arrived", tid=t.tid)
-            self._enqueue(t)
             n += 1
+            if t.deps and self._hold_if_unready(t, rec):
+                continue
+            t.ready_time = now
+            self._enqueue(t)
         return n
+
+    # ---------------- DAG ready-set (DESIGN.md §11) -------------------------
+    def _hold_if_unready(self, t: Task, rec) -> bool:
+        """Hold ``t`` until its producers complete.  Returns True if held
+        (or failed because a producer already terminally failed)."""
+        unmet: set[str] = set()
+        for d in t.deps:
+            p = self.tasks.get(d)
+            if p is not None and p.state is TaskState.DONE:
+                continue
+            if p is not None and p.state is TaskState.FAILED:
+                t.state = TaskState.FAILED
+                self.failed.append(t)
+                self._dep_failed.append(t)
+                if rec is not None:
+                    rec.emit("task_failed", tid=t.tid, reason="dep_failed",
+                             dep=d)
+                return True
+            unmet.add(d)
+        if not unmet:
+            return False
+        self._held[t.tid] = unmet
+        for d in unmet:
+            self._dependents.setdefault(d, {})[t.tid] = None
+        if rec is not None:
+            rec.emit("task_held", tid=t.tid, n_deps=len(unmet))
+        return True
+
+    def _release_dependents(self, tid: str, now: float) -> None:
+        """A producer completed: enqueue every held dependent whose last
+        unmet dep this was.  Runs inside ``task_finished``, i.e. after the
+        producer's outputs were admitted/indexed by the engine, so the
+        released task's enqueue-time hint resolution sees them."""
+        deps = self._dependents.pop(tid, None)
+        if not deps:
+            return
+        rec = self.recorder
+        for dtid in deps:
+            unmet = self._held.get(dtid)
+            if unmet is None:
+                continue            # stale entry (already failed elsewhere)
+            unmet.discard(tid)
+            if unmet:
+                continue
+            del self._held[dtid]
+            dt = self.tasks[dtid]
+            dt.ready_time = now
+            if rec is not None:
+                rec.emit("task_ready", tid=dtid)
+            self._enqueue(dt)
+
+    def _fail_dependents(self, tid: str) -> None:
+        """A producer terminally failed: its held dependents (transitively)
+        can never run -- fail them now so engines don't wait forever."""
+        rec = self.recorder
+        stack = [tid]
+        while stack:
+            cur = stack.pop()
+            for dtid in self._dependents.pop(cur, ()):
+                if self._held.pop(dtid, None) is None:
+                    continue
+                dt = self.tasks[dtid]
+                dt.state = TaskState.FAILED
+                self.failed.append(dt)
+                self._dep_failed.append(dt)
+                if rec is not None:
+                    rec.emit("task_failed", tid=dtid, reason="dep_failed",
+                             dep=cur)
+                stack.append(dtid)
+
+    def drain_dep_failed(self) -> list[Task]:
+        """Tasks terminally failed by producer failure since the last call
+        (never dispatched, so the owning runtime must account them)."""
+        out, self._dep_failed = self._dep_failed, []
+        return out
 
     def register_objects(self, objs) -> None:
         for ob in objs:
@@ -280,17 +389,40 @@ class Dispatcher:
         if self._mcu:
             self._hints_resolve(t)
 
+    def score_oids(self, t: Task) -> tuple[str, ...]:
+        """Oids whose cached placement should attract this task: its inputs
+        plus -- for DAG tasks -- every output its producers created (the
+        producer-placement term; dep-free tasks return ``inputs`` as-is)."""
+        if not t.deps:
+            return t.inputs
+        seen = dict.fromkeys(t.inputs)
+        for d in t.deps:
+            p = self.tasks.get(d)
+            if p is not None:
+                for ob in p.outputs:
+                    seen.setdefault(ob.oid, None)
+        return tuple(seen)
+
+    def _hint_oids(self, t: Task) -> tuple[str, ...]:
+        """``score_oids`` minus produced outputs when the outputs-ignored
+        baseline is active.  MUST be used symmetrically by resolve/drop."""
+        oids = self.score_oids(t)
+        if not self.score_outputs:
+            oids = tuple(o for o in oids if o not in self._produced)
+        return oids
+
     def _hints_resolve(self, t: Task) -> None:
         """One index resolution at enqueue; hooks keep it coherent after."""
         hints: dict[str, set[str]] = {}
         touched: set[str] = set()
-        for oid in t.inputs:
+        oids = self._hint_oids(t)
+        for oid in oids:
             self._oid_waiters.setdefault(oid, set()).add(t.tid)
             locs = self.index.lookup(oid)
             if locs:
                 hints[oid] = set(locs)
                 touched |= locs
-        self.decision_lookups += len(t.inputs)
+        self.decision_lookups += len(oids)
         self._hint_cache[t.tid] = hints
         for eid in touched:
             self._rescore(t.tid, eid)
@@ -298,7 +430,7 @@ class Dispatcher:
     def _hints_drop(self, t: Task) -> dict[str, set[str]]:
         """Forget a task leaving the wait queue; returns its final hints."""
         hints = self._hint_cache.pop(t.tid, None) or {}
-        for oid in t.inputs:
+        for oid in self._hint_oids(t):
             waiters = self._oid_waiters.get(oid)
             if waiters is not None:
                 waiters.discard(t.tid)
@@ -428,9 +560,10 @@ class Dispatcher:
         return out
 
     def input_bytes_total(self, tid: str) -> int:
-        """Total bytes of a task's (distinct) inputs, late-size aware --
-        the overlap-fraction denominator (same size default as _rescore)."""
-        ins = self.tasks[tid].inputs
+        """Total bytes of a task's (distinct) scored oids, late-size aware --
+        the overlap-fraction denominator (same size default as _rescore).
+        For dep-free tasks this is exactly the distinct-input byte total."""
+        ins = self._hint_oids(self.tasks[tid])
         if len(ins) == 1:               # classic single-input fast path
             return self.sizes.get(ins[0], 1)
         return sum(self.sizes.get(oid, 1) for oid in dict.fromkeys(ins))
@@ -446,7 +579,7 @@ class Dispatcher:
         way transport.py retains its naive flow solver."""
         ref: dict[str, dict[str, int]] = {}
         for t in self.queue:
-            for oid in dict.fromkeys(t.inputs):
+            for oid in dict.fromkeys(self._hint_oids(t)):
                 sz = self.sizes.get(oid, 1)
                 for eid in self.index.lookup(oid):
                     if eid in self.executors:
@@ -592,6 +725,7 @@ class Dispatcher:
                 orig = self.tasks.get(orig_tid)
                 if orig is not None and orig.state not in (TaskState.DONE,):
                     orig.state = TaskState.DONE  # satisfied by twin
+                self._release_dependents(orig_tid, now)
             elif t.tid in self._speculated:
                 # original won; cancel its twin (reverse map, not an O(n) scan)
                 twin_tid = self._twin_of.pop(t.tid, None)
@@ -600,6 +734,7 @@ class Dispatcher:
                     del self._twins[twin_tid]
                 self._speculated.discard(t.tid)
             self.completed.append(t)
+            self._release_dependents(t.tid, now)
         else:
             if orig_tid is not None:
                 self._twins[t.tid] = orig_tid  # still a live twin; retry below
@@ -610,6 +745,7 @@ class Dispatcher:
                 if rec is not None:
                     rec.emit("task_failed", tid=t.tid, eid=eid,
                              attempts=t.attempts)
+                self._fail_dependents(t.tid)
                 if orig_tid is not None:
                     self._twins.pop(t.tid, None)
                     self._twin_of.pop(orig_tid, None)
@@ -669,7 +805,14 @@ class Dispatcher:
     # ---------------- introspection -----------------------------------------
     @property
     def queue_len(self) -> int:
+        """Runnable backlog (held dep-waiters are NOT demand: adding
+        executors cannot serve them, so the provisioner must not see them)."""
         return len(self.queue) + sum(len(q) for q in self.pending.values())
+
+    @property
+    def held_len(self) -> int:
+        """Tasks held on unmet deps (outside every dispatch path)."""
+        return len(self._held)
 
     def idle_executors(self, now: float, idle_for_s: float) -> list[str]:
         return [

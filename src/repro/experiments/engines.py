@@ -45,7 +45,7 @@ from repro.core.simulator import DiffusionSim, SimConfig, SimResult
 from repro.core.testbeds import TESTBEDS
 from repro.obs import Recorder, outcome_record
 from repro.workloads import (ARRIVALS, POPULARITY, MetricsCollector, Workload,
-                             generate, replay)
+                             build_dag, generate, replay)
 
 from .report import RunReport, build_report
 from .spec import ExperimentSpec, ProvisionerSpec, WorkloadSpec, check_alias_map
@@ -61,6 +61,8 @@ def build_workload(wspec: WorkloadSpec) -> Workload:
     the same arguments -- the binding dicts ARE constructor kwargs)."""
     if wspec.trace_path is not None:
         return replay(wspec.trace_path)
+    if wspec.dag is not None:
+        return build_dag(wspec.dag, name=wspec.name)
     arr = ARRIVALS[wspec.arrivals["kind"]](
         **{k: v for k, v in wspec.arrivals.items() if k != "kind"})
     pop = POPULARITY[wspec.popularity["kind"]](

@@ -77,6 +77,12 @@ class RunReport:
     # -- sim<->real divergence (repro.obs.diff output; {} unless a diff
     # joined this run's measured outcomes against a sim-twin replay) --------
     task_divergence: dict = dataclasses.field(default_factory=dict)
+    # -- DAG slowdown bases (defaulted: pre-PR-8 result files stay readable).
+    # arrival = avg_slowdown's basis (submit -> end); ready measures from the
+    # moment deps were met, so dep-wait does not read as scheduler queueing.
+    # Dep-free runs: all three are equal.
+    slowdown_from_arrival: float = 0.0
+    slowdown_from_ready: float = 0.0
 
     # ------------------------------------------------------------------
     @classmethod
@@ -168,6 +174,8 @@ def build_report(spec, engine: str, result, metrics, *, wall_s: float,
         avg_slowdown=metrics.avg_slowdown,
         p95_slowdown=metrics.p95_slowdown,
         performance_index=metrics.performance_index,
+        slowdown_from_arrival=metrics.slowdown_from_arrival,
+        slowdown_from_ready=metrics.slowdown_from_ready,
         peak_executors=metrics.peak_executors,
         low_executors=metrics.low_executors,
         executor_seconds=metrics.executor_seconds,

@@ -46,7 +46,7 @@ from repro.core.cache import EvictionPolicy
 from repro.core.policies import DispatchPolicy
 from repro.core.provisioner import AllocationPolicy
 from repro.core.testbeds import TESTBEDS
-from repro.workloads import ARRIVALS, POPULARITY
+from repro.workloads import ARRIVALS, DAGS, POPULARITY
 
 
 # --------------------------------------------------------------------------
@@ -109,7 +109,8 @@ class ProvisionerSpec:
 
 @dataclass(frozen=True)
 class WorkloadSpec:
-    """Workload binding: a generator recipe OR a recorded JSONL trace.
+    """Workload binding: a generator recipe, a DAG recipe, OR a recorded
+    JSONL trace -- exactly one of the three.
 
     Generator binding uses the same ``{"kind": ClassName, ...ctor kwargs}``
     dicts that :meth:`ArrivalProcess.spec` / :meth:`PopularityModel.spec`
@@ -117,6 +118,13 @@ class WorkloadSpec:
     valid binding.  ``object_prefix`` names synthetic catalog objects
     ``{prefix}{i}`` (matching ``repro.core.make_objects``); when None the
     generator's own ``{name}.o{i}`` scheme applies.
+
+    ``dag`` binds a structured-pipeline recipe the same way:
+    ``{"kind": "all_pairs" | "reduce_tree" | "stacking_pyramid",
+    ...ctor kwargs}`` against the ``repro.workloads.DAGS`` registry (a DAG
+    Workload's own ``spec`` dict is itself a valid binding).  The flat
+    generator knobs are meaningless for a DAG -- shape comes from the
+    binding -- so non-default values hard-error rather than being dropped.
     """
 
     name: str = "wl"
@@ -131,28 +139,40 @@ class WorkloadSpec:
     store_metadata_ops: int = 0
     seed: int = 0
     trace_path: Optional[str] = None
+    dag: Optional[dict] = None
 
     def __post_init__(self) -> None:
-        if self.trace_path is not None:
-            if self.arrivals is not None or self.popularity is not None:
-                raise ValueError("workload binds EITHER trace_path OR a "
-                                 "generator (arrivals+popularity), not both")
-            # generator knobs have no effect on a replayed trace; accepting
-            # them would silently drop user intent (e.g. a seed "sweep"
-            # that replays the identical trace every time)
+        generator = self.arrivals if self.arrivals is not None \
+            else self.popularity
+        n_bindings = sum(b is not None
+                         for b in (self.trace_path, self.dag, generator))
+        if n_bindings > 1:
+            raise ValueError("workload binds EXACTLY ONE of trace_path, dag, "
+                             "or a generator (arrivals+popularity)")
+        if self.trace_path is not None or self.dag is not None:
+            # flat-generator knobs have no effect on a replayed trace or a
+            # DAG recipe; accepting them would silently drop user intent
+            # (e.g. a seed "sweep" that replays the identical trace, or an
+            # n_tasks that a DAG's own shape parameters ignore)
             dead = [f.name for f in dataclasses.fields(self)
-                    if f.name not in ("name", "trace_path", "arrivals",
-                                      "popularity")
+                    if f.name not in ("name", "trace_path", "dag",
+                                      "arrivals", "popularity")
                     and getattr(self, f.name) != f.default]
             if dead:
+                which = "trace-bound" if self.trace_path is not None \
+                    else "dag-bound"
                 raise ValueError(
-                    f"trace-bound workload: generator field(s) {dead} "
-                    f"would be silently ignored (a trace replays as "
-                    f"recorded; re-generate the trace to change them)")
+                    f"{which} workload: generator field(s) {dead} "
+                    f"would be silently ignored (change them in the "
+                    f"trace / the dag binding instead)")
+            if self.dag is not None and self.dag.get("kind") not in DAGS:
+                raise ValueError(f"unknown dag kind "
+                                 f"{self.dag.get('kind')!r} "
+                                 f"(known: {sorted(DAGS)})")
             return
         if self.arrivals is None or self.popularity is None:
-            raise ValueError("workload needs a trace_path or a generator "
-                             "binding (arrivals AND popularity)")
+            raise ValueError("workload needs a trace_path, a dag binding, or "
+                             "a generator binding (arrivals AND popularity)")
         for label, d, registry in (("arrivals", self.arrivals, ARRIVALS),
                                    ("popularity", self.popularity, POPULARITY)):
             kind = d.get("kind")

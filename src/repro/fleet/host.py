@@ -42,7 +42,8 @@ from repro.core.cache import EvictionPolicy
 from repro.core.channel import BatchingChannel, ChannelClosed
 from repro.core.index import ShardedIndex
 from repro.core.objects import DataObject
-from repro.core.runtime import CacheExecutorBase, _wants_kwargs
+from repro.core.runtime import (SHAPE_ONLY_PAYLOAD, CacheExecutorBase,
+                                _wants_kwargs)
 
 from .wire import SocketChannel, recv_msg, send_msg
 
@@ -284,7 +285,13 @@ class HostExecutor(CacheExecutorBase):
             if fn is not None:
                 result = fn(**inputs) if _wants_kwargs(fn) else fn(inputs)
             for oid, osize in msg["outputs"]:
-                payload = result if len(msg["outputs"]) == 1 else result[oid]
+                # shape-only tasks: admit the wire-stable sentinel (mirrors
+                # DiffusionRuntime._execute) so downstream DAG reads of the
+                # produced object still count as cache hits
+                if fn is None:
+                    payload = SHAPE_ONLY_PAYLOAD
+                else:
+                    payload = result if len(msg["outputs"]) == 1 else result[oid]
                 self._admit(DataObject(oid, int(osize)), payload)
         except Exception as e:  # noqa: BLE001 - task failure is data
             ok, err = False, f"{type(e).__name__}: {e}"

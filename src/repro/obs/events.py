@@ -15,10 +15,15 @@ from __future__ import annotations
 
 import re
 
-EVENT_SCHEMA_VERSION = 1
+#: v1 = the PR-7 lifecycle kinds; v2 adds the DAG ready-set kinds
+#: ``task_held`` / ``task_ready`` (DESIGN.md §11).  load_events hard-errors
+#: on sinks written by any other version.
+EVENT_SCHEMA_VERSION = 2
 
 # -- lifecycle kinds (per task) ---------------------------------------------
 TASK_ARRIVED = "task_arrived"        # Dispatcher.submit
+TASK_HELD = "task_held"              # submitted with unmet deps (ready-set)
+TASK_READY = "task_ready"            # last dep completed; about to enqueue
 TASK_QUEUED = "task_queued"          # entered the wait queue (front=retry/requeue)
 TASK_LEASED = "task_leased"          # queue-head slice leased to a host
 TASK_CLAIMED = "task_claimed"        # host claim reconciled against the lease pool
@@ -27,7 +32,7 @@ INPUT = "input"                      # one input resolved: oid, source, bytes
 EXEC_START = "exec_start"            # task function begins
 EXEC_END = "exec_end"                # task function returned
 TASK_DONE = "task_done"
-TASK_FAILED = "task_failed"          # terminal failure (attempts exhausted)
+TASK_FAILED = "task_failed"          # terminal failure (attempts exhausted / dep_failed)
 TASK_REQUEUED = "task_requeued"      # retry / lease return / executor loss
 
 # -- aggregate kinds --------------------------------------------------------
@@ -36,7 +41,8 @@ POOL = "pool"                        # executor pool transition: size, delta
 PROVISION = "provision"              # DRP decision: allocate, release
 
 LIFECYCLE_KINDS = (
-    TASK_ARRIVED, TASK_QUEUED, TASK_LEASED, TASK_CLAIMED, TASK_DISPATCHED,
+    TASK_ARRIVED, TASK_HELD, TASK_READY, TASK_QUEUED, TASK_LEASED,
+    TASK_CLAIMED, TASK_DISPATCHED,
     INPUT, EXEC_START, EXEC_END, TASK_DONE, TASK_FAILED, TASK_REQUEUED,
 )
 EVENT_KINDS = frozenset(LIFECYCLE_KINDS) | {PUMP, POOL, PROVISION}

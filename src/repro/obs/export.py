@@ -1,10 +1,12 @@
 """Chrome-trace (chrome://tracing / Perfetto) JSON export.
 
 One track per executor (``ph:"X"`` complete events spanning exec_start ->
-exec_end, named by task id), plus counter tracks (``ph:"C"``) for executor
-pool size, dispatcher queue depth, and cumulative cache-admitted bytes.
-Timestamps are rebased so the trace starts at ts=0 regardless of the
-emitters' clock bases.
+exec_end, named by task id), two wait tracks separating *dep-wait* (held on
+unmet producers: task_held -> task_ready) from *queue-wait* (runnable but
+unplaced: ready/queued -> task_dispatched), plus counter tracks (``ph:"C"``)
+for executor pool size, dispatcher queue depth, and cumulative
+cache-admitted bytes.  Timestamps are rebased so the trace starts at ts=0
+regardless of the emitters' clock bases.
 """
 from __future__ import annotations
 
@@ -17,6 +19,10 @@ from .events import (
     POOL,
     PUMP,
     SOURCE_LOCAL,
+    TASK_DISPATCHED,
+    TASK_HELD,
+    TASK_QUEUED,
+    TASK_READY,
     exec_index,
 )
 
@@ -42,8 +48,16 @@ def chrome_trace(events, path=None):
     for eid, track in tid_of.items():
         trace.append({"ph": "M", "pid": _PID, "tid": track,
                       "name": "thread_name", "args": {"name": eid}})
+    dep_track = len(eids) + 1
+    queue_track = len(eids) + 2
+    trace.append({"ph": "M", "pid": _PID, "tid": dep_track,
+                  "name": "thread_name", "args": {"name": "dep_wait"}})
+    trace.append({"ph": "M", "pid": _PID, "tid": queue_track,
+                  "name": "thread_name", "args": {"name": "queue_wait"}})
 
     open_execs: dict = {}
+    held_at: dict = {}    # tid -> t of task_held (dep-wait span start)
+    queue_at: dict = {}   # tid -> t runnable (ready or first queued)
     cache_bytes = 0
     for e in events:
         k = e["kind"]
@@ -60,6 +74,27 @@ def chrome_trace(events, path=None):
                 "ts": us(s["t"]), "dur": max(us(e["t"]) - us(s["t"]), 0.0),
                 "args": {"executor": eid},
             })
+        elif k == TASK_HELD:
+            held_at[e["tid"]] = e["t"]
+        elif k == TASK_READY:
+            s = held_at.pop(e["tid"], None)
+            if s is not None:
+                trace.append({
+                    "ph": "X", "pid": _PID, "tid": dep_track,
+                    "name": e["tid"], "cat": "dep_wait",
+                    "ts": us(s), "dur": max(us(e["t"]) - us(s), 0.0),
+                })
+            queue_at.setdefault(e["tid"], e["t"])
+        elif k == TASK_QUEUED:
+            queue_at.setdefault(e["tid"], e["t"])
+        elif k == TASK_DISPATCHED:
+            s = queue_at.pop(e["tid"], None)
+            if s is not None:
+                trace.append({
+                    "ph": "X", "pid": _PID, "tid": queue_track,
+                    "name": e["tid"], "cat": "queue_wait",
+                    "ts": us(s), "dur": max(us(e["t"]) - us(s), 0.0),
+                })
         elif k == POOL:
             trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
                           "name": "pool_size", "ts": us(e["t"]),

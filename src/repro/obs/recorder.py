@@ -14,7 +14,7 @@ import threading
 import time
 from collections import deque
 
-from .events import EVENT_SCHEMA_VERSION
+from .events import EVENT_KINDS, EVENT_SCHEMA_VERSION
 
 DEFAULT_RING_CAPACITY = 65536
 
@@ -106,7 +106,8 @@ class Recorder:
 
 def load_events(path):
     """Read a Recorder JSONL sink back: ``(header, events)``.  Hard-errors on
-    unknown header kinds/versions and on truncated files."""
+    unknown header kinds/versions, on unknown event kinds, and on truncated
+    files -- a half-understood sink silently skews everything downstream."""
     with open(path, "r", encoding="utf-8") as fh:
         header = json.loads(fh.readline())
         if header.get("kind") != _HEADER_KIND:
@@ -121,4 +122,8 @@ def load_events(path):
     if len(events) != header["n_events"]:
         raise ValueError(f"truncated events sink: header says "
                          f"{header['n_events']} events, found {len(events)}")
+    for i, ev in enumerate(events):
+        if ev.get("kind") not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {ev.get('kind')!r} "
+                             f"at event {i} (schema v{EVENT_SCHEMA_VERSION})")
     return header, events

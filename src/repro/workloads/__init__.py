@@ -11,12 +11,13 @@ events) and ``DiffusionRuntime.submit_workload`` (paced submitter thread).
 from .arrivals import (ARRIVALS, ArrivalProcess, BatchArrivals,
                        BurstyArrivals, DiurnalArrivals, PoissonArrivals,
                        SineWaveArrivals)
+from .dags import DAGS, all_pairs, build_dag, reduce_tree, stacking_pyramid
 from .metrics import MetricsCollector, RunMetrics
 from .popularity import (POPULARITY, PopularityModel, ShiftingWorkingSet,
                          StackingTrace, UniformScan, ZipfPopularity)
 from .trace import (SUPPORTED_VERSIONS, TRACE_VERSION, TRACE_VERSION_V3,
-                    events_fingerprint, read_outcomes, record, record_v3,
-                    replay)
+                    TRACE_VERSION_V4, events_fingerprint, read_outcomes,
+                    record, record_v3, replay)
 from .workload import TaskEvent, Workload, generate
 
 __all__ = [
@@ -24,6 +25,7 @@ __all__ = [
     "ArrivalProcess",
     "BatchArrivals",
     "BurstyArrivals",
+    "DAGS",
     "DiurnalArrivals",
     "MetricsCollector",
     "POPULARITY",
@@ -36,14 +38,19 @@ __all__ = [
     "StackingTrace",
     "TRACE_VERSION",
     "TRACE_VERSION_V3",
+    "TRACE_VERSION_V4",
     "TaskEvent",
     "UniformScan",
     "Workload",
     "ZipfPopularity",
+    "all_pairs",
+    "build_dag",
     "events_fingerprint",
     "generate",
     "read_outcomes",
     "record",
     "record_v3",
+    "reduce_tree",
     "replay",
+    "stacking_pyramid",
 ]

@@ -31,6 +31,15 @@ Version history:
       carries both what a run was ASKED to do and what a real fleet
       MEASURED doing it -- the sim twin replays the former, repro.obs.diff
       joins the latter against the sim's prediction per task.
+  v4  DAG era: task rows gain ``"deps": [tid, ...]`` (producer tasks that
+      must complete first) and input pairs may name *produced* oids, whose
+      sizes come from the producing row's outputs rather than the catalog.
+      Written only when the workload actually carries dep edges --
+      :func:`record` / :func:`record_v3` keep emitting byte-identical
+      v2 / v3 for dep-free workloads, so every committed v1-v3 fixture and
+      parity surface replays unchanged.  A v4 header always carries
+      ``n_outcomes`` (0 when recorded without a measured half) and v4 may
+      carry outcome rows exactly as v3 does.
 
 Round-trip guarantee: ``replay(record(wl))`` reproduces the *exact* event
 sequence -- same tids, arrival times, input/output sets and sizes -- because
@@ -54,12 +63,14 @@ from repro.core.objects import DataObject
 
 from .workload import TaskEvent, Workload
 
-#: version written by :func:`record`
+#: version written by :func:`record` for dep-free workloads
 TRACE_VERSION = 2
 #: version written by :func:`record_v3` (arrivals + measured outcomes)
 TRACE_VERSION_V3 = 3
+#: version written when the workload carries dependency edges
+TRACE_VERSION_V4 = 4
 #: versions :func:`replay` understands (v1 = single-input era traces)
-SUPPORTED_VERSIONS = (1, 2, 3)
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 
 def _open(path_or_file: Union[str, Path, IO[str]], mode: str):
@@ -68,27 +79,50 @@ def _open(path_or_file: Union[str, Path, IO[str]], mode: str):
     return open(path_or_file, mode), True
 
 
-def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
-    """Write ``wl`` as JSONL (schema v2); returns the task events written."""
+def _trace_sizes(wl: Workload) -> dict[str, int]:
+    """oid -> size for everything a task row may reference: the catalog
+    plus every produced output (v4 inputs may name produced oids)."""
     sizes = {ob.oid: ob.size_bytes for ob in wl.objects}
+    for e in wl.events:
+        for oid, sz in e.outputs:
+            sizes[oid] = sz
+    return sizes
+
+
+def _task_row(e: TaskEvent, sizes: dict[str, int], version: int) -> dict:
+    row = {
+        "kind": "task", "t": e.t, "tid": e.tid,
+        "inputs": [[oid, sizes[oid]] for oid in e.inputs],
+        "outputs": [[oid, sz] for oid, sz in e.outputs],
+        "compute_s": e.compute_seconds,
+        "meta_ops": e.store_metadata_ops,
+    }
+    if version >= TRACE_VERSION_V4:
+        row["deps"] = list(e.deps)
+    return row
+
+
+def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
+    """Write ``wl`` as JSONL (schema v2, or v4 when ``wl`` carries dep
+    edges); returns the task events written."""
+    version = TRACE_VERSION_V4 if wl.has_deps() else TRACE_VERSION
+    sizes = _trace_sizes(wl)
     f, should_close = _open(path_or_file, "w")
     try:
-        f.write(json.dumps({
-            "kind": "header", "version": TRACE_VERSION, "name": wl.name,
+        header = {
+            "kind": "header", "version": version, "name": wl.name,
             "n_objects": len(wl.objects), "n_tasks": len(wl.events),
             "spec": wl.spec,
-        }, sort_keys=True) + "\n")
+        }
+        if version >= TRACE_VERSION_V4:
+            header["n_outcomes"] = 0
+        f.write(json.dumps(header, sort_keys=True) + "\n")
         for ob in wl.objects:
             f.write(json.dumps({"kind": "object", "oid": ob.oid,
                                 "size": ob.size_bytes}, sort_keys=True) + "\n")
         for e in wl.events:
-            f.write(json.dumps({
-                "kind": "task", "t": e.t, "tid": e.tid,
-                "inputs": [[oid, sizes[oid]] for oid in e.inputs],
-                "outputs": [[oid, sz] for oid, sz in e.outputs],
-                "compute_s": e.compute_seconds,
-                "meta_ops": e.store_metadata_ops,
-            }, sort_keys=True) + "\n")
+            f.write(json.dumps(_task_row(e, sizes, version),
+                               sort_keys=True) + "\n")
     finally:
         if should_close:
             f.close()
@@ -98,7 +132,8 @@ def record(wl: Workload, path_or_file: Union[str, Path, IO[str]]) -> int:
 def record_v3(wl: Workload, path_or_file: Union[str, Path, IO[str]],
               outcomes: list[dict]) -> int:
     """Write ``wl`` plus measured per-task ``outcomes`` as JSONL (schema
-    v3).  Every outcome must carry at least the
+    v3, or v4 when ``wl`` carries dep edges).  Every outcome must carry
+    at least the
     `repro.obs.events.OUTCOME_FIELDS` keys (extra keys -- e.g. raw
     timestamps -- are preserved); a missing key hard-errors before the
     first byte is written.  Returns the task events written."""
@@ -109,11 +144,12 @@ def record_v3(wl: Workload, path_or_file: Union[str, Path, IO[str]],
         if missing:
             raise ValueError(f"outcome {i} (tid={rec.get('tid')!r}) is "
                              f"missing field(s) {missing}")
-    sizes = {ob.oid: ob.size_bytes for ob in wl.objects}
+    version = TRACE_VERSION_V4 if wl.has_deps() else TRACE_VERSION_V3
+    sizes = _trace_sizes(wl)
     f, should_close = _open(path_or_file, "w")
     try:
         f.write(json.dumps({
-            "kind": "header", "version": TRACE_VERSION_V3, "name": wl.name,
+            "kind": "header", "version": version, "name": wl.name,
             "n_objects": len(wl.objects), "n_tasks": len(wl.events),
             "n_outcomes": len(outcomes), "spec": wl.spec,
         }, sort_keys=True) + "\n")
@@ -121,13 +157,8 @@ def record_v3(wl: Workload, path_or_file: Union[str, Path, IO[str]],
             f.write(json.dumps({"kind": "object", "oid": ob.oid,
                                 "size": ob.size_bytes}, sort_keys=True) + "\n")
         for e in wl.events:
-            f.write(json.dumps({
-                "kind": "task", "t": e.t, "tid": e.tid,
-                "inputs": [[oid, sizes[oid]] for oid in e.inputs],
-                "outputs": [[oid, sz] for oid, sz in e.outputs],
-                "compute_s": e.compute_seconds,
-                "meta_ops": e.store_metadata_ops,
-            }, sort_keys=True) + "\n")
+            f.write(json.dumps(_task_row(e, sizes, version),
+                               sort_keys=True) + "\n")
         for rec in outcomes:
             f.write(json.dumps({"kind": "outcome", **rec},
                                sort_keys=True) + "\n")
@@ -138,8 +169,8 @@ def record_v3(wl: Workload, path_or_file: Union[str, Path, IO[str]],
 
 
 def read_outcomes(path_or_file: Union[str, Path, IO[str]]) -> list[dict]:
-    """Read the measured-outcome rows of a v3 trace.  Hard-errors on any
-    other version (a v1/v2 trace HAS no measured half -- silently
+    """Read the measured-outcome rows of a v3/v4 trace.  Hard-errors on
+    any other version (a v1/v2 trace HAS no measured half -- silently
     returning [] would read as 'the run completed nothing')."""
     f, should_close = _open(path_or_file, "r")
     try:
@@ -150,10 +181,10 @@ def read_outcomes(path_or_file: Union[str, Path, IO[str]]) -> list[dict]:
             raise ValueError("empty trace file") from None
         if header.get("kind") != "header":
             raise ValueError("trace must start with a header line")
-        if header.get("version") != TRACE_VERSION_V3:
+        if header.get("version") not in (TRACE_VERSION_V3, TRACE_VERSION_V4):
             raise ValueError(
                 f"trace version {header.get('version')!r} carries no "
-                f"measured outcomes (need v{TRACE_VERSION_V3})")
+                f"measured outcomes (need v{TRACE_VERSION_V3}+)")
         out = []
         for ln in lines:
             rec = json.loads(ln)
@@ -217,7 +248,11 @@ def replay(path_or_file: Union[str, Path, IO[str]]) -> Workload:
                     outputs=tuple((oid, sz) for oid, sz in rec["outputs"]),
                     compute_seconds=rec["compute_s"],
                     store_metadata_ops=rec["meta_ops"],
+                    deps=tuple(rec.get("deps", ()))
+                    if version >= TRACE_VERSION_V4 else (),
                 ))
+                for oid, sz in rec["outputs"]:
+                    sizes.setdefault(oid, sz)
             elif kind == "outcome" and version >= 3:
                 # measured half of a v3 trace: not this reader's business
                 # (read_outcomes consumes it), but still truncation-checked
@@ -245,4 +280,4 @@ def events_fingerprint(wl: Workload) -> tuple:
     """Hashable identity of a workload's full event sequence (for tests)."""
     return (wl.name, tuple(wl.objects),
             tuple((e.t, e.tid, e.inputs, e.outputs, e.compute_seconds,
-                   e.store_metadata_ops) for e in wl.events))
+                   e.store_metadata_ops, e.deps) for e in wl.events))

@@ -42,6 +42,9 @@ class TaskEvent:
     outputs: tuple[tuple[str, int], ...] = ()   # (oid, size_bytes)
     compute_seconds: float = 0.0
     store_metadata_ops: int = 0
+    # producer tids that must complete before this task becomes ready.
+    # () (the default) keeps the classic flat-bag shape.
+    deps: tuple[str, ...] = ()
 
     def make_task(self) -> Task:
         return Task(
@@ -50,6 +53,7 @@ class TaskEvent:
             compute_seconds=self.compute_seconds,
             store_metadata_ops=self.store_metadata_ops,
             tid=self.tid,
+            deps=self.deps,
         )
 
 
@@ -61,11 +65,36 @@ class Workload:
         ts = [e.t for e in events]
         if any(b < a for a, b in zip(ts, ts[1:])):
             raise ValueError("workload events must be sorted by arrival time")
-        known = {ob.oid for ob in objects}
+        tids = set()
+        for e in events:
+            if e.tid in tids:
+                raise ValueError(f"duplicate task id {e.tid!r}")
+            tids.add(e.tid)
+        # Produced oids must be globally unique AND disjoint from the catalog:
+        # a second registration of the same oid would silently clobber the
+        # size table / index state for the first (objects are immutable).
+        catalog = {ob.oid for ob in objects}
+        produced: dict[str, str] = {}   # oid -> producing tid
+        for e in events:
+            for oid, _sz in e.outputs:
+                if oid in catalog:
+                    raise ValueError(
+                        f"event {e.tid} produces {oid!r}, which collides "
+                        f"with a catalog object")
+                other = produced.get(oid)
+                if other is not None:
+                    raise ValueError(
+                        f"events {other} and {e.tid} both produce {oid!r} "
+                        f"(produced oids must be unique)")
+                produced[oid] = e.tid
+        # Inputs may read catalog objects or another task's produced outputs
+        # (stage-structured pipelines); anything else is unknown.
+        known = catalog | set(produced)
         for e in events:
             missing = [oid for oid in e.inputs if oid not in known]
             if missing:
                 raise ValueError(f"event {e.tid} reads unknown objects {missing}")
+        _validate_deps(events, tids)
         self.name = name
         self.objects: tuple[DataObject, ...] = tuple(objects)
         self.events: tuple[TaskEvent, ...] = tuple(events)
@@ -96,6 +125,42 @@ class Workload:
         if not self.events:
             return 0.0
         return sum(len(e.inputs) for e in self.events) / len(self.events)
+
+    def has_deps(self) -> bool:
+        """True if any task carries dependency edges (a DAG workload)."""
+        return any(e.deps for e in self.events)
+
+
+def _validate_deps(events: Sequence[TaskEvent], tids: set) -> None:
+    """Reject unknown-tid deps, self-deps, and dependency cycles."""
+    dag = False
+    for e in events:
+        for d in e.deps:
+            if d == e.tid:
+                raise ValueError(f"event {e.tid} depends on itself")
+            if d not in tids:
+                raise ValueError(f"event {e.tid} depends on unknown task {d!r}")
+        dag = dag or bool(e.deps)
+    if not dag:
+        return
+    # Kahn's algorithm over the dep edges; leftover nodes => a cycle.
+    indeg = {e.tid: len(set(e.deps)) for e in events}
+    dependents: dict[str, list[str]] = {}
+    for e in events:
+        for d in set(e.deps):
+            dependents.setdefault(d, []).append(e.tid)
+    ready = [tid for tid, n in indeg.items() if n == 0]
+    seen = 0
+    while ready:
+        tid = ready.pop()
+        seen += 1
+        for dtid in dependents.get(tid, ()):
+            indeg[dtid] -= 1
+            if indeg[dtid] == 0:
+                ready.append(dtid)
+    if seen != len(events):
+        stuck = sorted(tid for tid, n in indeg.items() if n > 0)[:5]
+        raise ValueError(f"dependency cycle among tasks {stuck}")
 
 
 def generate(

@@ -1,0 +1,525 @@
+"""DAG workloads end to end (PR 8, DESIGN.md §11): generators and
+validation, trace v4, the dispatcher's ready-set, producer-placement
+scoring, engine execution, obs dep-wait spans, and fleet failure
+semantics mid-pipeline.
+
+The load-bearing contracts:
+
+  * Workload validation rejects malformed DAGs (duplicate produced oids,
+    catalog collisions, unknown/self/cyclic deps) at construction;
+  * dep-free workloads stay bit-identical everywhere: record() still
+    writes v2, the score_outputs knob is inert, and both slowdown bases
+    equal the classic avg_slowdown;
+  * held tasks are invisible to every dispatch path until their last
+    producer completes, and a producer's terminal failure cascades to
+    its (transitive) dependents exactly once;
+  * producer placement: a released task's score includes its producers'
+    output bytes, so it lands where those outputs were just written;
+  * SIGKILLing a fleet host that is executing a producer re-queues the
+    producer, keeps its downstream tasks held (never dispatched with
+    unmet deps, never lost or doubled), and conserves the ledger.
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+
+import pytest
+
+from repro.core import DataObject, DiffusionRuntime, Task
+from repro.core.objects import TaskState
+from repro.core.policies import DispatchPolicy
+from repro.core.scheduler import Dispatcher
+from repro.core import ANL_UC
+from repro.core.simulator import DiffusionSim, SimConfig
+from repro.experiments import (ClusterSpec, ExperimentSpec, ObserveSpec,
+                               RuntimeEngine, SimEngine, WorkloadSpec,
+                               run_experiment)
+from repro.fleet import FleetRuntime
+from repro.workloads import (MetricsCollector, PoissonArrivals, TaskEvent,
+                             Workload, ZipfPopularity, all_pairs, build_dag,
+                             events_fingerprint, generate, record, record_v3,
+                             reduce_tree, replay, stacking_pyramid)
+
+
+# --------------------------------------------------------------------------
+# generators
+# --------------------------------------------------------------------------
+
+class TestGenerators:
+    def test_all_pairs_shape(self):
+        wl = all_pairs("ap", n_objects=3, dt=0.5)
+        assert len(wl) == 3 + 9 and wl.has_deps()
+        by_tid = {e.tid: e for e in wl.events}
+        # off-diagonal pair reads both features, depends on both extracts
+        p = by_tid["ap-p0x2"]
+        assert p.inputs == ("ap.f0", "ap.f2")
+        assert p.deps == ("ap-ext0", "ap-ext2")
+        # diagonal pair reads ONE feature once (no double-counted input)
+        d = by_tid["ap-p1x1"]
+        assert d.inputs == ("ap.f1",) and d.deps == ("ap-ext1",)
+        # topological arrival order with dt spacing
+        ts = [e.t for e in wl.events]
+        assert ts == sorted(ts) and ts[1] - ts[0] == 0.5
+
+    def test_reduce_tree_shape(self):
+        wl = reduce_tree("rt", n_leaves=5, fanin=2)
+        # 5 leaves -> 3 -> 2 -> 1: 11 tasks, root reads the level-2 partials
+        assert len(wl) == 11
+        root = wl.events[-1]
+        assert root.tid == "rt-r3.0"
+        assert root.inputs == ("rt.r2.0", "rt.r2.1")
+        assert root.deps == ("rt-r2.0", "rt-r2.1")
+        assert not wl.events[0].deps          # leaves read the catalog
+
+    def test_stacking_pyramid_shape(self):
+        wl = stacking_pyramid("sp", n_groups=3, group_size=2)
+        assert len(wl) == 4 and len(wl.objects) == 6
+        mosaic = wl.events[-1]
+        assert mosaic.inputs == ("sp.stack0", "sp.stack1", "sp.stack2")
+        assert mosaic.deps == ("sp-stack0", "sp-stack1", "sp-stack2")
+
+    def test_spec_round_trips_as_binding(self):
+        wl = all_pairs("ap", n_objects=4, feature_bytes=123, dt=0.25)
+        again = build_dag(wl.spec)
+        assert events_fingerprint(again) == events_fingerprint(wl)
+        renamed = build_dag(wl.spec, name="zz")     # overrides win
+        assert renamed.events[0].tid == "zz-ext0"
+        with pytest.raises(ValueError, match="unknown dag kind"):
+            build_dag({"kind": "nope"})
+
+
+# --------------------------------------------------------------------------
+# workload validation (satellite: produced-oid collisions)
+# --------------------------------------------------------------------------
+
+def _ev(tid, inputs=(), outputs=(), deps=(), t=0.0):
+    return TaskEvent(t=t, tid=tid, inputs=tuple(inputs),
+                     outputs=tuple(outputs), deps=tuple(deps))
+
+
+class TestValidation:
+    CAT = (DataObject("a", 10),)
+
+    def test_duplicate_produced_oid_rejected(self):
+        evs = [_ev("t0", outputs=(("x", 1),)), _ev("t1", outputs=(("x", 1),))]
+        with pytest.raises(ValueError, match="both produce 'x'"):
+            Workload("w", self.CAT, evs)
+
+    def test_catalog_collision_rejected(self):
+        with pytest.raises(ValueError, match="collides with a catalog"):
+            Workload("w", self.CAT, [_ev("t0", outputs=(("a", 1),))])
+
+    def test_duplicate_tid_rejected(self):
+        with pytest.raises(ValueError, match="duplicate task id"):
+            Workload("w", self.CAT, [_ev("t0"), _ev("t0")])
+
+    def test_unknown_dep_rejected(self):
+        with pytest.raises(ValueError, match="unknown task 'ghost'"):
+            Workload("w", self.CAT, [_ev("t0", deps=("ghost",))])
+
+    def test_self_dep_rejected(self):
+        with pytest.raises(ValueError, match="depends on itself"):
+            Workload("w", self.CAT, [_ev("t0", deps=("t0",))])
+
+    def test_cycle_rejected(self):
+        evs = [_ev("t0", deps=("t1",)), _ev("t1", deps=("t0",))]
+        with pytest.raises(ValueError, match="dependency cycle"):
+            Workload("w", self.CAT, evs)
+
+    def test_produced_oid_is_a_known_input(self):
+        # reading another task's output is legal; reading nothing isn't
+        evs = [_ev("t0", outputs=(("x", 1),)),
+               _ev("t1", inputs=("x",), deps=("t0",))]
+        Workload("w", self.CAT, evs)
+        with pytest.raises(ValueError, match="unknown objects"):
+            Workload("w", self.CAT, [_ev("t0", inputs=("y",))])
+
+
+# --------------------------------------------------------------------------
+# trace v4
+# --------------------------------------------------------------------------
+
+class TestTraceV4:
+    def test_dep_free_record_stays_v2(self):
+        wl = generate("flat", PoissonArrivals(10.0), ZipfPopularity(),
+                      n_tasks=20, n_objects=8, object_bytes=100, seed=3)
+        buf = io.StringIO()
+        record(wl, buf)
+        lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+        assert lines[0]["version"] == 2 and "n_outcomes" not in lines[0]
+        assert all("deps" not in r for r in lines if r["kind"] == "task")
+        buf.seek(0)
+        assert events_fingerprint(replay(buf)) == events_fingerprint(wl)
+
+    def test_dag_records_v4_and_round_trips(self):
+        wl = all_pairs("ap", n_objects=3, dt=0.125)
+        buf = io.StringIO()
+        record(wl, buf)
+        lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+        assert lines[0]["version"] == 4 and lines[0]["n_outcomes"] == 0
+        tasks = [r for r in lines if r["kind"] == "task"]
+        assert tasks[-1]["deps"] == ["ap-ext2"]     # p2x2's single dep
+        # produced-feature inputs carry the PRODUCING row's size
+        pair_inputs = dict(tasks[-1]["inputs"])
+        assert pair_inputs["ap.f2"] == wl.events[2].outputs[0][1]
+        buf.seek(0)
+        again = replay(buf)
+        assert events_fingerprint(again) == events_fingerprint(wl)
+        assert again.has_deps()
+
+    def test_record_v3_with_deps_writes_v4(self):
+        wl = reduce_tree("rt", n_leaves=2)
+        buf = io.StringIO()
+        record_v3(wl, buf, outcomes=[])
+        header = json.loads(buf.getvalue().splitlines()[0])
+        assert header["version"] == 4 and header["n_outcomes"] == 0
+        buf.seek(0)
+        assert events_fingerprint(replay(buf)) == events_fingerprint(wl)
+
+
+# --------------------------------------------------------------------------
+# dispatcher ready-set
+# --------------------------------------------------------------------------
+
+def _mkdisp(policy=DispatchPolicy.FIRST_AVAILABLE, n_exec=2):
+    d = Dispatcher(policy)
+    for i in range(n_exec):
+        d.executor_joined(f"e{i}", now=0.0)
+    return d
+
+
+def _pipeline(n=1):
+    """n producers (each with one output) + one consumer depending on all."""
+    prods = [Task(tid=f"p{i}", inputs=(),
+                  outputs=(DataObject(f"x{i}", 10),)) for i in range(n)]
+    cons = Task(tid="c", inputs=tuple(f"x{i}" for i in range(n)),
+                deps=tuple(f"p{i}" for i in range(n)))
+    return prods, cons
+
+
+class TestReadySet:
+    def test_hold_then_release_stamps_ready_time(self):
+        d = _mkdisp(n_exec=1)
+        (p,), c = _pipeline()
+        d.submit([p, c], now=0.0)
+        assert d.held_len == 1 and d.queue_len == 1   # c is NOT demand
+        out = d.next_dispatches(0.0)
+        assert [o.task.tid for o in out] == ["p0"]
+        assert d.next_dispatches(0.0) == []           # c still unreachable
+        d.task_finished(p, now=2.5)
+        assert d.held_len == 0 and c.ready_time == 2.5
+        assert p.ready_time == p.submit_time == 0.0   # dep-free: == submit
+        nxt = d.next_dispatches(2.5)
+        assert [o.task.tid for o in nxt] == ["c"]
+
+    def test_release_waits_for_all_deps(self):
+        d = _mkdisp(n_exec=2)
+        prods, c = _pipeline(n=2)
+        d.submit(prods + [c], now=0.0)
+        for o in d.next_dispatches(0.0):
+            pass
+        d.task_finished(prods[0], 1.0)
+        assert d.held_len == 1                         # one dep still unmet
+        d.task_finished(prods[1], 2.0)
+        assert d.held_len == 0 and c.ready_time == 2.0
+
+    def test_submit_after_producer_done_is_not_held(self):
+        d = _mkdisp(n_exec=1)
+        (p,), c = _pipeline()
+        d.submit([p], 0.0)
+        d.next_dispatches(0.0)
+        d.task_finished(p, 1.0)
+        d.submit([c], 2.0)
+        assert d.held_len == 0 and c.ready_time == 2.0
+        assert [o.task.tid for o in d.next_dispatches(2.0)] == ["c"]
+
+    def test_producer_failure_cascades_transitively_once(self):
+        d = _mkdisp(n_exec=1)
+        p = Task(tid="p", inputs=(), outputs=(DataObject("x", 10),),
+                 max_attempts=1)
+        mid = Task(tid="m", inputs=("x",), deps=("p",),
+                   outputs=(DataObject("y", 10),))
+        leaf = Task(tid="z", inputs=("y",), deps=("m",))
+        d.submit([p, mid, leaf], 0.0)
+        d.next_dispatches(0.0)
+        d.task_finished(p, 1.0, ok=False)
+        assert p.state is TaskState.FAILED
+        dead = d.drain_dep_failed()
+        assert [t.tid for t in dead] == ["m", "z"]     # transitive, in order
+        assert d.drain_dep_failed() == []              # exactly once
+        assert d.held_len == 0
+        assert {t.tid for t in d.failed} == {"p", "m", "z"}
+        # a late arrival depending on the corpse fails on submission
+        late = Task(tid="late", inputs=(), deps=("p",))
+        d.submit([late], 2.0)
+        assert [t.tid for t in d.drain_dep_failed()] == ["late"]
+        assert late.state is TaskState.FAILED
+
+    def test_executor_death_requeues_producer_and_keeps_holds(self):
+        d = _mkdisp(n_exec=2)
+        (p,), c = _pipeline()
+        d.submit([p, c], 0.0)
+        out = d.next_dispatches(0.0)
+        eid = out[0].executor
+        requeued = d.executor_left(eid, 1.0, failed=True)
+        assert p in requeued and p.attempts == 1
+        assert d.held_len == 1 and c.state is TaskState.SUBMITTED
+        nxt = d.next_dispatches(1.0)
+        assert nxt[0].task is p and nxt[0].executor != eid
+        d.task_finished(p, 2.0)
+        assert d.held_len == 0 and c.ready_time == 2.0
+
+    def test_producer_placement_scoring(self):
+        d = _mkdisp(DispatchPolicy.MAX_COMPUTE_UTIL, n_exec=2)
+        p = Task(tid="p", inputs=(), outputs=(DataObject("f", 100),))
+        c = Task(tid="c", inputs=("f",), deps=("p",))
+        d.submit([p, c], 0.0)
+        out = d.next_dispatches(0.0)
+        peid = out[0].executor
+        d.index.insert("f", peid)          # engine admits output pre-finish
+        d.task_finished(p, 1.0)
+        # score_oids folds dep-produced outputs in (even when not an input)
+        other = Task(tid="o", inputs=("a",), deps=("p",))
+        d.tasks[other.tid] = other
+        assert d.score_oids(other) == ("a", "f")
+        assert d.score_oids(p) == ()       # dep-free: inputs as-is
+        nxt = d.next_dispatches(1.0)
+        assert nxt[0].task is c and nxt[0].executor == peid
+        assert c.location_hints == {"f": (peid,)}
+        assert d.scores_match_reference()
+
+    def test_outputs_ignored_baseline_sees_no_produced_hints(self):
+        d = _mkdisp(DispatchPolicy.MAX_COMPUTE_UTIL, n_exec=2)
+        d.score_outputs = False
+        p = Task(tid="p", inputs=(), outputs=(DataObject("f", 100),))
+        c = Task(tid="c", inputs=("f",), deps=("p",))
+        d.submit([p, c], 0.0)
+        out = d.next_dispatches(0.0)
+        d.index.insert("f", out[0].executor)
+        d.task_finished(p, 1.0)
+        nxt = d.next_dispatches(1.0)
+        assert nxt[0].task is c and nxt[0].hints == {}
+        assert d.scores_match_reference()
+
+
+# --------------------------------------------------------------------------
+# engines
+# --------------------------------------------------------------------------
+
+def _sim_run(wl, n_nodes=4, score_outputs=True):
+    cfg = SimConfig(testbed=ANL_UC, n_nodes=n_nodes,
+                    policy=DispatchPolicy.MAX_COMPUTE_UTIL, seed=0)
+    sim = DiffusionSim(cfg)
+    sim.dispatcher.score_outputs = score_outputs
+    sim.submit_workload(wl)
+    r = sim.run()
+    ends = {t.tid: t.end_time for t in sim.dispatcher.completed}
+    m = MetricsCollector(ANL_UC).collect(r, n_submitted=sim.n_submitted)
+    return m, ends, sim
+
+
+class TestSimEngine:
+    def test_all_pairs_completes_and_orders(self):
+        wl = all_pairs("ap", n_objects=4)
+        m, ends, sim = _sim_run(wl)
+        assert m.n_completed == len(wl) and m.n_failed == 0
+        starts = {t.tid: t.dispatch_time
+                  for t in sim.dispatcher.completed}
+        for e in wl.events:
+            for dep in e.deps:
+                assert starts[e.tid] >= ends[dep], (e.tid, dep)
+        # dep-wait excluded: ready-based slowdown can only be tighter
+        assert m.slowdown_from_ready <= m.slowdown_from_arrival
+        assert m.slowdown_from_arrival == m.avg_slowdown
+
+    def test_reduce_tree_transitive_release(self):
+        wl = reduce_tree("rt", n_leaves=9, fanin=3)
+        m, ends, _ = _sim_run(wl)
+        assert m.n_completed == len(wl) == 13
+        assert max(ends, key=ends.get) == "rt-r2.0"    # root finishes last
+
+    def test_dep_free_slowdown_bases_identical(self):
+        wl = generate("flat", PoissonArrivals(20.0), ZipfPopularity(),
+                      n_tasks=60, n_objects=16, object_bytes=10**6,
+                      compute_seconds=0.05, seed=5)
+        m_on, _, _ = _sim_run(wl, score_outputs=True)
+        m_off, _, _ = _sim_run(wl, score_outputs=False)
+        assert m_on == m_off                           # knob fully inert
+        assert m_on.slowdown_from_arrival == m_on.slowdown_from_ready \
+            == m_on.avg_slowdown
+
+
+class TestRuntimeEngine:
+    def test_dag_executes_with_payloads_from_cache(self):
+        spec = ExperimentSpec(
+            name="dag-rt",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=2),
+            policy="max-compute-util",
+            workload=WorkloadSpec(
+                name="sp",
+                dag={"kind": "stacking_pyramid", "n_groups": 2,
+                     "group_size": 2, "object_bytes": 64,
+                     "stack_bytes": 32, "mosaic_bytes": 32}),
+            seed=0)
+        eng = RuntimeEngine().prepare(spec)
+        try:
+            rep = eng.run(task_fn=lambda inputs: b"".join(inputs.values()),
+                          payload_factory=lambda ob: b"ab",
+                          time_scale=0.0, timeout=60.0)
+            assert rep.n_completed == 3 and rep.n_failed == 0
+            done = {t.tid: t for t in eng.runtime.dispatcher.completed}
+            # real payloads flowed stage to stage
+            assert done["sp-mosaic"].result == b"abab" * 2
+            # deps guarantee produced stacks are CACHE-resident when the
+            # mosaic runs: only the 4 catalog reads may touch the store
+            assert rep.store_reads == 4
+            assert rep.slowdown_from_ready <= rep.slowdown_from_arrival
+        finally:
+            eng.shutdown()
+
+    def test_dep_failure_does_not_leak_wait(self):
+        def boom(inputs):
+            raise RuntimeError("producer down")
+
+        rt = DiffusionRuntime(n_executors=1)
+        try:
+            p = Task(tid="p", inputs=(), outputs=(DataObject("x", 8),),
+                     fn=boom, max_attempts=1)
+            c = Task(tid="c", inputs=("x",), deps=("p",))
+            rt.submit([p, c])
+            assert rt.wait(20), "dep-failed consumer leaked wait()"
+            d = rt.dispatcher
+            assert {t.tid for t in d.failed} == {"p", "c"}
+            assert not d.completed and d.held_len == 0
+        finally:
+            rt.shutdown()
+
+
+class TestExperimentBinding:
+    def test_spec_dag_binding_runs_through_sim_engine(self):
+        spec = ExperimentSpec(
+            name="ap-sim",
+            cluster=ClusterSpec(testbed="anl_uc", n_nodes=4),
+            policy="max-compute-util",
+            workload=WorkloadSpec(name="ap",
+                                  dag={"kind": "all_pairs", "n_objects": 4}),
+            seed=0)
+        rep = run_experiment(spec, engine="sim")
+        assert rep.n_completed == 4 + 16
+
+    def test_dag_plus_generator_fields_rejected(self):
+        with pytest.raises(ValueError, match="EXACTLY ONE"):
+            WorkloadSpec(name="w", dag={"kind": "all_pairs"},
+                         arrivals={"kind": "PoissonArrivals"})
+        with pytest.raises(ValueError, match="silently ignored"):
+            WorkloadSpec(name="w", dag={"kind": "all_pairs"}, n_tasks=5)
+        with pytest.raises(ValueError, match="unknown dag kind"):
+            WorkloadSpec(name="w", dag={"kind": "nope"})
+
+
+# --------------------------------------------------------------------------
+# obs: dep-wait is visible and distinct from queue-wait
+# --------------------------------------------------------------------------
+
+def test_obs_emits_held_ready_and_dep_wait_spans(tmp_path):
+    wl = all_pairs("ap", n_objects=2)      # 2 extracts + 4 held pairs
+    spec = ExperimentSpec(
+        name="obs-dag",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=2),
+        policy="max-compute-util",
+        workload=WorkloadSpec(name="ap",
+                              dag={"kind": "all_pairs", "n_objects": 2}),
+        observe=ObserveSpec(events=True),
+        seed=0)
+    eng = SimEngine()
+    try:
+        eng.prepare(spec, workload=wl)
+        rep = eng.run()
+        events = eng.recorder.events()
+    finally:
+        eng.shutdown()
+    assert rep.n_completed == 6
+    held = [e["tid"] for e in events if e["kind"] == "task_held"]
+    ready = [e["tid"] for e in events if e["kind"] == "task_ready"]
+    assert sorted(held) == sorted(ready) \
+        == ["ap-p0x0", "ap-p0x1", "ap-p1x0", "ap-p1x1"]
+    from repro.obs import chrome_trace
+    spans = [e for e in chrome_trace(events)["traceEvents"]
+             if e["ph"] == "X"]
+    dep_spans = [e for e in spans if e["cat"] == "dep_wait"]
+    assert sorted(e["name"] for e in dep_spans) == sorted(held)
+    queue_spans = [e for e in spans if e["cat"] == "queue_wait"]
+    assert len(queue_spans) == 6           # every task queues exactly once
+
+
+# --------------------------------------------------------------------------
+# fleet: SIGKILL mid-pipeline (satellite: DAG conservation under failure)
+# --------------------------------------------------------------------------
+
+def _fleet_conservation(rt):
+    lg, d = rt.ledger, rt.dispatcher
+    sums = [0] * 6
+    for t in d.completed:
+        sums[0] += t.bytes_local
+        sums[1] += t.bytes_cache_to_cache
+        sums[2] += t.bytes_store
+        sums[3] += t.cache_hits
+        sums[4] += t.peer_hits
+        sums[5] += t.cache_misses - t.peer_hits
+    assert sums == [lg.bytes_local, lg.bytes_c2c, lg.bytes_store,
+                    lg.local_hits, lg.peer_hits, lg.store_reads]
+
+
+def test_fleet_sigkill_mid_pipeline_requeues_and_conserves(monkeypatch):
+    """Kill a host while it executes a producer: the producer re-queues,
+    its downstream tasks stay held (never dispatched with unmet deps,
+    never lost or doubled), the run drains, and the global ledger equals
+    the sum of completed-task ledgers exactly."""
+    # slow the simulated disk so producers dwell ~2s: the kill lands while
+    # every first-wave producer is still EXECUTING, deterministically
+    monkeypatch.setenv("REPRO_BENCH_DISK_BW", "1000")
+    rt = FleetRuntime(hosts=3, threads_per_host=1,
+                      task_fn_name="repro.fleet.runtime:io_dwell_task",
+                      heartbeat_timeout_s=2.0)
+    try:
+        n_prod = 4
+        for i in range(n_prod):
+            rt.put_object(DataObject(f"g{i}", 2000), b"x" * 2000)
+        prods = [Task(tid=f"prod{i}", inputs=(f"g{i}",),
+                      outputs=(DataObject(f"p{i}", 100),))
+                 for i in range(n_prod)]
+        cons = [Task(tid=f"cons{i}", inputs=(f"p{i}",), deps=(f"prod{i}",),
+                     outputs=(DataObject(f"c{i}", 40),))
+                for i in range(n_prod)]
+        root = Task(tid="root", inputs=tuple(f"c{i}" for i in range(n_prod)),
+                    deps=tuple(f"cons{i}" for i in range(n_prod)))
+        rt.submit(prods + cons + [root])
+        time.sleep(0.4)               # producers dispatched, none done (2s)
+        d = rt.dispatcher
+        assert d.held_len == n_prod + 1 and not d.completed
+        victim_eids = set(rt.manager.handles["h1"].eids)
+        victim_tids = {tid for eid in victim_eids
+                       for tid in d.executors[eid].running}
+        assert victim_tids and victim_tids <= {t.tid for t in prods}
+        rt.manager.kill_host("h1")
+        assert rt.wait(60), "wait() leaked after mid-pipeline SIGKILL"
+        assert not d.failed and d.held_len == 0
+        tids = [t.tid for t in d.completed]
+        assert len(tids) == 2 * n_prod + 1            # never lost...
+        assert len(set(tids)) == len(tids)            # ...never doubled
+        done = {t.tid: t for t in d.completed}
+        # the killed host's executing producers re-queued and re-ran on a
+        # survivor (one attempt charged by executor_left)
+        for tid in victim_tids:
+            assert done[tid].attempts == 1
+            assert done[tid].executor not in victim_eids
+        # no dependent ever dispatched with an unmet dep
+        for t in cons + [root]:
+            for dep in t.deps:
+                assert done[t.tid].dispatch_time >= done[dep].end_time
+                assert done[t.tid].ready_time >= done[dep].end_time
+        _fleet_conservation(rt)
+    finally:
+        rt.shutdown()

@@ -114,8 +114,8 @@ class TestSpecRoundTrip:
             WorkloadSpec(arrivals={"kind": "Nope"},
                          popularity={"kind": "ZipfPopularity"},
                          n_tasks=1, n_objects=1)
-        # binding must be exactly one of trace_path / generator
-        with pytest.raises(ValueError, match="EITHER"):
+        # binding must be exactly one of trace_path / dag / generator
+        with pytest.raises(ValueError, match="EXACTLY ONE"):
             WorkloadSpec(trace_path="x.jsonl",
                          arrivals={"kind": "PoissonArrivals"},
                          popularity={"kind": "ZipfPopularity"})

@@ -316,6 +316,10 @@ GOLDEN_TRACE = [
      "args": {"name": "w0"}},
     {"ph": "M", "pid": 0, "tid": 2, "name": "thread_name",
      "args": {"name": "w1"}},
+    {"ph": "M", "pid": 0, "tid": 3, "name": "thread_name",
+     "args": {"name": "dep_wait"}},
+    {"ph": "M", "pid": 0, "tid": 4, "name": "thread_name",
+     "args": {"name": "queue_wait"}},
     {"ph": "C", "pid": 0, "tid": 0, "name": "pool_size", "ts": 0.0,
      "args": {"executors": 1}},
     {"ph": "C", "pid": 0, "tid": 0, "name": "pool_size", "ts": 0.0,
@@ -353,12 +357,17 @@ def test_chrome_trace_from_real_run_is_valid(tmp_path):
     finally:
         eng.shutdown()
     out = chrome_trace(events)
-    spans = [e for e in out["traceEvents"] if e["ph"] == "X"]
+    all_spans = [e for e in out["traceEvents"] if e["ph"] == "X"]
+    spans = [e for e in all_spans if e["cat"] == "task"]
     assert len(spans) == rep.n_completed == 10
+    # dep-free run: every task also gets a queue-wait span, never a dep-wait
+    assert len([e for e in all_spans if e["cat"] == "queue_wait"]) == 10
+    assert not [e for e in all_spans if e["cat"] == "dep_wait"]
     names = {e["args"]["name"] for e in out["traceEvents"]
              if e["ph"] == "M"}
-    assert names == {s["args"]["executor"] for s in spans}
-    assert all(s["dur"] >= 0 and s["ts"] >= 0 for s in spans)
+    assert names == ({s["args"]["executor"] for s in spans}
+                     | {"dep_wait", "queue_wait"})
+    assert all(s["dur"] >= 0 and s["ts"] >= 0 for s in all_spans)
 
 
 # --------------------------------------------------------------------------

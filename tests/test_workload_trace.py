@@ -239,9 +239,10 @@ def test_read_outcomes_rejects_arrivals_only_traces(tmp_path):
 
 
 def test_record_still_writes_v2_and_versions_tuple():
-    """The plain writer did not silently bump; v3 is record_v3-only."""
+    """The plain writer did not silently bump for dep-free workloads; v3
+    is record_v3-only and v4 is reserved for workloads with dep edges."""
     assert TRACE_VERSION == 2
-    assert SUPPORTED_VERSIONS == (1, 2, 3)
+    assert SUPPORTED_VERSIONS == (1, 2, 3, 4)
     wl = generate("v2w", BatchArrivals(), UniformScan(), n_tasks=2,
                   n_objects=2, object_bytes=1, seed=0)
     buf = io.StringIO()
@@ -250,10 +251,10 @@ def test_record_still_writes_v2_and_versions_tuple():
 
 
 def test_future_versions_hard_error_not_best_effort():
-    """A reader must refuse what it cannot fully parse: version 4 with
-    well-formed v3-looking records still raises."""
+    """A reader must refuse what it cannot fully parse: version 5 with
+    well-formed v4-looking records still raises."""
     buf = io.StringIO(
-        json.dumps({"kind": "header", "version": 4, "name": "f",
+        json.dumps({"kind": "header", "version": 5, "name": "f",
                     "n_objects": 0, "n_tasks": 0, "n_outcomes": 0}) + "\n")
     with pytest.raises(ValueError, match="unsupported trace version"):
         replay(buf)

@@ -38,7 +38,15 @@ on more than ``--threshold`` regression (default 25%):
              central-loop CPU <= 10% over events-off on the dispatch
              storm, zero dropped events at the default ring capacity,
              and sim<->fleet per-task placement agreement >= 99% under
-             serial replay).
+             serial replay);
+  dags       benchmarks/bench_dags.py vs BENCH_dags.json -- guards the
+             DAG ready-set + producer-placement layer, with canaries
+             (producer-placement scoring beats the outputs-ignored
+             baseline on cache-hit ratio over the N=24 all-pairs grid,
+             incremental scores with produced oids bit-match the
+             brute-force reference, the reduce tree fully drains, and a
+             dep-free workload is bit-identical under both scoring modes
+             AND to the committed baseline fingerprint).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -55,6 +63,7 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_dispatch \
         --out BENCH_dispatch.json
     PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
+    PYTHONPATH=src python -m benchmarks.bench_dags --out BENCH_dags.json
 """
 from __future__ import annotations
 
@@ -128,13 +137,15 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_dispatch.json"))
     ap.add_argument("--obs-baseline",
                     default=str(REPO_ROOT / "BENCH_obs.json"))
+    ap.add_argument("--dags-baseline",
+                    default=str(REPO_ROOT / "BENCH_dags.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
                                        "policies", "fleet", "dispatch",
-                                       "obs"],
+                                       "obs", "dags"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -144,9 +155,9 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, str(REPO_ROOT))          # make `benchmarks` importable
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import (bench_dispatch, bench_engine, bench_fleet,
-                            bench_joins, bench_obs, bench_policies,
-                            bench_workloads)
+    from benchmarks import (bench_dags, bench_dispatch, bench_engine,
+                            bench_fleet, bench_joins, bench_obs,
+                            bench_policies, bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -256,6 +267,27 @@ def main(argv=None) -> int:
                  lambda b, c: c["dropped"] == 0),
                 ("sim<->fleet placement agreement >= 99%",
                  lambda b, c: c["placement_agreement"] >= 0.99),
+            ]))
+    if args.only in (None, "dags"):
+        rc = max(rc, _check_gate(
+            "dags", Path(args.dags_baseline),
+            lambda: bench_dags.gate_measure(repeats=args.repeats),
+            (bench_dags.GATE_NODES, bench_dags.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("producer placement beats outputs-ignored on hit ratio",
+                 lambda b, c: c["hit_delta"] > 0),
+                ("incremental scores (produced oids) bit-match reference",
+                 lambda b, c: bool(c["scores_match_reference"])),
+                ("reduce tree fully released and drained",
+                 lambda b, c: bool(c["tree_all_completed"])),
+                ("dep-free workload bit-identical under both scoring modes",
+                 lambda b, c: bool(c["dep_free_knob_inert"])),
+                ("dep-free metrics fingerprint matches committed baseline",
+                 lambda b, c: c["dep_free_fingerprint"]
+                 == b["dep_free_fingerprint"]),
             ]))
     return rc
 

@@ -26,6 +26,13 @@ Multi-input (join) workloads -- each task stacks K correlated objects, the
     PYTHONPATH=src python tools/mk_workload.py run - \
         --popularity zipf --inputs-per-task 3 --input-corr 0.8 \
         --tasks 2000 --objects 200 --nodes 64 --policy max-cache-hit
+
+Structured DAG pipelines (tasks depend on other tasks' produced outputs;
+recorded as trace v4, held/released by the dispatcher's ready-set) replace
+the arrival/popularity recipe via ``--dag`` on both paths:
+
+    PYTHONPATH=src python tools/mk_workload.py run - \
+        --dag all_pairs --dag-n 16 --nodes 16 --policy max-compute-util
 """
 from __future__ import annotations
 
@@ -86,7 +93,25 @@ def _build_popularity(args) -> W.PopularityModel:
     raise SystemExit(f"unknown popularity {args.popularity!r}")
 
 
+def _dag_binding(args) -> dict:
+    """The ``{"kind": ..., ...kwargs}`` DAG binding the flags describe --
+    the same dict WorkloadSpec.dag takes, so generate and run agree."""
+    base = {"object_bytes": int(args.object_mb * MB), "dt": args.dag_dt,
+            "seed": args.seed}
+    if args.dag == "all_pairs":
+        return {"kind": "all_pairs", "n_objects": args.dag_n, **base}
+    if args.dag == "reduce_tree":
+        return {"kind": "reduce_tree", "n_leaves": args.dag_n,
+                "fanin": args.fanin, **base}
+    if args.dag == "stacking_pyramid":
+        return {"kind": "stacking_pyramid", "n_groups": args.dag_n,
+                "group_size": args.group_size, **base}
+    raise SystemExit(f"unknown dag {args.dag!r}")
+
+
 def _generate(args) -> W.Workload:
+    if args.dag is not None:
+        return W.build_dag(_dag_binding(args), name=args.name)
     return W.generate(
         args.name, _build_arrivals(args), _build_popularity(args),
         n_tasks=args.tasks, n_objects=args.objects,
@@ -123,6 +148,21 @@ def _add_gen_flags(p: argparse.ArgumentParser) -> None:
                         "draw's neighborhood / stack group instead of an "
                         "independent draw (0..1; ignored by --popularity "
                         "scan)")
+    p.add_argument("--dag", default=None,
+                   choices=["all_pairs", "reduce_tree", "stacking_pyramid"],
+                   help="emit a structured DAG pipeline instead of the "
+                        "arrival/popularity recipe (tasks carry deps on "
+                        "their producers; trace records as v4)")
+    p.add_argument("--dag-n", type=int, default=8, metavar="N",
+                   help="DAG size: n_objects (all_pairs) / n_leaves "
+                        "(reduce_tree) / n_groups (stacking_pyramid)")
+    p.add_argument("--fanin", type=int, default=2,
+                   help="reduce_tree children per reduce task")
+    p.add_argument("--group-size", type=int, default=4,
+                   help="stacking_pyramid images per stack")
+    p.add_argument("--dag-dt", type=float, default=0.0,
+                   help="seconds between DAG task arrivals (0 = all at t=0; "
+                        "the ready-set alone sequences the stages)")
     p.add_argument("--tasks", type=int, default=5_000)
     p.add_argument("--objects", type=int, default=250)
     p.add_argument("--object-mb", type=float, default=10.0)
@@ -144,7 +184,9 @@ def _experiment_spec(args) -> ExperimentSpec:
     """The declarative equivalent of the flags: ``run`` is now a thin
     wrapper over repro.experiments (the spec-driven engine construction is
     bit-identical to the historical hand-built SimConfig path)."""
-    if args.trace == "-":
+    if args.trace == "-" and args.dag is not None:
+        wspec = WorkloadSpec(name=args.name, dag=_dag_binding(args))
+    elif args.trace == "-":
         wspec = WorkloadSpec(
             name=args.name,
             arrivals=_build_arrivals(args).spec(),
