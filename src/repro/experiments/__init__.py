@@ -25,9 +25,10 @@ Quick use::
     report_rt = run_experiment(spec, engine="runtime")
     report_sim.diff(report_rt)     # field-by-field, shared schema
 """
-from .engines import (ENGINES, Engine, RuntimeEngine, SimEngine,
+from .engines import (ENGINES, LAZY_ENGINES, Engine, RuntimeEngine, SimEngine,
                       build_provisioner, build_recorder, build_sim_config,
-                      build_workload, make_engine, run_experiment)
+                      build_workload, engine_names, make_engine,
+                      run_experiment)
 from .report import IDENTITY_FIELDS, RunReport, build_report
 from .spec import (ALIASES, DOCUMENTED_DIVERGENCES, CacheSpec, ClusterSpec,
                    ExperimentSpec, ObserveSpec, ProvisionerSpec, WorkloadSpec,
@@ -43,6 +44,7 @@ __all__ = [
     "Engine",
     "ExperimentSpec",
     "IDENTITY_FIELDS",
+    "LAZY_ENGINES",
     "ObserveSpec",
     "ProvisionerSpec",
     "RunReport",
@@ -57,6 +59,7 @@ __all__ = [
     "build_sim_config",
     "build_workload",
     "check_alias_map",
+    "engine_names",
     "load_results",
     "make_engine",
     "run_experiment",

@@ -45,7 +45,7 @@ from repro.core.simulator import DiffusionSim, SimConfig, SimResult
 from repro.core.testbeds import TESTBEDS
 from repro.obs import Recorder, outcome_record
 from repro.workloads import (ARRIVALS, POPULARITY, MetricsCollector, Workload,
-                             build_dag, generate, replay)
+                             build_dag, build_sessions, generate, replay)
 
 from .report import RunReport, build_report
 from .spec import ExperimentSpec, ProvisionerSpec, WorkloadSpec, check_alias_map
@@ -63,6 +63,8 @@ def build_workload(wspec: WorkloadSpec) -> Workload:
         return replay(wspec.trace_path)
     if wspec.dag is not None:
         return build_dag(wspec.dag, name=wspec.name)
+    if wspec.sessions is not None:
+        return build_sessions(wspec.sessions, name=wspec.name)
     arr = ARRIVALS[wspec.arrivals["kind"]](
         **{k: v for k, v in wspec.arrivals.items() if k != "kind"})
     pop = POPULARITY[wspec.popularity["kind"]](
@@ -479,11 +481,28 @@ class RuntimeEngine:
 #: engine registry (CLI + sweep runner bind engines by name)
 ENGINES: dict[str, type] = {"sim": SimEngine, "runtime": RuntimeEngine}
 
+#: engines living outside repro.experiments, resolved on first use --
+#: repro.serve.diffusion imports back into this module, so registering its
+#: class eagerly would be a cycle.  Value = (module, class name).
+LAZY_ENGINES: dict[str, tuple[str, str]] = {
+    "serve": ("repro.serve.diffusion", "ServeDiffusionEngine"),
+}
+
+
+def engine_names() -> list[str]:
+    """Every engine name make_engine accepts (CLI choices lists)."""
+    return sorted([*ENGINES, *LAZY_ENGINES])
+
 
 def make_engine(name: str):
-    if name not in ENGINES:
-        raise ValueError(f"unknown engine {name!r} (known: {sorted(ENGINES)})")
-    return ENGINES[name]()
+    if name in ENGINES:
+        return ENGINES[name]()
+    if name in LAZY_ENGINES:
+        import importlib
+
+        module, cls = LAZY_ENGINES[name]
+        return getattr(importlib.import_module(module), cls)()
+    raise ValueError(f"unknown engine {name!r} (known: {engine_names()})")
 
 
 def run_experiment(spec: ExperimentSpec, engine: str = "sim",

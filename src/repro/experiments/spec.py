@@ -46,7 +46,7 @@ from repro.core.cache import EvictionPolicy
 from repro.core.policies import DispatchPolicy
 from repro.core.provisioner import AllocationPolicy
 from repro.core.testbeds import TESTBEDS
-from repro.workloads import ARRIVALS, DAGS, POPULARITY
+from repro.workloads import ARRIVALS, DAGS, POPULARITY, SESSIONS
 
 
 # --------------------------------------------------------------------------
@@ -109,8 +109,8 @@ class ProvisionerSpec:
 
 @dataclass(frozen=True)
 class WorkloadSpec:
-    """Workload binding: a generator recipe, a DAG recipe, OR a recorded
-    JSONL trace -- exactly one of the three.
+    """Workload binding: a generator recipe, a DAG recipe, a session
+    recipe, OR a recorded JSONL trace -- exactly one of the four.
 
     Generator binding uses the same ``{"kind": ClassName, ...ctor kwargs}``
     dicts that :meth:`ArrivalProcess.spec` / :meth:`PopularityModel.spec`
@@ -125,6 +125,12 @@ class WorkloadSpec:
     Workload's own ``spec`` dict is itself a valid binding).  The flat
     generator knobs are meaningless for a DAG -- shape comes from the
     binding -- so non-default values hard-error rather than being dropped.
+
+    ``sessions`` binds a multi-turn serving workload the same way:
+    ``{"kind": "chat", ...SessionModel kwargs}`` against the
+    ``repro.workloads.SESSIONS`` registry (a session Workload's own
+    ``spec`` dict is itself a valid binding).  Same dead-knob rule as
+    trace/dag bindings.
     """
 
     name: str = "wl"
@@ -140,39 +146,50 @@ class WorkloadSpec:
     seed: int = 0
     trace_path: Optional[str] = None
     dag: Optional[dict] = None
+    sessions: Optional[dict] = None
 
     def __post_init__(self) -> None:
         generator = self.arrivals if self.arrivals is not None \
             else self.popularity
-        n_bindings = sum(b is not None
-                         for b in (self.trace_path, self.dag, generator))
+        n_bindings = sum(b is not None for b in (self.trace_path, self.dag,
+                                                 self.sessions, generator))
         if n_bindings > 1:
             raise ValueError("workload binds EXACTLY ONE of trace_path, dag, "
-                             "or a generator (arrivals+popularity)")
-        if self.trace_path is not None or self.dag is not None:
-            # flat-generator knobs have no effect on a replayed trace or a
-            # DAG recipe; accepting them would silently drop user intent
-            # (e.g. a seed "sweep" that replays the identical trace, or an
-            # n_tasks that a DAG's own shape parameters ignore)
+                             "sessions, or a generator "
+                             "(arrivals+popularity)")
+        if (self.trace_path is not None or self.dag is not None
+                or self.sessions is not None):
+            # flat-generator knobs have no effect on a replayed trace, a
+            # DAG recipe, or a session recipe; accepting them would
+            # silently drop user intent (e.g. a seed "sweep" that replays
+            # the identical trace, or an n_tasks that a DAG's own shape
+            # parameters ignore)
             dead = [f.name for f in dataclasses.fields(self)
-                    if f.name not in ("name", "trace_path", "dag",
+                    if f.name not in ("name", "trace_path", "dag", "sessions",
                                       "arrivals", "popularity")
                     and getattr(self, f.name) != f.default]
             if dead:
-                which = "trace-bound" if self.trace_path is not None \
-                    else "dag-bound"
+                which = ("trace-bound" if self.trace_path is not None
+                         else "dag-bound" if self.dag is not None
+                         else "sessions-bound")
                 raise ValueError(
                     f"{which} workload: generator field(s) {dead} "
                     f"would be silently ignored (change them in the "
-                    f"trace / the dag binding instead)")
+                    f"trace / the dag / the sessions binding instead)")
             if self.dag is not None and self.dag.get("kind") not in DAGS:
                 raise ValueError(f"unknown dag kind "
                                  f"{self.dag.get('kind')!r} "
                                  f"(known: {sorted(DAGS)})")
+            if self.sessions is not None \
+                    and self.sessions.get("kind") not in SESSIONS:
+                raise ValueError(f"unknown sessions kind "
+                                 f"{self.sessions.get('kind')!r} "
+                                 f"(known: {sorted(SESSIONS)})")
             return
         if self.arrivals is None or self.popularity is None:
-            raise ValueError("workload needs a trace_path, a dag binding, or "
-                             "a generator binding (arrivals AND popularity)")
+            raise ValueError("workload needs a trace_path, a dag binding, a "
+                             "sessions binding, or a generator binding "
+                             "(arrivals AND popularity)")
         for label, d, registry in (("arrivals", self.arrivals, ARRIVALS),
                                    ("popularity", self.popularity, POPULARITY)):
             kind = d.get("kind")

@@ -1,6 +1,30 @@
-from .engine import Request, ServeEngine
+"""Prefix-KV serving on the diffusion stack.
+
+Layering note: ``kvcache`` and ``router`` are pure-Python (hashing + the
+core cache/index/policy machinery) and import eagerly -- the workload
+layer's session generator builds prefix-chain oids through them without
+touching an accelerator.  ``ServeEngine`` / ``Request`` pull in jax and the
+model substrate, so they resolve lazily on first attribute access; the
+``diffusion`` subpackage (the Engine-protocol adapter) likewise resolves
+lazily because it imports ``repro.experiments``, which imports
+``repro.workloads``, which imports this package's ``kvcache``.
+"""
 from .kvcache import kv_bytes_per_token, prefix_chain, prefix_oid
 from .router import PrefixAwareRouter, RouteResult
 
 __all__ = ["PrefixAwareRouter", "Request", "RouteResult", "ServeEngine",
            "kv_bytes_per_token", "prefix_chain", "prefix_oid"]
+
+#: lazily resolved attribute -> defining submodule
+_LAZY = {"Request": "engine", "ServeEngine": "engine"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value   # cache: __getattr__ runs once per name
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,9 +1,9 @@
 """Prefix-cache-aware request routing = the paper's data-aware scheduling
 applied to serving replicas.
 
-Mapping (DESIGN.md §2): replica == executor, cached prefix KV == cached
-file, request == task whose inputs are the block-aligned prefixes of its
-prompt.  The four dispatch policies transfer verbatim:
+Mapping (DESIGN.md §2/§12): replica == executor, cached prefix-KV page ==
+cached file, request == task whose inputs are the block-aligned prefixes of
+its prompt.  The four dispatch policies transfer verbatim:
 
   first-available       round-robin-ish, no prefix reuse information
   first-cache-available route anywhere but ship prefix locations (replica
@@ -12,9 +12,24 @@ prompt.  The four dispatch policies transfer verbatim:
   max-compute-util      among FREE replicas pick the longest cached prefix
                         (modern prefix-aware load balancing)
 
-The router scores by *bytes of KV reused* because the Dispatcher's
-max-policies weight hints by object size -- longer prefixes win, exactly
-like larger files did in the paper.
+Scoring is delegated wholesale to :func:`repro.core.policies.decide` -- the
+SAME pure function the Dispatcher's ``_dispatch_mcu`` reduces to for a
+single queued task -- so the router cannot drift from core policy
+semantics (regression-locked by repro.serve.diffusion.reference against a
+real Dispatcher).  Tie-break order matches ``_dispatch_mcu``: cached bytes
+descending, then overlap fraction, then queue position.  For ONE prompt the
+overlap-fraction denominator (the task's own input byte total) is the same
+at every replica, so that middle tie-break is vacuous here and ties fall
+through to position -- ``decide``'s first-max over replicas in registration
+order, exactly the dispatcher's ``_exec_order``.
+
+Sizing: each prefix-chain oid is ONE KV *page* of ``block *
+kv_bytes_per_token`` bytes (the vLLM paged-KV shape: the page is
+content-addressed by the whole prefix up to its block, but stores only that
+block's KV).  A replica caching an m-page chain therefore scores exactly
+m * page_bytes == the KV bytes a hit actually reuses.  (The previous
+cumulative sizing -- page i sized as the whole i-block prefix -- double-
+counted shared blocks O(m^2) and skewed every policy toward long chains.)
 """
 from __future__ import annotations
 
@@ -25,7 +40,7 @@ from repro.core.cache import EvictionPolicy, ExecutorCache
 from repro.core.index import LocationIndex
 from repro.core.objects import DataObject, Task
 from repro.core.policies import DispatchPolicy, decide
-from .kvcache import prefix_chain, prefix_oid
+from .kvcache import prefix_chain
 
 
 @dataclass
@@ -74,18 +89,29 @@ class PrefixAwareRouter:
                 slots=slots_per_replica)
             self._order.append(rid)
 
+    @property
+    def page_bytes(self) -> int:
+        """KV bytes of one prefix page (== one chain oid)."""
+        return self.block * self.kv_bpt
+
     # ------------------------------------------------------------------
     def route(self, prompt: Sequence[int]) -> RouteResult:
         """Pick a replica for a prompt; caller must later call
         ``complete`` with the same result."""
         oids = prefix_chain(prompt, self.block)
-        for i, oid in enumerate(oids):
-            self.sizes.setdefault(oid, (i + 1) * self.block * self.kv_bpt)
+        for oid in oids:
+            self.sizes.setdefault(oid, self.page_bytes)
         task = Task(inputs=tuple(oids))
         avail = [r for r in self._order if self.replicas[r].available]
         busy = [r for r in self._order if not self.replicas[r].available]
         d = decide(self.policy, task, avail, busy, self.index, self.sizes)
-        rid = d.executor or d.wait_for or (avail[0] if avail else self._order[0])
+        # decide() may return neither an executor nor a wait_for target
+        # (every replica saturated under FA/FCA/MCU, or nothing cached and
+        # nobody free under MCH).  A serving front-end cannot leave the
+        # request unplaced, so fall back to the least-loaded replica
+        # (registration order breaks ties) -- NOT r0, which would pile the
+        # whole overload onto one replica.
+        rid = d.executor or d.wait_for or self._least_busy()
         rep = self.replicas[rid]
         rep.busy += 1
         # longest cached block-prefix ON the chosen replica
@@ -98,6 +124,11 @@ class PrefixAwareRouter:
                 break
         return RouteResult(replica=rid, reused_prefix_tokens=reused,
                            reused_bytes=reused * self.kv_bpt, hints=d.hints)
+
+    def _least_busy(self) -> str:
+        """Overload fallback: fewest in-flight requests, ties by
+        registration order (min() keeps the first minimum)."""
+        return min(self._order, key=lambda r: self.replicas[r].busy)
 
     def complete(self, prompt: Sequence[int], result: RouteResult) -> None:
         """Request finished: register the full prefix chain in the
@@ -112,6 +143,19 @@ class PrefixAwareRouter:
                 self.index.remove(ev, rep.rid)
 
     # ------------------------------------------------------------------
+    def reference_scores(self, prompt: Sequence[int]) -> dict[str, int]:
+        """Brute-force replica -> cached-input-bytes for ``prompt``,
+        rebuilt from fresh index lookups -- the router-side analogue of
+        ``Dispatcher.reference_scores()`` and the oracle the regression
+        lock (repro.serve.diffusion.reference, tests) compares against."""
+        scores = {rid: 0 for rid in self._order}
+        for oid in dict.fromkeys(prefix_chain(prompt, self.block)):
+            sz = self.sizes.get(oid, 1)
+            for rid in self.index.lookup(oid):
+                if rid in scores:
+                    scores[rid] += sz
+        return scores
+
     def stats(self) -> dict:
         served = sum(r.served for r in self.replicas.values())
         return {

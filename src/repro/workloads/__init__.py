@@ -15,6 +15,7 @@ from .dags import DAGS, all_pairs, build_dag, reduce_tree, stacking_pyramid
 from .metrics import MetricsCollector, RunMetrics
 from .popularity import (POPULARITY, PopularityModel, ShiftingWorkingSet,
                          StackingTrace, UniformScan, ZipfPopularity)
+from .sessions import SESSIONS, SessionModel, build_sessions, chat_sessions
 from .trace import (SUPPORTED_VERSIONS, TRACE_VERSION, TRACE_VERSION_V3,
                     TRACE_VERSION_V4, events_fingerprint, read_outcomes,
                     record, record_v3, replay)
@@ -32,7 +33,9 @@ __all__ = [
     "PoissonArrivals",
     "PopularityModel",
     "RunMetrics",
+    "SESSIONS",
     "SUPPORTED_VERSIONS",
+    "SessionModel",
     "ShiftingWorkingSet",
     "SineWaveArrivals",
     "StackingTrace",
@@ -45,6 +48,8 @@ __all__ = [
     "ZipfPopularity",
     "all_pairs",
     "build_dag",
+    "build_sessions",
+    "chat_sessions",
     "events_fingerprint",
     "generate",
     "read_outcomes",

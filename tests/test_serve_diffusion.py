@@ -1,0 +1,341 @@
+"""PR 9: serving through the diffusion stack (DESIGN.md §12).
+
+Covers the session workload generator (determinism, prefix-chain
+monotonicity, trace round-trip), the sessions spec binding, the
+router-vs-core regression lock, the serve engine's RunReport parity with
+sim/runtime, and the sim<->serve divergence diff under serial replay.
+No jax imports anywhere -- the serve *scheduling* half is pure Python.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core.policies import DispatchPolicy
+from repro.experiments import (ExperimentSpec, ObserveSpec, WorkloadSpec,
+                               build_workload, engine_names, make_engine,
+                               run_experiment)
+from repro.serve import PrefixAwareRouter, prefix_chain
+from repro.serve.diffusion import (SERVE_MAPPING, ServeDiffusionEngine,
+                                   check_serve_spec, kv_summary,
+                                   session_spec, verify_route)
+from repro.workloads import (SESSIONS, SessionModel, Workload, build_sessions,
+                             chat_sessions, record, record_v3, replay)
+
+FAST = {"kind": "chat", "n_sessions": 16, "turns_per_session": 3,
+        "kv_bytes_per_token": 256, "block": 16,
+        "think_time_s": 0.0, "turn_seconds": 0.0,
+        "arrivals": {"kind": "BatchArrivals", "at_s": 0.0}}
+
+
+# --------------------------------------------------------------------------
+# session generator
+# --------------------------------------------------------------------------
+
+class TestSessionModel:
+    def test_seeded_determinism(self):
+        a = SessionModel(n_sessions=24, seed=5).generate()
+        b = SessionModel(n_sessions=24, seed=5).generate()
+        assert a.events == b.events
+        assert a.objects == b.objects
+
+    def test_seed_changes_workload(self):
+        a = SessionModel(n_sessions=24, seed=5).generate()
+        b = SessionModel(n_sessions=24, seed=6).generate()
+        assert a.events != b.events
+
+    def test_prefix_chain_monotone_across_turns(self):
+        """Turn j+1's inputs must extend turn j's verbatim -- the KV pages
+        of an earlier turn are a strict prefix of every later turn's."""
+        wl = SessionModel(n_sessions=10, turns_per_session=4, seed=1).generate()
+        turns: dict[int, dict[int, tuple]] = {}
+        for e in wl.events:
+            sid, j = e.tid.rsplit("-s", 1)[1].split(".t")
+            turns.setdefault(int(sid), {})[int(j)] = e.inputs
+        assert len(turns) == 10
+        for per_session in turns.values():
+            assert sorted(per_session) == [1, 2, 3, 4]
+            for j in range(2, 5):
+                prev, cur = per_session[j - 1], per_session[j]
+                assert len(cur) > len(prev)
+                assert cur[:len(prev)] == prev
+
+    def test_turn_growth_is_turn_blocks(self):
+        m = SessionModel(n_sessions=4, turns_per_session=3,
+                         system_prompt_blocks=5, turn_blocks=2, seed=0)
+        wl = m.generate()
+        widths = sorted({len(e.inputs) for e in wl.events})
+        assert widths == [7, 9, 11]    # 5 + j*2 for j in 1..3
+
+    def test_system_prompt_sharing(self):
+        """With one system prompt, every session's first pages collide --
+        the hot shared prefix the Zipf skew models."""
+        m = SessionModel(n_sessions=8, n_system_prompts=1,
+                         system_prompt_blocks=3, seed=2)
+        wl = m.generate()
+        first_turn_heads = {e.inputs[:3] for e in wl.events
+                            if e.tid.endswith(".t1")}
+        assert len(first_turn_heads) == 1
+
+    def test_pages_uniform_and_model_sizing(self):
+        m = SessionModel(n_sessions=4, kv_bytes_per_token=128, block=32)
+        wl = m.generate()
+        assert {ob.size_bytes for ob in wl.objects} == {128 * 32}
+        # a real ModelConfig drives sizing when model= is set
+        m2 = SessionModel(n_sessions=2, model="whisper-base", block=32)
+        from repro.configs import get_config
+        from repro.serve import kv_bytes_per_token
+        expect = max(kv_bytes_per_token(get_config("whisper-base")), 1) * 32
+        assert {ob.size_bytes for ob in m2.generate().objects} == {expect}
+
+    def test_trace_round_trip(self, tmp_path):
+        wl = SessionModel(n_sessions=12, seed=3).generate()
+        p = tmp_path / "sess.jsonl"
+        record(wl, p)
+        back = replay(p)
+        assert back.events == wl.events
+        assert sorted(ob.oid for ob in back.objects) == \
+            sorted(ob.oid for ob in wl.objects)
+
+    def test_registry_and_binding_round_trip(self):
+        assert "chat" in SESSIONS
+        m = SessionModel(n_sessions=6, zipf_s=1.5, seed=9)
+        again = build_sessions(m.spec())
+        assert again.events == m.generate().events
+
+    def test_bad_bindings(self):
+        with pytest.raises(ValueError, match="unknown sessions kind"):
+            build_sessions({"kind": "nope"})
+        with pytest.raises(ValueError, match="n_sessions"):
+            SessionModel(n_sessions=0)
+        with pytest.raises(ValueError, match="arrivals"):
+            SessionModel(arrivals={"kind": "NotAProcess"})
+
+
+# --------------------------------------------------------------------------
+# spec binding
+# --------------------------------------------------------------------------
+
+class TestSessionsBinding:
+    def test_build_workload_routes_sessions(self):
+        ws = WorkloadSpec(name="s", sessions=dict(FAST))
+        wl = build_workload(ws)
+        assert isinstance(wl, Workload)
+        assert len(wl) == FAST["n_sessions"] * FAST["turns_per_session"]
+        assert wl.name == "s"              # spec name override wins
+
+    def test_exactly_one_binding(self):
+        with pytest.raises(ValueError, match="EXACTLY ONE"):
+            WorkloadSpec(sessions=dict(FAST),
+                         dag={"kind": "all_pairs", "n_objects": 2})
+        with pytest.raises(ValueError, match="EXACTLY ONE"):
+            WorkloadSpec(sessions=dict(FAST), trace_path="x.jsonl")
+
+    def test_dead_knobs_hard_error(self):
+        with pytest.raises(ValueError, match="sessions-bound"):
+            WorkloadSpec(sessions=dict(FAST), n_tasks=100)
+        with pytest.raises(ValueError, match="sessions-bound"):
+            WorkloadSpec(sessions=dict(FAST), seed=7)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown sessions kind"):
+            WorkloadSpec(sessions={"kind": "mystery"})
+
+    def test_spec_json_round_trip(self):
+        spec = session_spec("rt", FAST, n_replicas=3, seed=4)
+        again = ExperimentSpec.from_dict(spec.to_dict())
+        assert again == spec
+        assert again.workload.sessions == dict(FAST)
+
+
+# --------------------------------------------------------------------------
+# router vs core regression lock
+# --------------------------------------------------------------------------
+
+def _drive_verified(policy, n_prompts=48, seed=0):
+    rng = random.Random(seed)
+    r = PrefixAwareRouter(4, policy=policy, kv_bytes_per_token=64,
+                          block=16, slots_per_replica=2)
+    bases = [[rng.randrange(999) for _ in range(64)] for _ in range(4)]
+    inflight, results = [], []
+    for _ in range(n_prompts):
+        p = bases[rng.randrange(4)] + [rng.randrange(999)
+                                       for _ in range(16 * rng.randrange(3))]
+        results.append(verify_route(r, p))
+        inflight.append((p, results[-1]["route_result"]))
+        if len(inflight) > 4:
+            pp, rr = inflight.pop(0)
+            r.complete(pp, rr)
+    return results
+
+
+class TestRouterRegressionLock:
+    @pytest.mark.parametrize("policy", [
+        DispatchPolicy.MAX_COMPUTE_UTIL, DispatchPolicy.MAX_CACHE_HIT,
+        DispatchPolicy.FIRST_AVAILABLE, DispatchPolicy.FIRST_CACHE_AVAILABLE])
+    def test_placement_and_scores_match_dispatcher(self, policy):
+        for v in _drive_verified(policy):
+            assert v["scores_agree"], \
+                f"router scores drifted from reference_scores: {v}"
+            assert v["placement_agrees"], \
+                f"router placement drifted from decide(): {v}"
+            assert v["prediction"]["incremental_consistent"]
+
+    def test_page_sizing_not_cumulative(self):
+        """Every chain oid is ONE page: scoring an m-page chain must give
+        m * page_bytes, not the old O(m^2) cumulative inflation."""
+        r = PrefixAwareRouter(2, kv_bytes_per_token=64, block=16)
+        prompt = list(range(64))          # 4 pages
+        res = r.route(prompt)
+        r.complete(prompt, res)
+        scores = r.reference_scores(prompt)
+        assert scores[res.replica] == 4 * r.page_bytes
+        assert all(r.sizes[oid] == r.page_bytes
+                   for oid in prefix_chain(prompt, r.block))
+
+    def test_saturated_fallback_is_least_busy(self):
+        r = PrefixAwareRouter(3, policy=DispatchPolicy.FIRST_AVAILABLE,
+                              slots_per_replica=1)
+        routed = [r.route([i] * 16) for i in range(3)]   # saturate all
+        assert {x.replica for x in routed} == {"r0", "r1", "r2"}
+        # all busy: overload must spread, not pile onto r0
+        overflow = [r.route([9, i] * 8).replica for i in range(3)]
+        assert overflow == ["r0", "r1", "r2"]
+
+    def test_reused_tokens_counted_on_chosen_replica(self):
+        r = PrefixAwareRouter(2, kv_bytes_per_token=64, block=16)
+        prompt = list(range(48))
+        first = r.route(prompt)
+        r.complete(prompt, first)
+        again = r.route(prompt + list(range(100, 116)))
+        assert again.replica == first.replica
+        assert again.reused_prefix_tokens == 48
+        assert again.reused_bytes == 48 * 64
+
+
+# --------------------------------------------------------------------------
+# serve engine: report parity + lifecycle + rejects
+# --------------------------------------------------------------------------
+
+class TestServeEngine:
+    def test_registered_lazily(self):
+        assert "serve" in engine_names()
+        assert isinstance(make_engine("serve"), ServeDiffusionEngine)
+
+    def test_end_to_end_report(self):
+        spec = session_spec("e2e", FAST, n_replicas=4, seed=1)
+        rep = run_experiment(spec, engine="serve")
+        assert rep.engine == "serve"
+        assert rep.n_completed == len(build_workload(spec.workload))
+        assert rep.n_failed == 0
+        s = kv_summary(rep)
+        # later turns + shared system prompts MUST reuse KV
+        assert s["reused_kv_bytes"] > 0
+        assert 0.0 < s["reused_token_fraction"] < 1.0
+        assert s["n_requests"] == rep.n_completed
+
+    def test_schema_parity_with_sim_and_runtime(self):
+        spec = session_spec("parity", FAST, n_replicas=4, seed=1)
+        serve = run_experiment(spec, engine="serve")
+        sim = run_experiment(spec, engine="sim")
+        assert serve.schema() == sim.schema()
+        d = serve.diff(sim)
+        # diff() runs field-by-field over the shared schema, masking
+        # identity fields (engine, wall clock) by design -- what's left
+        # are comparable metric values of matching types
+        assert "engine" not in d and "wall_s" not in d
+        for field_name, (a, b) in d.items():
+            assert type(a) is type(b), field_name
+        # same submission count on both engines, field read via diff's
+        # shared schema rather than ad hoc attributes
+        assert serve.n_tasks == sim.n_tasks
+
+    def test_serve_rejects_hosts(self):
+        spec = dataclasses.replace(session_spec("rej", FAST),
+                                   hosts=2, threads_per_host=2)
+        with pytest.raises(ValueError, match="serve engine does not support"):
+            make_engine("serve").prepare(spec)
+
+    def test_serve_rejects_dag(self):
+        spec = ExperimentSpec(
+            name="rej-dag",
+            workload=WorkloadSpec(dag={"kind": "all_pairs", "n_objects": 2}))
+        with pytest.raises(ValueError, match="not serve-legal"):
+            check_serve_spec(spec)
+
+    def test_inherits_runtime_rejects(self):
+        spec = dataclasses.replace(session_spec("rej2", FAST),
+                                   flow_solver="naive")
+        with pytest.raises(ValueError, match="does not support"):
+            make_engine("serve").prepare(spec)
+
+    def test_mapping_table_shape(self):
+        assert len(SERVE_MAPPING) >= 6
+        for row in SERVE_MAPPING:
+            assert len(row) == 3 and all(isinstance(c, str) for c in row)
+        concepts = [r[0] for r in SERVE_MAPPING]
+        assert "model replica" in concepts
+
+
+# --------------------------------------------------------------------------
+# sim twin: obs lifecycle + divergence diff on the serve path
+# --------------------------------------------------------------------------
+
+def _serial_sessions(n_sessions=10, turns=2):
+    """Session workload re-spaced to 1 task/s (>> service time), the serial
+    regime where sim<->serve replay is exact (DESIGN.md §12)."""
+    binding = {"kind": "chat", "n_sessions": n_sessions,
+               "turns_per_session": turns, "kv_bytes_per_token": 256,
+               "block": 16, "turn_seconds": 0.001,
+               "arrivals": {"kind": "PoissonArrivals", "rate_per_s": 2.0}}
+    wl = build_sessions(binding, name="twin")
+    events = [dataclasses.replace(e, t=float(i))
+              for i, e in enumerate(wl.events)]
+    return binding, Workload("twin", wl.objects, events, spec=None)
+
+
+class TestSimServeTwin:
+    def test_serve_emits_lifecycle_events(self):
+        spec = session_spec("obs", FAST, n_replicas=4,
+                            observe=ObserveSpec(events=True))
+        eng = make_engine("serve")
+        try:
+            eng.prepare(spec)
+            rep = eng.run(barrier_every=1, timeout=120)
+            kinds = {e["kind"] for e in eng.recorder.events()}
+        finally:
+            eng.shutdown()
+        assert rep.n_completed > 0
+        assert {"task_arrived", "task_dispatched", "task_done",
+                "exec_start", "exec_end"} <= kinds
+
+    def test_serial_replay_divergence(self, tmp_path):
+        from repro.obs import sim_twin_spec
+        from repro.obs.diff import diff_outcomes, sim_replay_outcomes
+
+        binding, serial = _serial_sessions()
+        spec = session_spec("twin", binding, n_replicas=4, seed=2,
+                            observe=ObserveSpec(events=True))
+        eng = make_engine("serve")
+        try:
+            eng.prepare(spec, workload=serial)
+            rep = eng.run(barrier_every=1, timeout=240)
+            outcomes = eng.last_outcomes
+        finally:
+            eng.shutdown()
+        assert rep.n_completed == len(serial)
+        p = tmp_path / "twin.jsonl"
+        record_v3(serial, p, outcomes)
+        predicted = sim_replay_outcomes(sim_twin_spec(spec, str(p)), str(p))
+        div = diff_outcomes(outcomes, predicted)
+        assert div["placement_agreement"] >= 0.99
+
+    def test_sim_engine_runs_sessions_binding(self):
+        """The sim binding: the SAME sessions spec at a scale the threaded
+        pool can't touch (the >=1e5-session scale point is gated in
+        benchmarks/bench_serve.py)."""
+        spec = session_spec("simside", FAST)
+        rep = run_experiment(spec, engine="sim")
+        assert rep.engine == "sim"
+        assert rep.n_completed == len(build_workload(spec.workload))
+        assert kv_summary(rep)["reused_kv_bytes"] > 0

@@ -46,7 +46,14 @@ on more than ``--threshold`` regression (default 25%):
              incremental scores with produced oids bit-match the
              brute-force reference, the reduce tree fully drains, and a
              dep-free workload is bit-identical under both scoring modes
-             AND to the committed baseline fingerprint).
+             AND to the committed baseline fingerprint);
+  serve      benchmarks/bench_serve.py vs BENCH_serve.json -- guards the
+             serving path (repro.serve.diffusion), with canaries
+             (max-cache-hit beats first-available on reused-KV bytes
+             over the 200-session chat workload, the provisioner both
+             grows and shrinks under diurnal sessions, and an events-off
+             serve run is bit-identical to events-on on the
+             scheduling-determined report fields under barrier replay).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -64,6 +71,7 @@ Regenerate a baseline (intentional engine change / new hardware) with:
         --out BENCH_dispatch.json
     PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
     PYTHONPATH=src python -m benchmarks.bench_dags --out BENCH_dags.json
+    PYTHONPATH=src python -m benchmarks.bench_serve --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -139,13 +147,15 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_obs.json"))
     ap.add_argument("--dags-baseline",
                     default=str(REPO_ROOT / "BENCH_dags.json"))
+    ap.add_argument("--serve-baseline",
+                    default=str(REPO_ROOT / "BENCH_serve.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
                                        "policies", "fleet", "dispatch",
-                                       "obs", "dags"],
+                                       "obs", "dags", "serve"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -157,7 +167,7 @@ def main(argv=None) -> int:
     sys.path.insert(0, str(REPO_ROOT / "src"))
     from benchmarks import (bench_dags, bench_dispatch, bench_engine,
                             bench_fleet, bench_joins, bench_obs,
-                            bench_policies, bench_workloads)
+                            bench_policies, bench_serve, bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -288,6 +298,24 @@ def main(argv=None) -> int:
                 ("dep-free metrics fingerprint matches committed baseline",
                  lambda b, c: c["dep_free_fingerprint"]
                  == b["dep_free_fingerprint"]),
+            ]))
+    if args.only in (None, "serve"):
+        rc = max(rc, _check_gate(
+            "serve", Path(args.serve_baseline),
+            lambda: bench_serve.gate_measure(repeats=args.repeats),
+            (bench_serve.GATE_NODES, bench_serve.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("max-cache-hit beats first-available on reused-KV bytes",
+                 lambda b, c: c["reused_kv_gap"] > 0),
+                ("provisioner grew the replica pool",
+                 lambda b, c: c["drp_allocated"] > 0),
+                ("provisioner shrank the replica pool",
+                 lambda b, c: c["drp_released"] > 0),
+                ("events-off report bit-identical to events-on",
+                 lambda b, c: bool(c["events_identical"])),
             ]))
     return rc
 

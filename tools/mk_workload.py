@@ -33,6 +33,15 @@ the arrival/popularity recipe via ``--dag`` on both paths:
 
     PYTHONPATH=src python tools/mk_workload.py run - \
         --dag all_pairs --dag-n 16 --nodes 16 --policy max-compute-util
+
+Multi-turn serving sessions (each turn a k-input join over block-aligned
+prefix-KV pages; Zipf-shared system prompts; see repro.workloads.sessions)
+via ``--sessions N`` on both paths, typically driven through the serve
+engine:
+
+    PYTHONPATH=src python tools/mk_workload.py run - \
+        --sessions 200 --turns 3 --zipf-s 1.2 --block 64 \
+        --arrivals diurnal --nodes 4 --engine serve
 """
 from __future__ import annotations
 
@@ -109,7 +118,29 @@ def _dag_binding(args) -> dict:
     raise SystemExit(f"unknown dag {args.dag!r}")
 
 
+def _sessions_binding(args) -> dict:
+    """The ``{"kind": "chat", ...}`` session binding the flags describe --
+    the same dict WorkloadSpec.sessions takes, so generate and run agree."""
+    return {"kind": "chat", "n_sessions": args.sessions,
+            "turns_per_session": args.turns,
+            "n_system_prompts": args.system_prompts,
+            "zipf_s": args.zipf_s,
+            "system_prompt_blocks": args.sys_blocks,
+            "turn_blocks": args.turn_blocks,
+            "block": args.block,
+            "model": args.model,
+            "kv_bytes_per_token": args.kv_bpt,
+            "think_time_s": args.think_s,
+            "turn_seconds": args.turn_s,
+            "arrivals": _build_arrivals(args).spec(),
+            "seed": args.seed}
+
+
 def _generate(args) -> W.Workload:
+    if args.sessions is not None and args.dag is not None:
+        raise SystemExit("--sessions and --dag are mutually exclusive")
+    if args.sessions is not None:
+        return W.build_sessions(_sessions_binding(args), name=args.name)
     if args.dag is not None:
         return W.build_dag(_dag_binding(args), name=args.name)
     return W.generate(
@@ -163,6 +194,31 @@ def _add_gen_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--dag-dt", type=float, default=0.0,
                    help="seconds between DAG task arrivals (0 = all at t=0; "
                         "the ready-set alone sequences the stages)")
+    p.add_argument("--sessions", type=int, default=None, metavar="N",
+                   help="emit N multi-turn serving sessions instead of the "
+                        "arrival/popularity recipe (inputs are prefix-KV "
+                        "page chains; --arrivals flags pace the session "
+                        "starts)")
+    p.add_argument("--turns", type=int, default=3,
+                   help="turns per session (each extends the prefix chain)")
+    p.add_argument("--system-prompts", type=int, default=8,
+                   help="distinct system prompts shared Zipf-style")
+    p.add_argument("--zipf-s", type=float, default=1.1,
+                   help="Zipf skew over system prompts")
+    p.add_argument("--block", type=int, default=64,
+                   help="tokens per KV page (prefix-chain alignment)")
+    p.add_argument("--sys-blocks", type=int, default=4,
+                   help="blocks per system prompt")
+    p.add_argument("--turn-blocks", type=int, default=2,
+                   help="new blocks appended per turn")
+    p.add_argument("--think-s", type=float, default=4.0,
+                   help="seconds between a session's turns")
+    p.add_argument("--turn-s", type=float, default=0.05,
+                   help="compute seconds per turn (decode proxy)")
+    p.add_argument("--model", default=None,
+                   help="arch id (repro.configs) to derive KV bytes/token")
+    p.add_argument("--kv-bpt", type=int, default=4096,
+                   help="KV bytes per token when --model is not given")
     p.add_argument("--tasks", type=int, default=5_000)
     p.add_argument("--objects", type=int, default=250)
     p.add_argument("--object-mb", type=float, default=10.0)
@@ -184,7 +240,9 @@ def _experiment_spec(args) -> ExperimentSpec:
     """The declarative equivalent of the flags: ``run`` is now a thin
     wrapper over repro.experiments (the spec-driven engine construction is
     bit-identical to the historical hand-built SimConfig path)."""
-    if args.trace == "-" and args.dag is not None:
+    if args.trace == "-" and args.sessions is not None:
+        wspec = WorkloadSpec(name=args.name, sessions=_sessions_binding(args))
+    elif args.trace == "-" and args.dag is not None:
         wspec = WorkloadSpec(name=args.name, dag=_dag_binding(args))
     elif args.trace == "-":
         wspec = WorkloadSpec(
@@ -239,7 +297,8 @@ def main(argv=None) -> int:
     _add_gen_flags(r)
     r.add_argument("--nodes", type=int, default=16)
     r.add_argument("--policy", default="max-compute-util")
-    r.add_argument("--engine", default="sim", choices=["sim", "runtime"])
+    r.add_argument("--engine", default="sim",
+                   choices=["sim", "runtime", "serve"])
     r.add_argument("--testbed", default="anl_uc", choices=sorted(TESTBEDS))
     r.add_argument("--cache-gb", type=float, default=100.0)
     r.add_argument("--provision", action="store_true",

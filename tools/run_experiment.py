@@ -85,7 +85,7 @@ def cmd_run(args) -> int:
 
     spec = _load_spec(args.spec)
     run_kw = {}
-    if args.engine == "runtime":
+    if args.engine in ("runtime", "serve"):
         run_kw = {"time_scale": args.time_scale, "timeout": args.timeout,
                   "barrier_every": args.barrier_every}
     if args.engine == "runtime" and args.task_fn is not None:
@@ -172,7 +172,7 @@ def cmd_sweep(args) -> int:
         raise SystemExit("run_experiment: sweep needs at least one --set")
     seeds = [int(s) for s in args.seeds.split(",")] if args.seeds else None
     run_kw = {}
-    if args.engine == "runtime":
+    if args.engine in ("runtime", "serve"):
         run_kw = {"time_scale": args.time_scale, "timeout": args.timeout}
 
     def progress(cell, rep):
@@ -207,7 +207,8 @@ def main(argv=None) -> int:
 
     r = sub.add_parser("run", help="execute a spec on one engine")
     r.add_argument("spec")
-    r.add_argument("--engine", default="sim", choices=["sim", "runtime"])
+    r.add_argument("--engine", default="sim",
+                   choices=["sim", "runtime", "serve"])
     r.add_argument("--time-scale", type=float, default=0.0,
                    help="runtime engine: wall s per workload s (0 = ASAP)")
     r.add_argument("--timeout", type=float, default=600.0)
@@ -238,7 +239,8 @@ def main(argv=None) -> int:
 
     s = sub.add_parser("sweep", help="cartesian grid over spec fields")
     s.add_argument("spec")
-    s.add_argument("--engine", default="sim", choices=["sim", "runtime"])
+    s.add_argument("--engine", default="sim",
+                   choices=["sim", "runtime", "serve"])
     s.add_argument("--set", action="append", metavar="PATH=V1,V2",
                    help="grid axis (repeatable)")
     s.add_argument("--seeds", default=None,
