@@ -172,7 +172,7 @@ def _storm_host_main(sock: socket.socket, codec: str,
 
 
 def measure_storm(wire_batch: int, n_tasks: int, seed: int = 0,
-                  codec: str = "auto", recorder=None) -> dict:
+                  codec: str = "auto", recorder=None, metrics=None) -> dict:
     """One storm run at 4 scripted hosts: real framed sockets, the real
     per-host receiver threads and the real batched pump, but completions
     are instant.  ``wire_batch=1`` is bit-for-bit the unbatched
@@ -190,7 +190,8 @@ def measure_storm(wire_batch: int, n_tasks: int, seed: int = 0,
     rng = random.Random(seed)
     rt = FleetRuntime(hosts=0, threads_per_host=STORM_TPH,
                       wire_batch=wire_batch, heartbeat_timeout_s=60.0,
-                      recorder=recorder)   # bench_obs overhead canary
+                      recorder=recorder,   # bench_obs overhead canary
+                      metrics=metrics)     # bench_telemetry overhead canary
     central_cpu: list[float] = []
     recv_threads: list[threading.Thread] = []
 

@@ -1,0 +1,265 @@
+"""Telemetry benchmark: metrics-plane overhead + identity + reconciliation.
+
+`repro.obs.metrics` promises (DESIGN.md §13) that the live telemetry plane
+is free when off -- every hot-path hook is one attribute read and a branch
+-- and cheap when on: one short critical section on the registry's own
+leaf lock, never held across the dispatcher lock, never doing I/O.  This
+bench is the measurement side, three canaries:
+
+  overhead    the bench_dispatch completion STORM (real framed sockets,
+              scripted hosts, instant completions -- the worst case for
+              per-task fixed costs) run metrics-OFF and metrics-ON with a
+              live `Telemetry` bundle AND a concurrent sampler snapshotting
+              the registry at the default interval; best-of-N **central-
+              loop CPU** metrics-on must stay within 10% of metrics-off;
+  identity    a metrics-ON runtime run must match a metrics-OFF run of the
+              same spec EXACTLY on scheduling-determined RunReport fields
+              (the §8 parity surface): telemetry observes scheduling, it
+              must never steer it;
+  reconcile   a real 4-host fleet run with metrics on: the merged per-host
+              cumulative bandwidth gauges (`bw.bytes_*`, accumulated
+              host-side from done-frame ledgers and shipped as stats
+              frames) must sum to within 5% of the run ledger's
+              `bytes_by_kind` totals.  The final settled stats frame makes
+              this exact in practice; 5% is the live-sampling allowance.
+
+CLI (writes the committed baseline consumed by tools/bench_gate.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_telemetry \
+        --out BENCH_telemetry.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+
+from repro.experiments import (CacheSpec, ClusterSpec, ExperimentSpec,
+                               ObserveSpec, WorkloadSpec, run_experiment)
+from repro.fleet import reports_scheduling_equal
+from repro.obs import Telemetry
+
+from . import bench_dispatch
+from .common import row
+
+#: fixed configuration tools/bench_gate.py replays against the baseline.
+GATE_NODES = bench_dispatch.GATE_NODES     # storm pool (4 hosts x 48)
+GATE_TASKS = 1200                          # storm tasks per overhead cell
+IDENTITY_TASKS = 120                       # metrics-on/off parity cell
+RECONCILE_TASKS = 60                       # 4-host bandwidth-reconcile cell
+RECONCILE_HOSTS = 4
+STORM_WIRE_BATCH = 64
+SAMPLE_INTERVAL_S = 0.05                   # storm sampler cadence
+
+
+# --------------------------------------------------------------------------
+# overhead: metrics-off vs metrics-on on the same storm
+# --------------------------------------------------------------------------
+
+def _sampled_storm(n_tasks: int) -> dict:
+    """One metrics-ON storm: the registry hooks fire on every submit/
+    dispatch/complete/pump, and a live sampler thread snapshots the
+    registry concurrently -- the full cost a monitored run pays."""
+    tel = Telemetry(interval_s=SAMPLE_INTERVAL_S)
+    stop = threading.Event()
+    t0 = time.monotonic()
+
+    def _sampler() -> None:
+        while not stop.wait(tel.interval_s):
+            tel.record_sample(time.monotonic() - t0)
+
+    thr = threading.Thread(target=_sampler, daemon=True,
+                           name="bench-telemetry-sampler")
+    thr.start()
+    try:
+        out = bench_dispatch.measure_storm(STORM_WIRE_BATCH, n_tasks,
+                                           metrics=tel)
+    finally:
+        stop.set()
+        thr.join(timeout=10.0)
+    out["n_samples"] = len(tel.series)
+    out["tasks_completed_counter"] = tel.registry.counter(
+        "sched.tasks_completed")
+    return out
+
+
+def measure_overhead(n_tasks: int = GATE_TASKS, repeats: int = 3) -> dict:
+    """Best-of-N central-loop CPU with and without the metrics plane on
+    identical scripted storms.  Wall clock on a 1-core box mostly measures
+    the scripted hosts; central CPU is what the guarded hooks could tax."""
+    best_off = best_on = None
+    for _ in range(repeats):
+        off = bench_dispatch.measure_storm(STORM_WIRE_BATCH, n_tasks)
+        on = _sampled_storm(n_tasks)
+        if best_off is None or off["central_cpu_s"] < best_off["central_cpu_s"]:
+            best_off = off
+        if best_on is None or on["central_cpu_s"] < best_on["central_cpu_s"]:
+            best_on = on
+    return {
+        "n_tasks": n_tasks,
+        "n_completed": best_on["n_completed"],
+        "wall_s": best_on["wall_s"],
+        "central_cpu_off_s": best_off["central_cpu_s"],
+        "central_cpu_on_s": best_on["central_cpu_s"],
+        "overhead_ratio": round(best_on["central_cpu_s"]
+                                / max(best_off["central_cpu_s"], 1e-9), 3),
+        "n_samples": best_on["n_samples"],
+        "counter_matches_completions": (best_on["tasks_completed_counter"]
+                                        == best_on["n_completed"]),
+    }
+
+
+# --------------------------------------------------------------------------
+# identity: metrics-on run == metrics-off run, scheduling-wise
+# --------------------------------------------------------------------------
+
+def _spec(n_tasks: int, *, hosts: int, tph: int, metrics: bool,
+          seed: int = 7) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="telemetry-bench",
+        cluster=ClusterSpec(testbed="anl_uc", n_nodes=4),
+        cache=CacheSpec(capacity_bytes=10**12),       # eviction-free
+        policy="max-compute-util",
+        workload=WorkloadSpec(
+            name="tel",
+            arrivals={"kind": "PoissonArrivals", "rate_per_s": 100.0},
+            popularity={"kind": "ZipfPopularity", "alpha": 1.1, "k": 2,
+                        "corr": 0.8},
+            n_tasks=n_tasks, n_objects=32, object_bytes=50_000, seed=seed),
+        observe=ObserveSpec(metrics=metrics, metrics_interval_s=0.05),
+        seed=3, hosts=hosts, threads_per_host=tph)
+
+
+def measure_off_identity(n_tasks: int = IDENTITY_TASKS) -> dict:
+    """Batch-synchronous replay of one spec, metrics on vs off: the
+    scheduling-determined report fields must be IDENTICAL -- telemetry
+    reads the run, it must never write to it."""
+    r_off = run_experiment(_spec(n_tasks, hosts=0, tph=1, metrics=False),
+                           engine="runtime", barrier_every=4, timeout=300.0)
+    r_on = run_experiment(_spec(n_tasks, hosts=0, tph=1, metrics=True),
+                          engine="runtime", barrier_every=4, timeout=300.0)
+    diff = reports_scheduling_equal(r_off, r_on)
+    return {
+        "n_tasks": n_tasks,
+        "n_completed": r_on.n_completed,
+        "identical": not diff and r_on.n_completed == n_tasks,
+        "diff_fields": sorted(diff),
+        "off_telemetry_empty": r_off.telemetry == {},
+        "on_n_samples": r_on.telemetry.get("n_samples", 0),
+    }
+
+
+# --------------------------------------------------------------------------
+# reconcile: 4-host merged bandwidth gauges vs the run ledger
+# --------------------------------------------------------------------------
+
+def measure_bw_reconcile(n_tasks: int = RECONCILE_TASKS) -> dict:
+    """A real 4-host fleet with metrics on: fold the final per-host stats
+    frames and compare the summed cumulative `bw.*` gauges against the run
+    ledger's `bytes_by_kind` -- the merge algebra's end-to-end check."""
+    rep = run_experiment(
+        _spec(n_tasks, hosts=RECONCILE_HOSTS, tph=1, metrics=True),
+        engine="runtime", barrier_every=4, timeout=300.0)
+    g = rep.telemetry.get("merged", {}).get("gauges", {})
+    bk = rep.bytes_by_kind
+    gauge_total = (g.get("bw.bytes_local", 0) + g.get("bw.bytes_c2c", 0)
+                   + g.get("bw.bytes_store", 0))
+    ledger_total = (bk.get("local", 0) + bk.get("c2c", 0)
+                    + bk.get("store_read", 0))
+    gap = abs(gauge_total - ledger_total) / max(ledger_total, 1)
+    return {
+        "n_tasks": n_tasks,
+        "hosts": RECONCILE_HOSTS,
+        "n_completed": rep.n_completed,
+        "n_hosts_reporting": len(rep.telemetry.get("hosts", {})),
+        "gauge_bytes": {"local": g.get("bw.bytes_local", 0),
+                        "c2c": g.get("bw.bytes_c2c", 0),
+                        "store": g.get("bw.bytes_store", 0)},
+        "ledger_bytes": {"local": bk.get("local", 0),
+                         "c2c": bk.get("c2c", 0),
+                         "store": bk.get("store_read", 0)},
+        "bw_gap": round(gap, 6),
+    }
+
+
+# --------------------------------------------------------------------------
+# gate / CSV entry points
+# --------------------------------------------------------------------------
+
+def gate_measure(repeats: int = 3) -> dict:
+    """The fixed shape bench_gate.py replays.  The gated wall is the
+    metrics-on storm (best-of-N); the canaries are the overhead ratio, the
+    metrics-off scheduling identity, and the bandwidth reconciliation."""
+    # the on/off CPU ratio divides two ~100 ms measurements on a shared
+    # box; the best-of-N floor needs more samples than the wall gate does
+    ov = measure_overhead(GATE_TASKS, repeats=max(repeats, 5))
+    ident = measure_off_identity(IDENTITY_TASKS)
+    rec = measure_bw_reconcile(RECONCILE_TASKS)
+    return {
+        "n_nodes": GATE_NODES, "n_tasks": GATE_TASKS,
+        "wall_s": ov["wall_s"],
+        "n_completed": ov["n_completed"],
+        "central_cpu_off_s": ov["central_cpu_off_s"],
+        "central_cpu_on_s": ov["central_cpu_on_s"],
+        "overhead_ratio": ov["overhead_ratio"],
+        "counter_matches_completions": ov["counter_matches_completions"],
+        "metrics_off_identical": ident["identical"],
+        "off_telemetry_empty": ident["off_telemetry_empty"],
+        "bw_gap": rec["bw_gap"],
+        "reconcile_hosts_reporting": rec["n_hosts_reporting"],
+    }
+
+
+def run(scale: float = 1.0) -> list[dict]:
+    """benchmarks.run contract: overhead + identity + reconcile rows."""
+    n_tasks = max(int(GATE_TASKS * scale), 100)
+    ov = measure_overhead(n_tasks, repeats=1)
+    rows = [
+        row("telemetry", "metrics_on_overhead_ratio", ov["overhead_ratio"],
+            "x", note=f"central-loop CPU, storm of {n_tasks}, on/off, "
+                      f"{ov['n_samples']} live samples"),
+    ]
+    ident = measure_off_identity(max(int(IDENTITY_TASKS * scale), 40))
+    rows.append(row("telemetry", "metrics_off_identical",
+                    1.0 if ident["identical"] else 0.0, "bool",
+                    note="metrics-on == metrics-off on scheduling-"
+                         "determined report fields"))
+    rec = measure_bw_reconcile(max(int(RECONCILE_TASKS * scale), 30))
+    rows.append(row("telemetry", "fleet_bw_gauge_ledger_gap",
+                    rec["bw_gap"], "ratio",
+                    note=f"{rec['hosts']}-host merged bw gauges vs ledger "
+                         f"({rec['n_hosts_reporting']} hosts reporting)"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=GATE_TASKS)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_telemetry.json")
+    args = ap.parse_args(argv)
+
+    ov = measure_overhead(args.tasks, repeats=args.repeats)
+    print(f"# overhead: on {ov['central_cpu_on_s'] * 1e3:.1f} ms vs off "
+          f"{ov['central_cpu_off_s'] * 1e3:.1f} ms central CPU "
+          f"({ov['overhead_ratio']:.3f}x), {ov['n_samples']} samples",
+          file=sys.stderr)
+    ident = measure_off_identity()
+    print(f"# identity: {ident['identical']} "
+          f"(diff fields {ident['diff_fields']})", file=sys.stderr)
+    rec = measure_bw_reconcile()
+    print(f"# reconcile: gap {rec['bw_gap']:.4f} over "
+          f"{rec['n_hosts_reporting']} hosts", file=sys.stderr)
+    out = {"overhead": ov, "off_identity": ident, "reconcile": rec,
+           "gate": gate_measure(repeats=args.repeats)}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

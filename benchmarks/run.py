@@ -28,7 +28,7 @@ def main(argv=None) -> int:
                          "BENCH_joins.json + BENCH_policies.json + "
                          "BENCH_fleet.json + BENCH_dispatch.json + "
                          "BENCH_obs.json + BENCH_dags.json + "
-                         "BENCH_serve.json baselines "
+                         "BENCH_serve.json + BENCH_telemetry.json baselines "
                          "(fails on >25%% "
                          "wall-clock regression or a correctness-canary "
                          "miss)")
@@ -37,7 +37,8 @@ def main(argv=None) -> int:
     from . import (bench_dags, bench_dispatch, bench_engine, bench_fleet,
                    bench_index, bench_joins, bench_microbench, bench_obs,
                    bench_policies, bench_roofline, bench_scheduler,
-                   bench_serve, bench_stacking, bench_workloads)
+                   bench_serve, bench_stacking, bench_telemetry,
+                   bench_workloads)
 
     modules = [
         ("index", bench_index, 1.0 if args.full else 0.5),
@@ -53,6 +54,7 @@ def main(argv=None) -> int:
         ("obs", bench_obs, 1.0 if args.full else 0.5),
         ("dags", bench_dags, 1.0 if args.full else 0.5),
         ("serve", bench_serve, 1.0 if args.full else 0.05),
+        ("telemetry", bench_telemetry, 1.0 if args.full else 0.5),
         ("roofline", bench_roofline, 1.0),
     ]
     rows = []

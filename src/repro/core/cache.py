@@ -38,6 +38,7 @@ class CacheStats:
     insertions: int = 0
     evictions: int = 0
     rejected: int = 0  # objects bigger than the whole cache
+    readmits: int = 0  # re-admissions of previously pressure-evicted oids
 
     @property
     def hit_ratio(self) -> float:
@@ -75,6 +76,10 @@ class ExecutorCache:
         # eviction samples instead of materializing the candidate list.
         self._resident: list[str] = []
         self._resident_pos: dict[str, int] = {}
+        # oids pressure-evicted at least once and not yet re-admitted: a
+        # later put() of one of these counts as a re-admit (cache thrash --
+        # the working set no longer fits).  Explicit drop()s don't qualify.
+        self._evicted_once: set[str] = set()
         self.used_bytes = 0
         self.stats = CacheStats()
 
@@ -146,6 +151,10 @@ class ExecutorCache:
             self._remove(victim)
             evicted.append(victim)
             self.stats.evictions += 1
+            self._evicted_once.add(victim)
+        if obj.oid in self._evicted_once:
+            self._evicted_once.discard(obj.oid)
+            self.stats.readmits += 1
         self._entries[obj.oid] = obj.size_bytes
         self._freq[obj.oid] = 1
         self._order[obj.oid] = self._tick

@@ -69,6 +69,9 @@ class DynamicResourceProvisioner:
         # decisions land in the same event stream as the pool transitions
         # they cause (one "provision" event per non-empty step)
         self.recorder = None
+        # optional repro.obs.metrics.MetricsRegistry (same install-and-
+        # None-guard contract; DESIGN.md §13)
+        self.metrics = None
 
     def step(
         self,
@@ -116,6 +119,15 @@ class DynamicResourceProvisioner:
             self.recorder.emit("provision", allocate=acts.allocate,
                                release=len(acts.release), queue=queue_len,
                                live=live_executors)
+        m = self.metrics
+        if m is not None:
+            m.gauge_set("drp.pool_live", live_executors)
+            if acts.allocate:
+                m.inc("drp.grows")
+                m.inc("drp.executors_allocated", acts.allocate)
+            if acts.release:
+                m.inc("drp.shrinks")
+                m.inc("drp.executors_released", len(acts.release))
         return acts
 
     def snapshot(self) -> dict:

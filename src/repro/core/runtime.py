@@ -291,6 +291,7 @@ class DiffusionRuntime:
         seed: int = 0,
         index_update_batch: int = 1,   # >1 demonstrates loose coherence
         recorder=None,                 # optional repro.obs.Recorder
+        metrics=None,                  # optional repro.obs.metrics.Telemetry
     ) -> None:
         self.store = store if store is not None else ObjectStore()
         self.dispatcher = Dispatcher(policy)
@@ -298,6 +299,13 @@ class DiffusionRuntime:
         # every hot-path hook below is a None-guard -- off-by-default free.
         self.recorder = recorder
         self.dispatcher.recorder = recorder
+        # live telemetry plane (repro.obs.metrics, DESIGN.md §13): the
+        # ``metrics`` kwarg carries the whole Telemetry bundle (registry +
+        # sampling interval + sink + health); hot paths only ever touch the
+        # registry, through the same None-guard contract as the recorder.
+        self.telemetry = metrics
+        self.metrics = metrics.registry if metrics is not None else None
+        self.dispatcher.metrics = self.metrics
         self.ledger = RuntimeLedger()
         self.stats = DispatchStats()
         self.workers: dict[str, ExecutorWorker] = {}
@@ -616,11 +624,56 @@ class DiffusionRuntime:
             st.dispatches += n_dispatches
             if n_dispatches > st.max_dispatch_batch:
                 st.max_dispatch_batch = n_dispatches
+        m = self.metrics
+        if m is not None:
+            m.inc("sched.pump_calls")
+            if n_dispatches:
+                m.inc("sched.dispatches", n_dispatches)
+            m.observe("sched.pump_latency_s", hold_s)
 
     def dispatch_stats(self) -> dict:
         """Central-loop counter snapshot for RunReport / the benchmark."""
         with self._lock:
             return self.stats.as_dict()
+
+    def sample_metrics(self) -> None:
+        """Refresh the registry's gauges from live runtime state (the
+        telemetry sampler calls this each tick; DESIGN.md §13).  Gauges are
+        absolute totals for THIS source, so re-sampling is idempotent and a
+        cluster merge sums per-source values.  On a fleet the workers are
+        remote proxies without local caches, so the cache/bandwidth gauges
+        here stay 0 and the per-host stats frames carry them instead."""
+        m = self.metrics
+        if m is None:
+            return
+        with self._lock:
+            qlen = self.dispatcher.queue_len
+            pool = len(self.workers)
+            caches = [w.cache for w in self.workers.values()
+                      if getattr(w, "cache", None) is not None]
+            used = sum(c.used_bytes for c in caches)
+            hits = sum(c.stats.hits for c in caches)
+            misses = sum(c.stats.misses for c in caches)
+            evictions = sum(c.stats.evictions for c in caches)
+            insertions = sum(c.stats.insertions for c in caches)
+            readmits = sum(c.stats.readmits for c in caches)
+        led = self.ledger
+        with led.lock:
+            b_local, b_c2c, b_store = (led.bytes_local, led.bytes_c2c,
+                                       led.bytes_store)
+        m.gauge_set("sched.queue_depth", qlen)
+        m.gauge_set("pool.size", pool)
+        m.gauge_set("cache.bytes", used)
+        m.gauge_set("cache.hits", hits)
+        m.gauge_set("cache.misses", misses)
+        m.gauge_set("cache.evictions", evictions)
+        m.gauge_set("cache.insertions", insertions)
+        m.gauge_set("cache.readmits", readmits)
+        m.gauge_set("bw.bytes_local", b_local)
+        m.gauge_set("bw.bytes_c2c", b_c2c)
+        m.gauge_set("bw.bytes_store", b_store)
+        if self.recorder is not None:
+            m.gauge_set("obs.recorder_dropped", self.recorder.dropped)
 
     def _execute(self, w: ExecutorWorker, disp: Dispatch) -> None:
         t = disp.task

@@ -201,6 +201,9 @@ class Dispatcher:
         # emission below is None-guarded so recording-off costs one attribute
         # load per lifecycle transition (never per queue scan).
         self.recorder = None
+        # optional repro.obs.metrics.MetricsRegistry, same contract: the
+        # owning engine installs it, hooks are None-guarded (DESIGN.md §13).
+        self.metrics = None
         # ---- incremental max-compute-util placement state -----------------
         # tid -> oid -> executors known (per the loosely-coherent index) to
         # cache it; resolved once at enqueue, patched by index-update hooks.
@@ -297,6 +300,8 @@ class Dispatcher:
                 continue
             t.ready_time = now
             self._enqueue(t)
+        if n and self.metrics is not None:
+            self.metrics.inc("sched.tasks_submitted", n)
         return n
 
     # ---------------- DAG ready-set (DESIGN.md §11) -------------------------
@@ -735,6 +740,8 @@ class Dispatcher:
                 self._speculated.discard(t.tid)
             self.completed.append(t)
             self._release_dependents(t.tid, now)
+            if self.metrics is not None:
+                self.metrics.inc("sched.tasks_completed")
         else:
             if orig_tid is not None:
                 self._twins[t.tid] = orig_tid  # still a live twin; retry below
@@ -745,6 +752,8 @@ class Dispatcher:
                 if rec is not None:
                     rec.emit("task_failed", tid=t.tid, eid=eid,
                              attempts=t.attempts)
+                if self.metrics is not None:
+                    self.metrics.inc("sched.tasks_failed")
                 self._fail_dependents(t.tid)
                 if orig_tid is not None:
                     self._twins.pop(t.tid, None)

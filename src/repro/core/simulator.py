@@ -83,6 +83,10 @@ class SimConfig:
     # optional repro.obs.Recorder (lifecycle events on the simulated clock);
     # None = recording off, zero hot-path cost
     recorder: Optional[object] = None
+    # optional repro.obs.metrics.Telemetry bundle; samples are taken on the
+    # simulated clock every ``metrics.interval_s`` virtual seconds (same
+    # free-when-off contract as the recorder; DESIGN.md §13)
+    metrics: Optional[object] = None
 
 
 @dataclass
@@ -153,6 +157,11 @@ class DiffusionSim:
             # traces line up phase-for-phase (not second-for-second)
             self.recorder.clock = lambda: self.loop.now
             self.dispatcher.recorder = self.recorder
+        self.telemetry = cfg.metrics
+        self.metrics = cfg.metrics.registry if cfg.metrics is not None else None
+        self.dispatcher.metrics = self.metrics
+        if cfg.provisioner is not None:
+            cfg.provisioner.metrics = self.metrics
         self.nodes: dict[str, SimNodeRes] = {}
         self.store_catalog: dict[str, DataObject] = {}
         self._rng = random.Random(cfg.seed)
@@ -179,6 +188,10 @@ class DiffusionSim:
             self.loop.after(cfg.provisioner_period_s, self._provision_tick)
         if cfg.speculation_factor > 0:
             self.loop.after(1.0, self._speculation_tick)
+        self._metrics_tick_live = False
+        if self.telemetry is not None:
+            self._metrics_tick_live = True
+            self.loop.after(self.telemetry.interval_s, self._metrics_tick)
 
     # ------------- membership -------------------------------------------------
     def _log_pool(self, now: float) -> None:
@@ -277,6 +290,9 @@ class DiffusionSim:
         if self.cfg.provisioner is not None and not self._prov_tick_live:
             self._prov_tick_live = True
             self.loop.after(self.cfg.provisioner_period_s, self._provision_tick)
+        if self.telemetry is not None and not self._metrics_tick_live:
+            self._metrics_tick_live = True
+            self.loop.after(self.telemetry.interval_s, self._metrics_tick)
         self._pump(self.loop.now)
 
     def submit_workload(self, wl) -> int:
@@ -316,6 +332,12 @@ class DiffusionSim:
         if self.recorder is not None:
             self.recorder.emit("pump", t=now, n=len(dispatches),
                                queue=self.dispatcher.queue_len)
+        if self.metrics is not None:
+            # no pump-latency histogram here: virtual time has no meaningful
+            # dispatcher CPU hold (the FifoServer models it explicitly)
+            self.metrics.inc("sched.pump_calls")
+            if dispatches:
+                self.metrics.inc("sched.dispatches", len(dispatches))
         for disp in dispatches:
             cost = self.cfg.testbed.dispatch_service_s
             if self.cfg.policy.ships_hints:
@@ -548,6 +570,42 @@ class DiffusionSim:
         self._add_node(now)
         self._log_pool(now)
         self._pump(now)
+
+    def sample_metrics(self) -> None:
+        """Refresh telemetry gauges from current sim state (virtual time)."""
+        m = self.metrics
+        if m is None:
+            return
+        live = [n for n in self.nodes.values() if n.alive]
+        m.gauge_set("sched.queue_depth", self.dispatcher.queue_len)
+        m.gauge_set("pool.size", len(live))
+        m.gauge_set("cache.bytes", sum(n.cache.used_bytes for n in live))
+        m.gauge_set("cache.hits", sum(n.cache.stats.hits for n in live))
+        m.gauge_set("cache.misses", sum(n.cache.stats.misses for n in live))
+        m.gauge_set("cache.evictions",
+                    sum(n.cache.stats.evictions for n in live))
+        m.gauge_set("cache.insertions",
+                    sum(n.cache.stats.insertions for n in live))
+        m.gauge_set("cache.readmits",
+                    sum(n.cache.stats.readmits for n in live))
+        b = self.net.bytes_by_kind
+        m.gauge_set("bw.bytes_local", int(b.get("local", 0)))
+        m.gauge_set("bw.bytes_c2c", int(b.get("c2c", 0)))
+        m.gauge_set("bw.bytes_store", int(b.get("store_read", 0)))
+        if self.recorder is not None:
+            m.gauge_set("obs.recorder_dropped", self.recorder.dropped)
+
+    def _metrics_tick(self, now: float) -> None:
+        tel = self.telemetry
+        assert tel is not None
+        self.sample_metrics()
+        tel.record_sample(now)
+        # park when the run drained (mirrors the provisioner tick); submit()
+        # resurrects it
+        if not (self.loop.empty and self.dispatcher.queue_len == 0):
+            self.loop.after(tel.interval_s, self._metrics_tick)
+        else:
+            self._metrics_tick_live = False
 
     def _speculation_tick(self, now: float) -> None:
         for t in self.dispatcher.speculation_candidates(now):

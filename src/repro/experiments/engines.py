@@ -138,6 +138,39 @@ def build_recorder(spec: ExperimentSpec) -> Optional[Recorder]:
     return Recorder(spec.observe.ring_capacity)
 
 
+def build_telemetry(spec: ExperimentSpec):
+    """The engine-side half of ``spec.observe.metrics_*`` (DESIGN.md §13):
+    None with telemetry off, otherwise a `Telemetry` bundle with a
+    `HealthMonitor` attached.  Engines hand ``bundle.registry`` to the hot
+    paths and call ``record_sample`` on their own clock."""
+    if not spec.observe.metrics:
+        return None
+    from repro.obs import HealthMonitor, Telemetry
+
+    return Telemetry(interval_s=spec.observe.metrics_interval_s,
+                     sink_path=spec.observe.metrics_sink_path,
+                     health=HealthMonitor())
+
+
+def _telemetry_summary(telemetry, recorder: Optional[Recorder]) -> dict:
+    """The RunReport.telemetry payload: the final central snapshot, the
+    final per-host snapshots and their cluster fold, the health-event log,
+    and the recorder drop count.  ``recorder_dropped`` is included whenever
+    a recorder ran -- even with the metrics plane off -- so a truncated
+    event ring is never silent (tools/run_experiment.py warns on it)."""
+    out: dict = {}
+    if recorder is not None:
+        out["recorder_dropped"] = recorder.dropped
+    if telemetry is not None:
+        last = telemetry.series[-1] if telemetry.series else {}
+        out["metrics"] = last.get("metrics", {})
+        out["hosts"] = last.get("hosts", {})
+        out["merged"] = telemetry.merged_last()
+        out["n_samples"] = len(telemetry.series)
+        out["health_events"] = list(telemetry.health_events)
+    return out
+
+
 def _finish_observe(spec: ExperimentSpec, recorder: Optional[Recorder]) -> None:
     """Post-run sink: dump the ring to ``observe.sink_path`` if bound."""
     if recorder is not None and spec.observe.sink_path is not None:
@@ -183,6 +216,8 @@ class SimEngine:
         self.workload: Optional[Workload] = None
         self.provisioner: Optional[DynamicResourceProvisioner] = None
         self.recorder: Optional[Recorder] = None
+        self.telemetry = None
+        self.tel_server = None
         self.last_outcomes: Optional[list[dict]] = None
         self.result = None
         self.metrics = None
@@ -209,6 +244,16 @@ class SimEngine:
         self.cfg.recorder = self.recorder
         if self.provisioner is not None:
             self.provisioner.recorder = self.recorder
+        # telemetry rides the same pre-construction path: the sim ctor
+        # installs the registry on its dispatcher/provisioner and schedules
+        # the virtual-time sampling tick
+        self.telemetry = build_telemetry(spec)
+        self.cfg.metrics = self.telemetry
+        if self.telemetry is not None and spec.observe.metrics_port >= 0:
+            from repro.obs import TelemetryServer
+
+            self.tel_server = TelemetryServer(self.telemetry,
+                                              port=spec.observe.metrics_port)
         self.sim = DiffusionSim(self.cfg)
         self.workload = workload if workload is not None \
             else build_workload(spec.workload)
@@ -229,14 +274,29 @@ class SimEngine:
         # already run-relative, no rebasing
         self.last_outcomes = [outcome_record(t) for t in r.dispatcher.completed]
         _finish_observe(self.spec, self.recorder)
+        telemetry = None
+        if self.telemetry is not None:
+            # one settled final sample at the virtual end time, so the
+            # report's snapshot reconciles exactly with the run's totals
+            self.sim.sample_metrics()
+            self.telemetry.record_sample(self.sim.loop.now)
+            telemetry = _telemetry_summary(self.telemetry, self.recorder)
+            self.telemetry.close()
+        elif self.recorder is not None:
+            telemetry = _telemetry_summary(None, self.recorder)
         prov = self.provisioner
         return build_report(
             self.spec, self.name, r, m, wall_s=wall,
             n_allocated=prov.n_allocated if prov else 0,
-            n_released=prov.n_released if prov else 0)
+            n_released=prov.n_released if prov else 0,
+            telemetry=telemetry)
 
     def shutdown(self) -> None:
-        """No-op (the event loop owns no threads); protocol symmetry."""
+        """Close the status endpoint if one was bound (the event loop owns
+        no threads of its own)."""
+        if self.tel_server is not None:
+            self.tel_server.close()
+            self.tel_server = None
 
 
 class _ProvisionerDriver(threading.Thread):
@@ -282,6 +342,38 @@ class _ProvisionerDriver(threading.Thread):
         self.stop_evt.set()
 
 
+class _TelemetrySampler(threading.Thread):
+    """Wall-clock telemetry tick for the threaded runtime (counterpart of
+    `DiffusionSim._metrics_tick`): every ``telemetry.interval_s`` it
+    refreshes the runtime's gauges, lets the engine add its own
+    (`_engine_gauges`), folds in the fleet's per-host cluster view when
+    there is one, and records one sample stamped in run-relative seconds."""
+
+    def __init__(self, eng: "RuntimeEngine", t0: float) -> None:
+        super().__init__(daemon=True, name="telemetry-sampler")
+        self.eng = eng
+        self.t0 = t0
+        self.stop_evt = threading.Event()
+
+    def sample_once(self) -> None:
+        eng = self.eng
+        eng.runtime.sample_metrics()
+        eng._engine_gauges()
+        per_host = None
+        manager = getattr(eng.runtime, "manager", None)
+        if manager is not None:
+            per_host = manager.cluster.per_host()
+        eng.telemetry.record_sample(time.monotonic() - self.t0,
+                                    per_host=per_host)
+
+    def run(self) -> None:
+        while not self.stop_evt.wait(self.eng.telemetry.interval_s):
+            self.sample_once()
+
+    def stop(self) -> None:
+        self.stop_evt.set()
+
+
 class RuntimeEngine:
     """Threaded-runtime adapter.  ``run()`` paces the workload in (see
     `DiffusionRuntime.submit_workload`), drains it, and reports in wall
@@ -306,6 +398,9 @@ class RuntimeEngine:
         self.task_fn_name = task_fn_name
         self._driver: Optional[_ProvisionerDriver] = None
         self.recorder: Optional[Recorder] = None
+        self.telemetry = None
+        self.tel_server = None
+        self._sampler: Optional[_TelemetrySampler] = None
         self.last_outcomes: Optional[list[dict]] = None
         self.result = None
         self.metrics = None
@@ -334,6 +429,12 @@ class RuntimeEngine:
                     "0.0 (no speculative twins in the threaded runtime)")
         self.spec = spec
         self.recorder = build_recorder(spec)
+        self.telemetry = build_telemetry(spec)
+        if self.telemetry is not None and spec.observe.metrics_port >= 0:
+            from repro.obs import TelemetryServer
+
+            self.tel_server = TelemetryServer(self.telemetry,
+                                              port=spec.observe.metrics_port)
         if spec.hosts > 0:
             from repro.fleet import FleetRuntime
 
@@ -349,7 +450,8 @@ class RuntimeEngine:
                 wire_batch=spec.wire_batch,
                 local_dispatch=spec.local_dispatch,
                 task_fn_name=self.task_fn_name,
-                recorder=self.recorder)
+                recorder=self.recorder,
+                metrics=self.telemetry)
         else:
             self.runtime = DiffusionRuntime(
                 n_executors=spec.cluster.n_nodes,
@@ -359,7 +461,8 @@ class RuntimeEngine:
                                       if spec.cache.enabled else 0),
                 seed=spec.seed,
                 index_update_batch=spec.index_update_batch,
-                recorder=self.recorder)
+                recorder=self.recorder,
+                metrics=self.telemetry)
         self.workload = workload if workload is not None \
             else build_workload(spec.workload)
         return self
@@ -408,6 +511,9 @@ class RuntimeEngine:
                                               ps.period_s * ts)
             self._driver.start()
         t0 = time.monotonic()
+        if self.telemetry is not None:
+            self._sampler = _TelemetrySampler(self, t0)
+            self._sampler.start()
         submitter = rt.submit_workload(
             self.workload, task_fn=task_fn,
             payload_factory=payload_factory, time_scale=time_scale,
@@ -418,6 +524,9 @@ class RuntimeEngine:
         if self._driver is not None:
             self._driver.stop()
             self._driver.join(5.0)
+        if self._sampler is not None:
+            self._sampler.stop()
+            self._sampler.join(5.0)
         if not drained:
             rt.shutdown()
             raise TimeoutError(
@@ -434,12 +543,29 @@ class RuntimeEngine:
         self.last_outcomes = [outcome_record(t, base=t0)
                               for t in rt.dispatcher.completed]
         _finish_observe(self.spec, self.recorder)
+        telemetry = None
+        if self.telemetry is not None:
+            # settled final sample: on a fleet, first barrier on a fresh
+            # post-drain stats frame from every live host so the per-host
+            # snapshots in the report reflect the finished run exactly
+            if hasattr(rt, "request_stats"):
+                rt.request_stats()
+            self._sampler.sample_once()
+            telemetry = _telemetry_summary(self.telemetry, self.recorder)
+            self.telemetry.close()
+        elif self.recorder is not None:
+            telemetry = _telemetry_summary(None, self.recorder)
         prov = self.provisioner
         return build_report(
             self.spec, self.name, r, m, wall_s=wall,
             n_allocated=prov.n_allocated if prov else 0,
             n_released=prov.n_released if prov else 0,
-            dispatch_stats=rt.dispatch_stats())
+            dispatch_stats=rt.dispatch_stats(),
+            telemetry=telemetry)
+
+    def _engine_gauges(self) -> None:
+        """Subclass hook: extra engine-specific gauges per telemetry tick
+        (the serve engine reports its KV-reuse byte split here)."""
 
     def _result_view(self, t_run0: float, t_end: float) -> SimResult:
         """The runtime's observables in `SimResult` shape, with every clock
@@ -474,6 +600,11 @@ class RuntimeEngine:
     def shutdown(self) -> None:
         if self._driver is not None:
             self._driver.stop()
+        if self._sampler is not None:
+            self._sampler.stop()
+        if self.tel_server is not None:
+            self.tel_server.close()
+            self.tel_server = None
         if self.runtime is not None:
             self.runtime.shutdown()
 

@@ -77,6 +77,11 @@ class RunReport:
     # -- sim<->real divergence (repro.obs.diff output; {} unless a diff
     # joined this run's measured outcomes against a sim-twin replay) --------
     task_divergence: dict = dataclasses.field(default_factory=dict)
+    # -- live-telemetry final snapshot (DESIGN.md §13; {} unless
+    # observe.metrics ran): the run's last registry snapshot, per-host
+    # snapshots + cluster fold, sample/health-event counts, and the
+    # recorder drop count (present whenever a recorder ran) -----------------
+    telemetry: dict = dataclasses.field(default_factory=dict)
     # -- DAG slowdown bases (defaulted: pre-PR-8 result files stay readable).
     # arrival = avg_slowdown's basis (submit -> end); ready measures from the
     # moment deps were met, so dep-wait does not read as scheduler queueing.
@@ -117,11 +122,14 @@ class RunReport:
         kw["dispatch_stats"] = dict(d["dispatch_stats"])
         if "task_divergence" in kw:
             kw["task_divergence"] = dict(d["task_divergence"])
+        if "telemetry" in kw:
+            kw["telemetry"] = dict(d["telemetry"])
         return cls(**kw)
 
     def diff(self, other: "RunReport",
              ignore: tuple[str, ...] = IDENTITY_FIELDS
-             + ("pool_log", "dispatch_stats", "task_divergence"),
+             + ("pool_log", "dispatch_stats", "task_divergence",
+                "telemetry"),
              ) -> dict[str, tuple]:
         """Field-by-field comparison: {field: (self value, other value)}
         for every differing field not in ``ignore``.  Empty dict == the two
@@ -140,7 +148,8 @@ class RunReport:
 def build_report(spec, engine: str, result, metrics, *, wall_s: float,
                  n_allocated: int = 0, n_released: int = 0,
                  dispatch_stats: Mapping | None = None,
-                 task_divergence: Mapping | None = None) -> RunReport:
+                 task_divergence: Mapping | None = None,
+                 telemetry: Mapping | None = None) -> RunReport:
     """Assemble a RunReport from a `SimResult`(-shaped) ``result`` and the
     `RunMetrics` computed from it.  Both engine adapters funnel through
     here, which is what pins the schemas together."""
@@ -184,4 +193,5 @@ def build_report(spec, engine: str, result, metrics, *, wall_s: float,
         pool_log=tuple(tuple(p) for p in result.pool_log),
         dispatch_stats=dict(dispatch_stats or {}),
         task_divergence=dict(task_divergence or {}),
+        telemetry=dict(telemetry or {}),
     )

@@ -213,6 +213,14 @@ class ObserveSpec:
     events: bool = False
     sink_path: Optional[str] = None
     ring_capacity: int = 65536
+    # live telemetry plane (DESIGN.md §13): periodic registry sampling,
+    # optional JSONL time-series sink, optional status endpoint port
+    # (0 = pick a free port when metrics are on; the engine exposes the
+    # bound address).  Same free-when-off stance as `events`.
+    metrics: bool = False
+    metrics_interval_s: float = 0.25
+    metrics_sink_path: Optional[str] = None
+    metrics_port: int = -1      # -1 = no endpoint; >= 0 = bind (0 = any)
 
     def __post_init__(self) -> None:
         if self.ring_capacity < 1:
@@ -221,6 +229,16 @@ class ObserveSpec:
             raise ValueError("observe.sink_path requires observe.events "
                              "(a sink with recording off would silently "
                              "write an empty trace)")
+        if self.metrics_interval_s <= 0:
+            raise ValueError("metrics_interval_s must be > 0")
+        if self.metrics_sink_path is not None and not self.metrics:
+            raise ValueError("observe.metrics_sink_path requires "
+                             "observe.metrics (a sink with telemetry off "
+                             "would silently write an empty series)")
+        if self.metrics_port >= 0 and not self.metrics:
+            raise ValueError("observe.metrics_port requires observe.metrics "
+                             "(an endpoint with telemetry off would serve "
+                             "nothing)")
 
 
 @dataclass(frozen=True)
@@ -549,15 +567,16 @@ def check_alias_map() -> None:
                             f"exists; remove it from DOCUMENTED_DIVERGENCES")
     sim_covered = {s for s, _ in ALIASES.values() if s is not None}
     # testbed/executor_slowdown/fail_at are sim-only experiment machinery;
-    # recorder is the obs layer's injection point on BOTH engines, built by
-    # the engine adapters from spec.observe (not a knob a spec aliases).
+    # recorder and metrics are the obs layer's injection points on BOTH
+    # engines, built by the engine adapters from spec.observe (not knobs a
+    # spec aliases).
     missing = set(sim) - sim_covered - {"testbed", "executor_slowdown",
-                                        "fail_at", "recorder"}
+                                        "fail_at", "recorder", "metrics"}
     if missing:
         problems.append(f"SimConfig fields not covered by ALIASES: "
                         f"{sorted(missing)}")
     rt_covered = {r for _, r in ALIASES.values() if r is not None}
-    missing_rt = set(rt) - rt_covered - {"store", "recorder"}
+    missing_rt = set(rt) - rt_covered - {"store", "recorder", "metrics"}
     if missing_rt:
         problems.append(f"DiffusionRuntime kwargs not covered by ALIASES: "
                         f"{sorted(missing_rt)}")

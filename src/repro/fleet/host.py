@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import socket
 import threading
+import time
 from typing import Any, Callable, Optional
 
 from repro.core.cache import EvictionPolicy
@@ -309,7 +310,8 @@ class FleetHost:
                  task_fn_name: Optional[str], hb_interval_s: float,
                  bind_host: str = "127.0.0.1", wire_batch: int = 64,
                  local_dispatch: bool = False,
-                 observe_capacity: int = 0) -> None:
+                 observe_capacity: int = 0,
+                 metrics_interval_s: float = 0.0) -> None:
         self.host_id = host_id
         self.codec = codec
         self.task_fn = resolve_task_fn(task_fn_name)
@@ -324,6 +326,22 @@ class FleetHost:
             self.recorder: Optional[Any] = Recorder(observe_capacity)
         else:
             self.recorder = None
+        # host-side telemetry (DESIGN.md §13): an own registry, sampled on
+        # the heartbeat cadence and shipped upstream as {"t": "stats"}
+        # frames (0 = telemetry off, free -- no registry, no frames)
+        self.metrics_interval_s = metrics_interval_s
+        if metrics_interval_s > 0:
+            from repro.obs.metrics import MetricsRegistry
+
+            self.metrics: Optional[Any] = MetricsRegistry()
+        else:
+            self.metrics = None
+        self._last_stats = 0.0
+        self._led_lock = threading.Lock()
+        # cumulative attempt-ledger totals (absolute per-host gauges:
+        # the cluster-wide value is the sum over hosts)
+        self._led_totals = {"bytes_local": 0, "bytes_c2c": 0,
+                            "bytes_store": 0, "tasks_done": 0}
         self.store: dict[str, tuple[DataObject, Any]] = {}
         self.executors: dict[str, HostExecutor] = {}
         self.peers = PeerClient(codec)
@@ -363,6 +381,13 @@ class FleetHost:
 
     def send_done(self, eid: str, tid: str, ok: bool, led: dict,
                   err: Optional[str]) -> None:
+        if self.metrics is not None:
+            with self._led_lock:
+                tot = self._led_totals
+                tot["bytes_local"] += led["bytes_local"]
+                tot["bytes_c2c"] += led["bytes_cache_to_cache"]
+                tot["bytes_store"] += led["bytes_store"]
+                tot["tasks_done"] += 1
         try:
             # drained events ride (buffered) immediately before the flushed
             # done: the attempt's input/exec events arrive in the frame that
@@ -385,6 +410,40 @@ class FleetHost:
             self.out.send({"t": "events", "host": self.host_id,
                            "events": events})
 
+    def _sample_and_send(self, flush: bool = False) -> None:
+        """Refresh this host's gauges and ship one ``stats`` frame through
+        the shared outbox.  Cache counters are read without the executor
+        locks -- racy int reads are fine for telemetry (the final, settled
+        sample is exact because the executors are quiescent by then)."""
+        m = self.metrics
+        if m is None:
+            return
+        caches = [ex.cache for ex in list(self.executors.values())]
+        m.gauge_set("cache.bytes", sum(c.used_bytes for c in caches))
+        m.gauge_set("cache.hits", sum(c.stats.hits for c in caches))
+        m.gauge_set("cache.misses", sum(c.stats.misses for c in caches))
+        m.gauge_set("cache.evictions", sum(c.stats.evictions for c in caches))
+        m.gauge_set("cache.insertions",
+                    sum(c.stats.insertions for c in caches))
+        m.gauge_set("cache.readmits", sum(c.stats.readmits for c in caches))
+        with self._led_lock:
+            tot = dict(self._led_totals)
+        m.gauge_set("bw.bytes_local", tot["bytes_local"])
+        m.gauge_set("bw.bytes_c2c", tot["bytes_c2c"])
+        m.gauge_set("bw.bytes_store", tot["bytes_store"])
+        m.gauge_set("host.tasks_done", tot["tasks_done"])
+        m.gauge_set("host.executors", len(caches))
+        if self.recorder is not None:
+            m.gauge_set("obs.recorder_dropped", self.recorder.dropped)
+        self._last_stats = time.monotonic()
+        try:
+            # same outbox as updates/done: a stats frame sent after a done
+            # reflects at least that attempt's ledger (ordering contract)
+            self.out.send({"t": "stats", "host": self.host_id,
+                           "metrics": m.snapshot()}, flush=flush)
+        except ChannelClosed:
+            self._stop.set()
+
     def _heartbeat(self) -> None:
         while not self._stop.wait(self.hb_interval_s):
             try:
@@ -392,6 +451,10 @@ class FleetHost:
                 # heartbeat interval even on a host with no completions
                 # (and bounds recorded-event staleness the same way)
                 self._forward_events()
+                if (self.metrics is not None
+                        and time.monotonic() - self._last_stats
+                        >= self.metrics_interval_s):
+                    self._sample_and_send()   # buffered; hb flush carries it
                 self.out.send({"t": "hb", "host_id": self.host_id},
                               flush=True)
             except ChannelClosed:
@@ -485,6 +548,7 @@ class FleetHost:
             self.peer_server.stop()
             self.peers.close()
             try:
+                self._sample_and_send()  # settled final stats frame
                 self._forward_events()   # last events ride the final flush
                 self.out.close()   # flush buffered updates, then close up
             except ChannelClosed:
@@ -521,6 +585,10 @@ class FleetHost:
                 self.routes.pop(eid, None)
         elif kind == "peers":
             self.routes.update(msg["routes"])
+        elif kind == "stats_req":
+            # the central's stats barrier (request_stats): answer with an
+            # immediate, flushed sample
+            self._sample_and_send(flush=True)
         elif kind == "put":
             obj = DataObject(msg["oid"], int(msg["size"]))
             self.store[obj.oid] = (obj, msg["payload"])
@@ -542,9 +610,11 @@ def host_main(central_host: str, central_port: int, host_id: str,
               codec: str = "auto", task_fn_name: Optional[str] = None,
               hb_interval_s: float = 0.25, bind_host: str = "127.0.0.1",
               wire_batch: int = 64, local_dispatch: bool = False,
-              observe_capacity: int = 0) -> None:
+              observe_capacity: int = 0,
+              metrics_interval_s: float = 0.0) -> None:
     """Entry point for the spawned host process (see manager.py)."""
     FleetHost((central_host, central_port), host_id, codec,
               task_fn_name, hb_interval_s, bind_host=bind_host,
               wire_batch=wire_batch, local_dispatch=local_dispatch,
-              observe_capacity=observe_capacity).run()
+              observe_capacity=observe_capacity,
+              metrics_interval_s=metrics_interval_s).run()

@@ -29,6 +29,8 @@ import threading
 import time
 from typing import Any, Optional
 
+from repro.obs.metrics import ClusterView
+
 from .host import host_main
 from .wire import SocketChannel, _resolve_codec, recv_msg
 
@@ -85,7 +87,8 @@ class HostManager:
                  bind_host: str = "127.0.0.1",
                  wire_batch: int = 64,
                  local_dispatch: bool = False,
-                 observe_capacity: int = 0) -> None:
+                 observe_capacity: int = 0,
+                 metrics_interval_s: float = 0.0) -> None:
         self.rt = rt
         self.codec = _resolve_codec(codec)
         self.task_fn_name = task_fn_name
@@ -98,6 +101,11 @@ class HostManager:
         # >0: spawned hosts record lifecycle events into a ring of this
         # capacity and forward them upstream (0 = recording off, free)
         self.observe_capacity = observe_capacity
+        # >0: spawned hosts sample their own MetricsRegistry every this
+        # many seconds and ship {"t": "stats"} frames; the cluster view
+        # holds the latest snapshot per host (0 = telemetry off, free)
+        self.metrics_interval_s = metrics_interval_s
+        self.cluster = ClusterView()
         self._ctx = multiprocessing.get_context("spawn")
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -130,7 +138,7 @@ class HostManager:
             args=(self.addr[0], self.addr[1], host_id, self.codec,
                   self.task_fn_name, self.hb_interval_s, self.bind_host,
                   self.wire_batch, self.local_dispatch,
-                  self.observe_capacity),
+                  self.observe_capacity, self.metrics_interval_s),
             daemon=True, name=f"fleet-{host_id}")
         proc.start()
         if not slot["event"].wait(self.spawn_timeout_s):
@@ -249,6 +257,7 @@ class HostManager:
                 handle.proc.join(1.0)
         with self._lock:
             self.handles.pop(handle.host_id, None)
+        self.cluster.drop(handle.host_id)
 
     def shutdown(self) -> None:
         self._stop.set()

@@ -112,6 +112,7 @@ class FleetRuntime(DiffusionRuntime):
         lease_depth: int = 2,
         bind_host: str = "127.0.0.1",
         recorder=None,
+        metrics=None,  # optional repro.obs.metrics.Telemetry
     ) -> None:
         if hosts < 0:
             # hosts=0 builds an empty fleet (unit tests drive the receive
@@ -132,7 +133,7 @@ class FleetRuntime(DiffusionRuntime):
                          cache_capacity_bytes=cache_capacity_bytes,
                          store=store, seed=seed,
                          index_update_batch=index_update_batch,
-                         recorder=recorder)
+                         recorder=recorder, metrics=metrics)
         #: host_id -> {tid: Task} parked on a lease, awaiting claim/reclaim
         self._leases: dict[str, dict[str, Any]] = {}
         #: applied index updates pending forward to host replicas
@@ -147,7 +148,11 @@ class FleetRuntime(DiffusionRuntime):
             # hosts mirror the central ring's capacity; 0 keeps host-side
             # recording compiled out entirely (no Recorder import there)
             observe_capacity=(recorder.capacity
-                              if recorder is not None else 0))
+                              if recorder is not None else 0),
+            # hosts sample on the telemetry cadence; 0 keeps host-side
+            # registries (and stats frames) compiled out entirely
+            metrics_interval_s=(metrics.interval_s
+                                if metrics is not None else 0.0))
         try:
             for _ in range(hosts):
                 self.add_host()
@@ -359,6 +364,8 @@ class FleetRuntime(DiffusionRuntime):
                     break
                 pool[t.tid] = t
                 self.stats.leases += 1
+                if self.metrics is not None:
+                    self.metrics.inc("wire.leases")
                 granted.append({
                     "tid": t.tid,
                     "inputs": [[oid, sizes.get(oid, 0)] for oid in t.inputs],
@@ -396,6 +403,11 @@ class FleetRuntime(DiffusionRuntime):
                     need_pump = True
                 elif kind == "claim":
                     self._remote_claim_locked(handle, msg)
+                elif kind == "stats":
+                    # latest-wins per-host snapshot; the ClusterView has
+                    # its own leaf lock and never calls out, so updating
+                    # it under the runtime lock cannot deadlock
+                    self.manager.cluster.update(msg["host"], msg)
                 elif kind == "events" and self.recorder is not None:
                     # host-recorded lifecycle events ingest in wire order
                     # (the host enqueued them just before the done they
@@ -459,14 +471,53 @@ class FleetRuntime(DiffusionRuntime):
         if (handle.dead or not isinstance(w, _RemoteExecutor)
                 or w.host is not handle):
             self.stats.claim_conflicts += 1
+            if self.metrics is not None:
+                self.metrics.inc("wire.claim_conflicts")
             return
         pool = self._leases.get(handle.host_id)
         t = pool.pop(msg["tid"], None) if pool else None
         if t is None:
             self.stats.claim_conflicts += 1
+            if self.metrics is not None:
+                self.metrics.inc("wire.claim_conflicts")
             return
         self.dispatcher.bind_claim(t, msg["eid"], time.monotonic())
         self.stats.claims += 1
+        if self.metrics is not None:
+            self.metrics.inc("wire.claims")
+
+    def sample_metrics(self) -> None:
+        """On a fleet the per-host stats frames own the bandwidth totals
+        (each host accumulates its own done-frame ledgers), so the
+        inherited ledger-derived ``bw.*`` gauges are cleared after the base
+        refresh -- folding central + hosts must not count bytes twice."""
+        super().sample_metrics()
+        m = self.metrics
+        if m is None:
+            return
+        m.gauge_set("bw.bytes_local", 0)
+        m.gauge_set("bw.bytes_c2c", 0)
+        m.gauge_set("bw.bytes_store", 0)
+
+    def request_stats(self, timeout: float = 2.0) -> dict:
+        """Stats barrier: broadcast ``stats_req`` and wait until every live
+        host's snapshot sequence advances past its pre-request reading --
+        every returned snapshot is then a post-request sample.  Hosts that
+        die mid-barrier stop being waited on.  Returns the cluster's
+        per-host view (`ClusterView.per_host`)."""
+        cv = self.manager.cluster
+        before = cv.seqs()
+        waiting = {h.host_id for h in self.manager.live_handles()}
+        self.manager.broadcast({"t": "stats_req"})
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            seqs = cv.seqs()
+            live = {h.host_id for h in self.manager.live_handles()}
+            if all(seqs.get(h, 0) > before.get(h, 0)
+                   for h in waiting & live):
+                break
+            time.sleep(0.005)
+        return cv.per_host()
 
     def dispatch_stats(self) -> dict:
         """Central counters plus the wire counters of live connections

@@ -8,6 +8,14 @@ a measured run and its simulator replay (`diff.diff_outcomes`).
 
 Recording is off by default and free when off: every hot-path hook is a
 ``if recorder is not None`` guard.  See DESIGN.md section 10.
+
+The live telemetry plane (DESIGN.md section 13) rides alongside: a
+lock-cheap `MetricsRegistry` (counters / gauges / fixed-bucket histograms
+with mergeable snapshots), the per-run `Telemetry` bundle with its JSONL
+time series, the `ClusterView` merged from fleet ``{"t": "stats"}`` frames,
+a `HealthMonitor` evaluating window rules over the stream, and the
+`TelemetryServer` endpoint that tools/monitor.py attaches to.  Same
+free-when-off contract: ``metrics is None`` unless the spec asks.
 """
 from .events import (
     EVENT_SCHEMA_VERSION,
@@ -22,20 +30,34 @@ from .recorder import Recorder, load_events
 from .export import chrome_trace
 from .diff import (diff_outcomes, format_divergence, sim_replay_outcomes,
                    sim_twin_spec)
+from .metrics import (METRICS_SCHEMA_VERSION, ClusterView, MetricsRegistry,
+                      Telemetry, TelemetryServer, fetch_telemetry,
+                      merge_snapshots, quantile, read_metrics)
+from .health import HealthMonitor
 
 __all__ = [
     "EVENT_SCHEMA_VERSION",
     "EVENT_KINDS",
     "LIFECYCLE_KINDS",
+    "METRICS_SCHEMA_VERSION",
     "OUTCOME_FIELDS",
+    "ClusterView",
+    "HealthMonitor",
+    "MetricsRegistry",
     "Recorder",
+    "Telemetry",
+    "TelemetryServer",
     "chrome_trace",
     "diff_outcomes",
     "exec_index",
+    "fetch_telemetry",
     "format_divergence",
     "lifecycle_fingerprints",
     "load_events",
+    "merge_snapshots",
     "outcome_record",
+    "quantile",
+    "read_metrics",
     "sim_replay_outcomes",
     "sim_twin_spec",
 ]

@@ -7,6 +7,14 @@ unplaced: ready/queued -> task_dispatched), plus counter tracks (``ph:"C"``)
 for executor pool size, dispatcher queue depth, and cumulative
 cache-admitted bytes.  Timestamps are rebased so the trace starts at ts=0
 regardless of the emitters' clock bases.
+
+When telemetry ``samples`` (the `repro.obs.metrics.Telemetry` series, or
+rows loaded by ``read_metrics``) are passed alongside, the export adds
+sampled counter tracks from the live plane: ``sampled_queue_depth``,
+``sampled_pool_size``, and cache bytes per host (``sampled_cache_bytes:h0``
+on fleets, a single ``sampled_cache_bytes`` track otherwise).  Samples and
+events share one rebased timebase, so the sampled curves overlay the
+per-task spans.
 """
 from __future__ import annotations
 
@@ -30,11 +38,15 @@ _PID = 0
 _COUNTER_TID = 0  # counter tracks render per-process; tid is cosmetic
 
 
-def chrome_trace(events, path=None):
-    """Build a Chrome-trace dict from an event stream; optionally write it
-    to ``path``.  Returns the trace dict (``{"traceEvents": [...]}``)."""
+def chrome_trace(events, path=None, samples=None):
+    """Build a Chrome-trace dict from an event stream (plus optional
+    telemetry ``samples``); optionally write it to ``path``.  Returns the
+    trace dict (``{"traceEvents": [...]}``)."""
     events = sorted(events, key=lambda e: e.get("t", 0.0))
-    t0 = events[0]["t"] if events else 0.0
+    samples = sorted(samples or [], key=lambda s: s.get("t", 0.0))
+    starts = ([events[0]["t"]] if events else []) \
+        + ([samples[0]["t"]] if samples else [])
+    t0 = min(starts) if starts else 0.0
 
     def us(t):
         return round((t - t0) * 1e6, 3)
@@ -110,6 +122,27 @@ def chrome_trace(events, path=None):
             trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
                           "name": "cache_bytes", "ts": us(e["t"]),
                           "args": {"bytes": cache_bytes}})
+
+    for s in samples:
+        ts = us(s.get("t", 0.0))
+        g = s.get("metrics", {}).get("gauges", {})
+        trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                      "name": "sampled_queue_depth", "ts": ts,
+                      "args": {"tasks": g.get("sched.queue_depth", 0)}})
+        trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                      "name": "sampled_pool_size", "ts": ts,
+                      "args": {"executors": g.get("pool.size", 0)}})
+        hosts = s.get("hosts", {})
+        if hosts:
+            for h in sorted(hosts):
+                hg = hosts[h].get("metrics", {}).get("gauges", {})
+                trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                              "name": f"sampled_cache_bytes:{h}", "ts": ts,
+                              "args": {"bytes": hg.get("cache.bytes", 0)}})
+        else:
+            trace.append({"ph": "C", "pid": _PID, "tid": _COUNTER_TID,
+                          "name": "sampled_cache_bytes", "ts": ts,
+                          "args": {"bytes": g.get("cache.bytes", 0)}})
 
     out = {"traceEvents": trace, "displayTimeUnit": "ms"}
     if path is not None:

@@ -38,3 +38,18 @@ class ServeDiffusionEngine(RuntimeEngine):
         check_serve_spec(spec)
         super().prepare(spec, workload)
         return self
+
+    def _engine_gauges(self) -> None:
+        """Telemetry hook (DESIGN.md §13): the KV-reuse byte split.  Reused
+        KV = prefix pages served from cache (local or peer); prefill =
+        bytes recomputed from the store.  Same ledger the report's
+        kvmetrics read, sampled live."""
+        m = self.runtime.metrics
+        if m is None:
+            return
+        led = self.runtime.ledger
+        with led.lock:
+            reused = led.bytes_local + led.bytes_c2c
+            prefill = led.bytes_store
+        m.gauge_set("serve.kv_reused_bytes", reused)
+        m.gauge_set("serve.kv_prefill_bytes", prefill)

@@ -337,6 +337,40 @@ GOLDEN_TRACE = [
 ]
 
 
+GOLDEN_SAMPLES = [
+    {"kind": "metrics", "t": 10.4,
+     "metrics": {"counters": {}, "histograms": {},
+                 "gauges": {"sched.queue_depth": 3, "pool.size": 2,
+                            "cache.bytes": 50}}},
+    {"kind": "metrics", "t": 11.4,
+     "metrics": {"counters": {}, "histograms": {},
+                 "gauges": {"sched.queue_depth": 0, "pool.size": 2}},
+     "hosts": {"h1": {"metrics": {"gauges": {"cache.bytes": 90}}},
+               "h0": {"metrics": {"gauges": {"cache.bytes": 110}}}}},
+]
+
+# sampled counter tracks (DESIGN.md §13): single-process samples carry one
+# sampled_cache_bytes track; per-host samples fan out per host id.  The
+# first event (t=10.0) predates the first sample (t=10.4), so events set
+# the shared timebase and sample timestamps land at +0.4 s / +1.4 s.
+GOLDEN_SAMPLED_TRACKS = [
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_queue_depth",
+     "ts": 400000.0, "args": {"tasks": 3}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_pool_size",
+     "ts": 400000.0, "args": {"executors": 2}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_cache_bytes",
+     "ts": 400000.0, "args": {"bytes": 50}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_queue_depth",
+     "ts": 1400000.0, "args": {"tasks": 0}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_pool_size",
+     "ts": 1400000.0, "args": {"executors": 2}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_cache_bytes:h0",
+     "ts": 1400000.0, "args": {"bytes": 110}},
+    {"ph": "C", "pid": 0, "tid": 0, "name": "sampled_cache_bytes:h1",
+     "ts": 1400000.0, "args": {"bytes": 90}},
+]
+
+
 def test_chrome_trace_golden(tmp_path):
     """Pinned end-to-end export: thread-name metadata per executor, X spans
     pairing exec_start/exec_end, counter tracks, microsecond timestamps
@@ -346,6 +380,29 @@ def test_chrome_trace_golden(tmp_path):
     assert out["displayTimeUnit"] == "ms"
     assert out["traceEvents"] == GOLDEN_TRACE
     assert json.loads(path.read_text()) == out   # file round-trips
+
+
+def test_chrome_trace_golden_with_samples():
+    """Pinned sampled-track export: passing telemetry samples adds the
+    sampled_* counter tracks on the SAME rebased timebase as the events,
+    without disturbing the event-derived tracks."""
+    out = chrome_trace(GOLDEN_EVENTS, samples=GOLDEN_SAMPLES)
+    sampled = [e for e in out["traceEvents"]
+               if e["name"].startswith("sampled_")]
+    assert sampled == GOLDEN_SAMPLED_TRACKS
+    rest = [e for e in out["traceEvents"]
+            if not e["name"].startswith("sampled_")]
+    assert rest == GOLDEN_TRACE   # event tracks byte-identical
+
+
+def test_chrome_trace_sample_only_timebase():
+    """A sample stream with no events still produces a valid trace, rebased
+    to the first sample."""
+    out = chrome_trace([], samples=GOLDEN_SAMPLES)
+    # [0]/[1] are the dep_wait/queue_wait thread-name metadata rows
+    assert out["traceEvents"][4] == {
+        "ph": "C", "pid": 0, "tid": 0, "name": "sampled_cache_bytes",
+        "ts": 0.0, "args": {"bytes": 50}}
 
 
 def test_chrome_trace_from_real_run_is_valid(tmp_path):

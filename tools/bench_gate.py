@@ -53,7 +53,14 @@ on more than ``--threshold`` regression (default 25%):
              over the 200-session chat workload, the provisioner both
              grows and shrinks under diurnal sessions, and an events-off
              serve run is bit-identical to events-on on the
-             scheduling-determined report fields under barrier replay).
+             scheduling-determined report fields under barrier replay);
+  telemetry  benchmarks/bench_telemetry.py vs BENCH_telemetry.json --
+             guards the live metrics plane (repro.obs.metrics), with
+             canaries (metrics-on central-loop CPU <= 10% over
+             metrics-off on the completion storm with a live sampler
+             attached, a metrics-off run scheduling-identical to
+             metrics-on, and 4-host merged per-host bandwidth gauges
+             within 5% of the run ledger's bytes_by_kind totals).
 
     PYTHONPATH=src python tools/bench_gate.py                # repo root
     PYTHONPATH=src python -m benchmarks.run --gate           # via the runner
@@ -72,6 +79,8 @@ Regenerate a baseline (intentional engine change / new hardware) with:
     PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
     PYTHONPATH=src python -m benchmarks.bench_dags --out BENCH_dags.json
     PYTHONPATH=src python -m benchmarks.bench_serve --out BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.bench_telemetry \
+        --out BENCH_telemetry.json
 """
 from __future__ import annotations
 
@@ -149,13 +158,15 @@ def main(argv=None) -> int:
                     default=str(REPO_ROOT / "BENCH_dags.json"))
     ap.add_argument("--serve-baseline",
                     default=str(REPO_ROOT / "BENCH_serve.json"))
+    ap.add_argument("--telemetry-baseline",
+                    default=str(REPO_ROOT / "BENCH_telemetry.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional wall-clock regression")
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per measurement; best-of-N is compared")
     ap.add_argument("--only", choices=["engine", "workloads", "joins",
                                        "policies", "fleet", "dispatch",
-                                       "obs", "dags", "serve"],
+                                       "obs", "dags", "serve", "telemetry"],
                     default=None,
                     help="run a single gate instead of all")
     ap.add_argument("--update", action="store_true",
@@ -167,7 +178,8 @@ def main(argv=None) -> int:
     sys.path.insert(0, str(REPO_ROOT / "src"))
     from benchmarks import (bench_dags, bench_dispatch, bench_engine,
                             bench_fleet, bench_joins, bench_obs,
-                            bench_policies, bench_serve, bench_workloads)
+                            bench_policies, bench_serve, bench_telemetry,
+                            bench_workloads)
 
     rc = 0
     if args.only in (None, "engine"):
@@ -316,6 +328,25 @@ def main(argv=None) -> int:
                  lambda b, c: c["drp_released"] > 0),
                 ("events-off report bit-identical to events-on",
                  lambda b, c: bool(c["events_identical"])),
+            ]))
+    if args.only in (None, "telemetry"):
+        rc = max(rc, _check_gate(
+            "telemetry", Path(args.telemetry_baseline),
+            lambda: bench_telemetry.gate_measure(repeats=args.repeats),
+            (bench_telemetry.GATE_NODES, bench_telemetry.GATE_TASKS),
+            args.threshold, args.update,
+            canaries=[
+                ("completed count matches baseline",
+                 lambda b, c: c["n_completed"] == b["n_completed"]),
+                ("metrics-on central CPU <= 10% over metrics-off",
+                 lambda b, c: c["overhead_ratio"] <= 1.10),
+                ("completion counter matches completions",
+                 lambda b, c: bool(c["counter_matches_completions"])),
+                ("metrics-off run scheduling-identical to metrics-on",
+                 lambda b, c: bool(c["metrics_off_identical"])),
+                ("per-host bandwidth gauges reconcile with ledger "
+                 "within 5%",
+                 lambda b, c: c["bw_gap"] <= 0.05),
             ]))
     return rc
 

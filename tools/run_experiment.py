@@ -49,6 +49,16 @@ def _load_spec(path: str) -> ExperimentSpec:
         raise SystemExit(f"run_experiment: bad spec {path!r}: {e}")
 
 
+def _warn_drops(rep: RunReport) -> None:
+    """Surface recorder ring overflow: a lossy trace silently weakens every
+    downstream consumer (diff replay, chrome export), so say so loudly."""
+    dropped = rep.telemetry.get("recorder_dropped", 0)
+    if dropped:
+        print(f"# WARNING: recorder dropped {dropped} event(s) (ring full) "
+              f"-- trace/divergence output is incomplete; raise "
+              f"observe.ring_capacity", file=sys.stderr)
+
+
 def _report_out(rep: RunReport, out: str | None, *, quiet_pool: bool = True):
     d = rep.as_dict()
     if out:
@@ -106,6 +116,7 @@ def cmd_run(args) -> int:
                   f"({len(eng.last_outcomes)} outcomes)", file=sys.stderr)
     finally:
         eng.shutdown()
+    _warn_drops(rep)
     _report_out(rep, args.out)
     return 0
 
@@ -133,6 +144,7 @@ def cmd_diff(args) -> int:
         # attach the divergence to an existing report file in place
         # (RunReport.task_divergence is the programmatic surface)
         rep = RunReport.from_dict(json.loads(Path(args.report).read_text()))
+        _warn_drops(rep)  # a lossy recording skews the divergence join too
         rep = dataclasses.replace(rep, task_divergence=div)
         Path(args.report).write_text(
             json.dumps(rep.as_dict(), indent=2, sort_keys=True) + "\n")
